@@ -1,0 +1,104 @@
+"""Roofline report: reads experiments/dryrun/*.json (produced by
+launch/dryrun.py) and prints the per-(arch x shape x mesh) three-term table:
+
+  compute    = FLOPs/dev / 197 TFLOP/s          (bf16 peak, TPU v5e)
+  memory     = bytes/dev / 819 GB/s             (HBM)
+  collective = ICI bytes / 50 GB/s + DCN bytes / 25 GB/s
+
+plus the dominant bottleneck, the useful-FLOPs ratio (6·N_active·D / total
+HLO FLOPs — catches remat/replication waste), and the roofline fraction
+(useful model-time / step lower bound).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+from repro.launch.mesh import HBM_BW, PEAK_FLOPS_BF16
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+
+def _augment(r):
+    """Attach the analytic HBM memory term (XLA 'bytes accessed' is a
+    pre-fusion UPPER BOUND — 10-100x the touched bytes on the CPU backend;
+    see launch/analytic.py::hbm_bytes_dev). Recomputes the bottleneck and
+    step lower bound with the analytic term; raw XLA stays as *_xla."""
+    from repro.configs.base import SHAPES
+    from repro.configs.registry import get_config
+    from repro.launch.analytic import CellModel
+    from repro.launch.dryrun import apply_overrides, cell_defaults
+
+    shape = SHAPES[r["shape"]]
+    cfg = apply_overrides(cell_defaults(get_config(r["arch"]), shape),
+                          r.get("overrides"))
+    mesh_shape = ({"pod": 2, "data": 16, "model": 16}
+                  if r["mesh"].startswith("multipod") else
+                  {"data": 16, "model": 16})
+    cm = CellModel(cfg, shape, mesh_shape, r.get("micro_global_batch", 0))
+    hbm = cm.hbm_bytes_dev(r.get("n_micro", 1), r["params"])
+    rl = r["roofline"]
+    rl["memory_s_xla_upper"] = rl["memory_s"]
+    rl["memory_s"] = hbm / HBM_BW
+    rl["bottleneck"] = max(
+        (("compute", rl["compute_s"]), ("memory", rl["memory_s"]),
+         ("collective", rl["collective_s"])), key=lambda kv: kv[1])[0]
+    rl["step_s_lower_bound"] = max(rl["compute_s"], rl["memory_s"],
+                                   rl["collective_s"])
+    return r
+
+
+def load(pattern="*.json", d=DRYRUN_DIR):
+    rows = []
+    for f in sorted(glob.glob(os.path.join(d, pattern))):
+        rows.append(_augment(json.load(open(f))))
+    return rows
+
+
+def roofline_fraction(r):
+    """useful model-FLOPs time / achievable step time (the score)."""
+    ideal_s = r["model_flops"] / (r["n_devices"] * PEAK_FLOPS_BF16)
+    lower = r["roofline"]["step_s_lower_bound"]
+    return ideal_s / lower if lower > 0 else 0.0
+
+
+def fmt_row(r):
+    rl = r["roofline"]
+    return (f"{r['arch']:22s},{r['shape']:12s},"
+            f"{r['mesh'].split('_')[0]:8s},{r.get('tag','') or '-':16s},"
+            f"{rl['compute_s']*1e3:10.2f},{rl['memory_s']*1e3:10.2f},"
+            f"{rl['collective_s']*1e3:10.2f},{rl['bottleneck']:10s},"
+            f"{r['useful_flops_ratio']*100:7.2f},"
+            f"{roofline_fraction(r)*100:7.2f}")
+
+
+def main(pattern="*.json"):
+    rows = load(pattern)
+    if not rows:
+        print("no dry-run artifacts found — run "
+              "`python -m repro.launch.dryrun --all --both-meshes` first")
+        return []
+    print("arch,shape,mesh,tag,compute_ms,memory_ms,collective_ms,"
+          "bottleneck,useful_flops_pct,roofline_frac_pct")
+    for r in rows:
+        print(fmt_row(r))
+    # summary: worst cells by roofline fraction (hillclimb candidates)
+    base = [r for r in rows if not r.get("tag")]
+    worst = sorted(base, key=roofline_fraction)[:3]
+    coll = sorted(base, key=lambda r: -r["roofline"]["collective_s"])[:3]
+    print("\n# worst roofline fraction (hillclimb candidates):")
+    for r in worst:
+        print(f"#   {r['arch']} {r['shape']} {r['mesh']} "
+              f"frac={roofline_fraction(r)*100:.2f}%")
+    print("# most collective-bound:")
+    for r in coll:
+        print(f"#   {r['arch']} {r['shape']} {r['mesh']} "
+              f"coll={r['roofline']['collective_s']*1e3:.1f}ms")
+    return rows
+
+
+if __name__ == "__main__":
+    main(sys.argv[1] if len(sys.argv) > 1 else "*.json")

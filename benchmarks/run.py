@@ -1,0 +1,47 @@
+"""Benchmark entry point: one bench per paper table/figure + system benches.
+
+  paper_figs        Figs 4/6/8 medians + CDFs (calibrated simulator)
+  wrapper_overhead  §4.1 wrapper < 1 ms (real wall-clock)
+  real_overlap      real-JAX latency hiding on this host (not simulated)
+  pipeline_overlap  data-pipeline DoubleBuffer vs sync input
+  timing            §5.5 eager vs learned poke timing (beyond-paper)
+  roofline          per-cell three-term table from the dry-run artifacts
+
+Output: CSV-ish ``name,us_per_call,derived`` blocks per bench.
+"""
+from __future__ import annotations
+
+import os
+import sys
+import traceback
+
+
+def main() -> None:
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+    from benchmarks import (paper_figs, pipeline_overlap, real_overlap,
+                            roofline, timing_bench, wrapper_overhead)
+
+    benches = [
+        ("paper_figs", lambda: paper_figs.main(n=1800)),
+        ("wrapper_overhead", wrapper_overhead.main),
+        ("real_overlap", real_overlap.main),
+        ("pipeline_overlap", pipeline_overlap.main),
+        ("timing", timing_bench.main),
+        ("roofline", roofline.main),
+    ]
+    failed = []
+    for name, fn in benches:
+        print(f"\n===== bench: {name} =====")
+        try:
+            fn()
+        except Exception:
+            failed.append(name)
+            traceback.print_exc()
+    if failed:
+        print(f"\nFAILED benches: {failed}")
+        sys.exit(1)
+    print("\nall benches OK")
+
+
+if __name__ == "__main__":
+    main()

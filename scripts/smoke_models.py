@@ -1,0 +1,44 @@
+"""Quick CPU smoke of every arch's reduced config: train fwd + prefill/decode."""
+import sys
+import jax
+import jax.numpy as jnp
+
+sys.path.insert(0, "src")
+from repro.configs.registry import ARCH_IDS, smoke_config
+from repro.models import model as M
+
+for arch in ARCH_IDS:
+    cfg = smoke_config(arch)
+    key = jax.random.PRNGKey(0)
+    params = M.init_params(cfg, key)
+    B, T = 2, 32
+    if cfg.input_kind == "frames":
+        batch = {"frames": jax.random.normal(key, (B, T, cfg.d_model)),
+                 "labels": jnp.zeros((B, T), jnp.int32)}
+    elif cfg.input_kind == "tokens+patches":
+        P = cfg.num_patches
+        batch = {"tokens": jnp.zeros((B, T - P), jnp.int32),
+                 "patches": jax.random.normal(key, (B, P, cfg.d_model)),
+                 "labels": jnp.zeros((B, T - P), jnp.int32)}
+    else:
+        batch = {"tokens": jnp.zeros((B, T), jnp.int32),
+                 "labels": jnp.zeros((B, T), jnp.int32)}
+    loss, metrics = M.forward_train(cfg, params, batch)
+    assert jnp.isfinite(loss), (arch, loss)
+    line = f"{arch:24s} loss={float(loss):8.4f}"
+    if cfg.supports_decode:
+        pf_batch = {k: v for k, v in batch.items() if k != "labels"}
+        logits, caches = M.prefill(cfg, params, pf_batch)
+        assert logits.shape == (B, cfg.vocab_size)
+        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        # decode one step at cur_index=T. Pad caches? prefill cache cap == T,
+        # decode writes at index T -> serving pads; here test in-place decode
+        # at the last position instead (cur_index = T-1 rewrite is fine for
+        # shape smoke).
+        logits2, caches2 = M.decode_step(cfg, params, tok, caches,
+                                         jnp.int32(T - 1))
+        assert logits2.shape == (B, cfg.vocab_size)
+        assert bool(jnp.all(jnp.isfinite(logits2))), arch
+        line += "  decode ok"
+    print(line)
+print("ALL OK")

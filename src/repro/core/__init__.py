@@ -1,0 +1,26 @@
+"""GeoFF core: federated serverless choreography with data pre-fetching.
+
+The paper's contribution as a composable library:
+
+  workflow        per-request WorkflowSpec / StepSpec / DataRef (ad-hoc
+                  recomposition: routing is invocation data, not deployment)
+  platform        Platform registry + PlatformWrapper (write once, deploy
+                  to any mesh/host/edge device) + NetworkModel
+  store           region-homed ObjectStore (S3 stand-in, real payloads)
+  choreographer   the decentralized middleware: two-phase poke/payload
+                  protocol, cascading pre-warm + pre-fetch
+  prewarm         AOT CompileCache — XLA compilation as the TPU cold start
+  prefetch        future-based data pre-fetching + DoubleBuffer pipeline
+  shipping        function-shipping placement optimizer (chain DP / DAG)
+  timing          learned poke-delay controller (paper §5.5 future work)
+  simulator       calibrated discrete-event sim reproducing Figs 4/6/8
+"""
+from repro.core.workflow import DataRef, Invocation, StepSpec, WorkflowSpec  # noqa: F401
+from repro.core.platform import (NetworkModel, Platform, PlatformRegistry,  # noqa: F401
+                                 PlatformWrapper)
+from repro.core.store import ObjectStore  # noqa: F401
+from repro.core.choreographer import Deployment, Middleware, StepResult  # noqa: F401
+from repro.core.prewarm import CompileCache  # noqa: F401
+from repro.core.prefetch import DoubleBuffer, Prefetcher  # noqa: F401
+from repro.core.shipping import PlacementCosts, chain_cost, place_chain, place_dag  # noqa: F401
+from repro.core.timing import PokeTimingController  # noqa: F401

@@ -1,0 +1,141 @@
+"""Platforms and platform wrappers (GeoFF §3.1).
+
+A ``Platform`` is a named compute location a step can be deployed to: a TPU
+pod (a mesh slice), a single host, or a CPU "edge" node — the analogue of
+AWS Lambda / Google Cloud Functions / tinyFaaS in the paper. Platforms carry
+a region and capability flags; a ``NetworkModel`` gives inter-region
+latency/bandwidth (used by the placement optimizer and the simulator).
+
+The ``PlatformWrapper`` is the paper's platform-specific wrapper: it adapts
+a mesh-polymorphic step function to a concrete platform (binds mesh +
+sharding rules, stages inputs onto the platform's devices) so the SAME
+function code deploys anywhere. The paper reports < 1 ms wrapper overhead
+(§4.1); benchmarks/wrapper_overhead.py reproduces that measurement.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import jax
+
+from repro.dist import sharding as shd
+
+
+@dataclass(frozen=True)
+class Platform:
+    name: str
+    region: str
+    kind: str = "cloud"            # cloud | private | edge
+    native_prefetch: bool = False  # provider-side poke interception (§4.4)
+    allows_sync: bool = True       # public clouds: async only (§4.1)
+    cold_start_s: float = 0.5      # modeled cold-start latency
+    mesh: Optional[object] = None  # jax Mesh (None = default device)
+    rules: Optional[object] = None # ShardingRules for this platform
+
+    def executor_key(self):
+        return self.name
+
+
+class NetworkModel:
+    """Inter-region RTT/bandwidth. Symmetric; defaults are public-cloud-ish
+    medians (calibrated further in core/simulator.py)."""
+
+    def __init__(self, rtt_s=None, bandwidth_Bps=None,
+                 default_rtt=0.09, default_bw=50e6):
+        self._rtt = dict(rtt_s or {})
+        self._bw = dict(bandwidth_Bps or {})
+        self.default_rtt = default_rtt
+        self.default_bw = default_bw
+
+    @staticmethod
+    def _key(a, b):
+        return (min(a, b), max(a, b))
+
+    def set_link(self, a, b, rtt_s, bw_Bps):
+        self._rtt[self._key(a, b)] = rtt_s
+        self._bw[self._key(a, b)] = bw_Bps
+
+    def rtt(self, a, b):
+        if a == b:
+            return 0.001
+        return self._rtt.get(self._key(a, b), self.default_rtt)
+
+    def bandwidth(self, a, b):
+        if a == b:
+            return 10e9
+        return self._bw.get(self._key(a, b), self.default_bw)
+
+    def transfer_s(self, a, b, size_bytes):
+        return self.rtt(a, b) / 2.0 + size_bytes / self.bandwidth(a, b)
+
+
+class PlatformRegistry:
+    """Deployed platforms + one executor per platform (each FaaS platform
+    runs its functions independently — threads model that concurrency, and
+    for real-JAX steps they give true compute/transfer overlap)."""
+
+    def __init__(self, network: Optional[NetworkModel] = None):
+        self._platforms: dict = {}
+        self._executors: dict = {}
+        self.network = network or NetworkModel()
+        self._lock = threading.Lock()
+
+    def register(self, platform: Platform):
+        with self._lock:
+            self._platforms[platform.name] = platform
+            self._executors.setdefault(
+                platform.name,
+                ThreadPoolExecutor(max_workers=8,
+                                   thread_name_prefix=f"plat-{platform.name}"))
+        return platform
+
+    def get(self, name: str) -> Platform:
+        return self._platforms[name]
+
+    def executor(self, name: str) -> ThreadPoolExecutor:
+        return self._executors[name]
+
+    def names(self):
+        return list(self._platforms)
+
+    def shutdown(self):
+        for ex in self._executors.values():
+            ex.shutdown(wait=False, cancel_futures=True)
+
+
+class PlatformWrapper:
+    """Adapts one step function to one platform. Call overhead is measured
+    (paper §4.1: < 1 ms) and exposed via ``overhead_s``."""
+
+    def __init__(self, platform: Platform, fn: Callable, name: str = ""):
+        self.platform = platform
+        self.fn = fn
+        self.name = name or getattr(fn, "__name__", "step")
+        self.calls = 0
+        self.overhead_s = 0.0
+
+    def __call__(self, *args, **kwargs):
+        t0 = time.perf_counter()
+        p = self.platform
+        if p.mesh is not None and p.rules is not None:
+            ctx = shd.use_sharding(p.mesh, p.rules)
+        else:
+            ctx = _null_ctx()
+        t1 = time.perf_counter()     # wrapper work before user code
+        with ctx:
+            out = self.fn(*args, **kwargs)
+        self.calls += 1
+        self.overhead_s += t1 - t0
+        return out
+
+
+class _null_ctx:
+    def __enter__(self):
+        return None
+
+    def __exit__(self, *a):
+        return False

@@ -1,0 +1,104 @@
+"""Function pre-warming: the AOT compile cache (GeoFF cold starts, §3.3).
+
+On a TPU platform the FaaS "cold start" is XLA compilation (hundreds of ms
+to minutes) plus weight/state materialization. The poke from the
+predecessor step triggers ``lower().compile()`` for the successor's step
+function in a background thread — taking the cold start off the critical
+path exactly as GeoFF pre-warms function instances.
+
+Keys are (step name, platform, abstract input signature), so re-routing a
+step to a different platform (ad-hoc recomposition / function shipping)
+compiles per platform and subsequent calls are warm.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Callable, Optional
+
+import jax
+
+
+def signature_of(args_pytree) -> tuple:
+    leaves, treedef = jax.tree_util.tree_flatten(args_pytree)
+    return (str(treedef),
+            tuple((tuple(getattr(l, "shape", ())),
+                   str(getattr(l, "dtype", type(l).__name__)))
+                  for l in leaves))
+
+
+class CompileCache:
+    """AOT compile cache with background pre-warming."""
+
+    def __init__(self, max_workers: int = 4):
+        self._cache: dict = {}
+        self._inflight: dict = {}
+        self._lock = threading.Lock()
+        self._pool = ThreadPoolExecutor(max_workers=max_workers,
+                                        thread_name_prefix="prewarm")
+        self.stats = {"hits": 0, "misses": 0, "prewarms": 0,
+                      "compile_s": 0.0, "hidden_compile_s": 0.0}
+
+    def _key(self, name: str, platform: str, args) -> tuple:
+        return (name, platform, signature_of(args))
+
+    def _compile(self, fn: Callable, args, donate=()):
+        t0 = time.perf_counter()
+        jitted = jax.jit(fn, donate_argnums=donate)
+        compiled = jitted.lower(*args).compile()
+        return compiled, time.perf_counter() - t0
+
+    def warm(self, name: str, platform: str, fn: Callable, abstract_args,
+             donate=()) -> Future:
+        """Start compiling in the background (the poke path). Idempotent."""
+        key = self._key(name, platform, abstract_args)
+        with self._lock:
+            if key in self._cache:
+                f = Future()
+                f.set_result(self._cache[key])
+                return f
+            if key in self._inflight:
+                return self._inflight[key]
+
+            def job():
+                compiled, dt = self._compile(fn, abstract_args, donate)
+                with self._lock:
+                    self._cache[key] = compiled
+                    self._inflight.pop(key, None)
+                    self.stats["prewarms"] += 1
+                    self.stats["hidden_compile_s"] += dt
+                return compiled
+
+            fut = self._pool.submit(job)
+            self._inflight[key] = fut
+            return fut
+
+    def get(self, name: str, platform: str, fn: Callable, args,
+            donate=()) -> object:
+        """Blocking fetch (the payload path): hit, join in-flight, or
+        compile cold (a cold start — counted in stats)."""
+        key = self._key(name, platform, args)
+        with self._lock:
+            if key in self._cache:
+                self.stats["hits"] += 1
+                return self._cache[key]
+            fut = self._inflight.get(key)
+        if fut is not None:
+            compiled = fut.result()
+            with self._lock:
+                self.stats["hits"] += 1
+            return compiled
+        compiled, dt = self._compile(fn, args, donate)
+        with self._lock:
+            self._cache[key] = compiled
+            self.stats["misses"] += 1
+            self.stats["compile_s"] += dt
+        return compiled
+
+    def is_warm(self, name: str, platform: str, args) -> bool:
+        with self._lock:
+            return self._key(name, platform, args) in self._cache
+
+    def shutdown(self):
+        self._pool.shutdown(wait=False, cancel_futures=True)

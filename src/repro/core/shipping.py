@@ -1,0 +1,145 @@
+"""Function shipping + automated placement (paper §4.3, §5.3).
+
+GeoFF can move a function to the platform where its data lives instead of
+moving the data ("shipping functions to data"). The paper does this manually
+(§4.3) and lists automation as future work (§5.3) — implemented here:
+
+``place_chain`` is a dynamic program over (step x candidate platform): for a
+chain workflow it minimizes the expected serial cost
+
+    sum_i [ exposed_fetch_i(p_i)  +  compute_i  +  transfer(p_i -> p_{i+1}) ]
+
+where exposed_fetch accounts for pre-fetch overlap (fetch hidden up to the
+predecessor's dwell time). Exact in O(steps x platforms^2) — no heuristic
+needed for chains. For DAGs, ``place_dag`` applies the same scoring greedily
+in topological order.
+
+The TPU-pod analogue: a serving step whose KV cache / checkpoint shards live
+on pod A is shipped to pod A rather than streaming the state over DCN —
+serving/disagg.py uses the same optimizer with state residency as data_deps.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+from repro.core.workflow import DataRef, StepSpec, WorkflowSpec
+
+
+@dataclass(frozen=True)
+class PlacementCosts:
+    """Cost model callbacks — wired to NetworkModel/ObjectLatency (sim) or
+    measured EWMA stats (runtime, core/timing.py)."""
+    fetch_s: Callable        # (step_name, platform, data_deps) -> seconds
+    compute_s: Callable      # (step_name, platform) -> seconds
+    transfer_s: Callable     # (platform_a, platform_b, size_bytes) -> seconds
+    payload_size: float = 1.5e6
+
+
+def exposed_fetch(fetch_s: float, window_s: float, prefetch: bool) -> float:
+    """Fetch time visible on the critical path given an overlap window."""
+    if not prefetch:
+        return fetch_s
+    return max(0.0, fetch_s - window_s)
+
+
+def place_chain(spec: WorkflowSpec, candidates: dict,
+                costs: PlacementCosts, prefetch: bool = True) -> WorkflowSpec:
+    """candidates: {step_name: [platform, ...]} — returns the re-routed spec.
+
+    DP state: best[i][p] = minimal cost of steps 0..i with step i on p.
+    The overlap window for step i+1's prefetch is approximated by step i's
+    (compute + transfer) — the poke cascade makes the true window larger, so
+    this is a conservative (safe) placement criterion.
+    """
+    steps = spec.steps
+    n = len(steps)
+    cand = [list(candidates.get(s.name, [s.platform])) for s in steps]
+    best = [{p: (float("inf"), None) for p in c} for c in cand]
+
+    for p in cand[0]:
+        f = costs.fetch_s(steps[0].name, p, steps[0].data_deps)
+        c = costs.compute_s(steps[0].name, p)
+        best[0][p] = (exposed_fetch(f, 0.0, prefetch) + c, None)
+
+    for i in range(1, n):
+        for p in cand[i]:
+            f = costs.fetch_s(steps[i].name, p, steps[i].data_deps)
+            c = costs.compute_s(steps[i].name, p)
+            for q in cand[i - 1]:
+                prev_cost, _ = best[i - 1][q]
+                trans = costs.transfer_s(q, p, costs.payload_size)
+                window = costs.compute_s(steps[i - 1].name, q) + trans
+                total = (prev_cost + trans
+                         + exposed_fetch(f, window, prefetch) + c)
+                if total < best[i][p][0]:
+                    best[i][p] = (total, q)
+
+    # backtrack
+    end_p = min(best[-1], key=lambda p: best[-1][p][0])
+    route = [end_p]
+    for i in range(n - 1, 0, -1):
+        route.append(best[i][route[-1]][1])
+    route.reverse()
+
+    new_steps = tuple(
+        StepSpec(s.name, route[i], s.data_deps, s.prefetch, s.sync, s.params)
+        for i, s in enumerate(steps))
+    return WorkflowSpec(new_steps, spec.workflow_id)
+
+
+def chain_cost(spec: WorkflowSpec, costs: PlacementCosts,
+               prefetch: bool = True) -> float:
+    """Expected serial cost of a fixed route (for reporting / tests)."""
+    total, window = 0.0, 0.0
+    prev = None
+    for i, s in enumerate(spec.steps):
+        f = costs.fetch_s(s.name, s.platform, s.data_deps)
+        c = costs.compute_s(s.name, s.platform)
+        trans = 0.0
+        if prev is not None:
+            trans = costs.transfer_s(prev.platform, s.platform,
+                                     costs.payload_size)
+        total += trans + exposed_fetch(f, window + trans, prefetch) + c
+        window = c
+        prev = s
+    return total
+
+
+def place_dag(nodes, edges, candidates, costs: PlacementCosts,
+              prefetch: bool = True) -> dict:
+    """Greedy topological placement for fan-out/fan-in workflows.
+
+    nodes: {name: StepSpec}; edges: [(src, dst)]. Returns {name: platform}.
+    """
+    from collections import defaultdict, deque
+    indeg = defaultdict(int)
+    succ = defaultdict(list)
+    pred = defaultdict(list)
+    for a, b in edges:
+        indeg[b] += 1
+        succ[a].append(b)
+        pred[b].append(a)
+    order = deque([n for n in nodes if indeg[n] == 0])
+    placement: dict = {}
+    topo = []
+    while order:
+        u = order.popleft()
+        topo.append(u)
+        for v in succ[u]:
+            indeg[v] -= 1
+            if indeg[v] == 0:
+                order.append(v)
+    for u in topo:
+        s = nodes[u]
+        options = candidates.get(u, [s.platform])
+        def score(p):
+            f = costs.fetch_s(u, p, s.data_deps)
+            c = costs.compute_s(u, p)
+            tin = sum(costs.transfer_s(placement[q], p, costs.payload_size)
+                      for q in pred[u] if q in placement)
+            window = max((costs.compute_s(q, placement[q])
+                          for q in pred[u] if q in placement), default=0.0)
+            return tin + exposed_fetch(f, window, prefetch) + c
+        placement[u] = min(options, key=score)
+    return placement

@@ -1,0 +1,94 @@
+"""Region-homed object store (the S3 stand-in).
+
+Stores REAL bytes/arrays in memory, keyed by (key) with a home region.
+Transfer latency is modeled from the NetworkModel (size-based), and can be
+optionally *enforced* (sleep) so real-JAX overlap experiments see true
+wall-clock effects, or just *accounted* (returned) for the simulator.
+
+GeoFF uses the store in two roles (paper §4.1):
+  - external data dependencies that steps pre-fetch, and
+  - the inter-step payload buffer for public-cloud platforms that don't
+    allow direct function-to-function traffic (non-native pre-fetching).
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass
+from typing import Optional
+
+from repro.core.platform import NetworkModel
+
+
+@dataclass
+class StoredObject:
+    value: object
+    size_bytes: int
+    region: str
+
+
+def _sizeof(value) -> int:
+    if hasattr(value, "nbytes"):
+        return int(value.nbytes)
+    if isinstance(value, (bytes, bytearray)):
+        return len(value)
+    if isinstance(value, str):
+        return len(value.encode())
+    if isinstance(value, dict):
+        return sum(_sizeof(v) for v in value.values()) or 64
+    if isinstance(value, (list, tuple)):
+        return sum(_sizeof(v) for v in value) or 64
+    return 64
+
+
+class ObjectStore:
+    def __init__(self, network: Optional[NetworkModel] = None,
+                 enforce_latency: bool = False):
+        self.network = network or NetworkModel()
+        self.enforce_latency = enforce_latency
+        self._objects: dict = {}
+        self._lock = threading.Lock()
+        self.stats = {"puts": 0, "gets": 0, "bytes_in": 0, "bytes_out": 0,
+                      "modeled_get_s": 0.0, "modeled_put_s": 0.0}
+
+    # -- api -------------------------------------------------------------------
+    def put(self, key: str, value, region: str, from_region: str = "") -> float:
+        size = _sizeof(value)
+        dt = self.network.transfer_s(from_region or region, region, size)
+        with self._lock:
+            self._objects[key] = StoredObject(value, size, region)
+            self.stats["puts"] += 1
+            self.stats["bytes_in"] += size
+            self.stats["modeled_put_s"] += dt
+        if self.enforce_latency:
+            time.sleep(dt)
+        return dt
+
+    def get(self, key: str, to_region: str) -> tuple:
+        """Returns (value, modeled_transfer_seconds)."""
+        with self._lock:
+            obj = self._objects[key]
+            self.stats["gets"] += 1
+            self.stats["bytes_out"] += obj.size_bytes
+        dt = self.network.transfer_s(obj.region, to_region, obj.size_bytes)
+        with self._lock:
+            self.stats["modeled_get_s"] += dt
+        if self.enforce_latency:
+            time.sleep(dt)
+        return obj.value, dt
+
+    def head(self, key: str) -> Optional[StoredObject]:
+        with self._lock:
+            return self._objects.get(key)
+
+    def region_of(self, key: str) -> Optional[str]:
+        o = self.head(key)
+        return o.region if o else None
+
+    def delete(self, key: str):
+        with self._lock:
+            self._objects.pop(key, None)
+
+    def __contains__(self, key: str):
+        with self._lock:
+            return key in self._objects

@@ -1,0 +1,99 @@
+"""Optimized pre-fetch timing (paper §5.5 — future work, implemented here).
+
+GeoFF pokes the successor as soon as the current step is invoked. That
+minimizes workflow duration but maximizes double-billing: if prefetch+warm
+finish long before the payload arrives, the successor's instance sits idle
+(billed). The paper suggests learning the timing from monitoring data.
+
+``PokeTimingController`` keeps EWMA estimates of (a) the predecessor's
+handler duration and (b) the successor's warm+fetch duration, and delays the
+poke by  max(0, est_compute - est_prepare - margin)  so preparation finishes
+just as the payload arrives. ``margin`` trades duration risk against
+double-billing; the controller also reports both costs so the trade-off is
+measurable (benchmarks/timing_bench.py).
+"""
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field
+
+
+class EWMA:
+    def __init__(self, alpha: float = 0.25, init: float = 0.0):
+        self.alpha = alpha
+        self.value = init
+        self.n = 0
+
+    def update(self, x: float) -> float:
+        self.value = x if self.n == 0 else \
+            (1 - self.alpha) * self.value + self.alpha * x
+        self.n += 1
+        return self.value
+
+
+@dataclass
+class StepTimings:
+    compute: EWMA = field(default_factory=EWMA)
+    prepare: EWMA = field(default_factory=EWMA)   # warm + prefetch duration
+    slack: EWMA = field(default_factory=EWMA)     # payload_arrival - prepare_done
+    double_billed: float = 0.0                     # accumulated idle seconds
+    exposed_wait: float = 0.0                      # accumulated late seconds
+
+
+class PokeTimingController:
+    """mode='eager'  — paper-faithful: poke at invocation (delay 0).
+       mode='learned' — §5.5: delay the poke to minimize double-billing."""
+
+    def __init__(self, mode: str = "eager", margin_s: float = 0.05,
+                 alpha: float = 0.25):
+        assert mode in ("eager", "learned")
+        self.mode = mode
+        self.margin_s = margin_s
+        self.alpha = alpha
+        self._timings: dict = {}
+        self._lock = threading.Lock()
+
+    def _entry(self, step_name: str) -> StepTimings:
+        with self._lock:
+            if step_name not in self._timings:
+                self._timings[step_name] = StepTimings(
+                    EWMA(self.alpha), EWMA(self.alpha))
+            return self._timings[step_name]
+
+    def poke_delay(self, pred_name: str, succ_name: str) -> float:
+        if self.mode == "eager":
+            return 0.0
+        succ = self._entry(succ_name)
+        if succ.slack.n > 0:
+            # best estimator: observed idle gap (payload - prepare_done),
+            # which accounts for cascaded pokes and upstream dwell
+            return max(0.0, succ.slack.value - self.margin_s)
+        pred = self._entry(pred_name)
+        if pred.compute.n == 0 or succ.prepare.n == 0:
+            return 0.0   # no data yet -> eager
+        return max(0.0, pred.compute.value - succ.prepare.value
+                   - self.margin_s)
+
+    def record_compute(self, step_name: str, seconds: float):
+        self._entry(step_name).compute.update(seconds)
+
+    def record_prepare(self, step_name: str, seconds: float):
+        self._entry(step_name).prepare.update(seconds)
+
+    def record_slack(self, step_name: str, prepared_early_s: float):
+        """+ = instance idle (double-billed); - = payload waited. Feeds the
+        learned delay: next poke shifts by ~EWMA(slack) - margin."""
+        e = self._entry(step_name)
+        e.slack.update(prepared_early_s)
+        if prepared_early_s >= 0:
+            e.double_billed += prepared_early_s
+        else:
+            e.exposed_wait += -prepared_early_s
+
+    def report(self) -> dict:
+        with self._lock:
+            return {k: {"compute_s": v.compute.value,
+                        "prepare_s": v.prepare.value,
+                        "double_billed_s": v.double_billed,
+                        "exposed_wait_s": v.exposed_wait}
+                    for k, v in self._timings.items()}

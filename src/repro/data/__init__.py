@@ -1,0 +1,2 @@
+from repro.data.pipeline import (SyntheticCorpus, ShardedLoader,  # noqa: F401
+                                 make_train_iterator)

@@ -1,0 +1,86 @@
+"""Token data pipeline: synthetic corpus -> sharded loader -> GeoFF prefetch.
+
+The corpus is deterministic (seeded PRNG, skip-ahead addressable by step), so
+restarts reproduce the exact token stream from any step — a requirement for
+checkpoint/restart determinism (tests/test_checkpoint.py asserts it).
+
+The loader yields GLOBAL batches as numpy and the iterator stage device-puts
+them with the batch sharding; ``make_train_iterator`` wraps it in the GeoFF
+``DoubleBuffer`` so batch k+1's generation + host->device transfer overlap
+step k's compute (the data-pipeline instance of the paper's pre-fetching).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding
+
+from repro.core.prefetch import DoubleBuffer
+from repro.dist import sharding as shd
+
+
+class SyntheticCorpus:
+    """An infinite, step-addressable stream of (tokens, labels) batches.
+
+    Documents are Zipf-ish token sequences with document separators — enough
+    structure for a language-model loss to fall during the example runs.
+    """
+
+    def __init__(self, vocab_size: int, seq_len: int, seed: int = 0):
+        self.vocab = vocab_size
+        self.seq = seq_len
+        self.seed = seed
+
+    def batch(self, step: int, batch_size: int):
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.seed, step]))
+        # zipf-ish unigram stream with a repeated-bigram structure so the
+        # model has something learnable
+        base = rng.zipf(1.3, size=(batch_size, self.seq + 1))
+        toks = (base % (self.vocab - 2)).astype(np.int32) + 1
+        # inject determinism-friendly structure: even positions repeat
+        toks[:, 2::2] = toks[:, 1:-1:2]
+        tokens = toks[:, :-1]
+        labels = toks[:, 1:].astype(np.int32)
+        return {"tokens": tokens, "labels": labels}
+
+
+class ShardedLoader:
+    """Yields consecutive global batches starting at `start_step`."""
+
+    def __init__(self, corpus: SyntheticCorpus, batch_size: int,
+                 start_step: int = 0):
+        self.corpus = corpus
+        self.batch_size = batch_size
+        self.step = start_step
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        b = self.corpus.batch(self.step, self.batch_size)
+        self.step += 1
+        return b
+
+
+def shard_batch(batch, mesh, rules):
+    """numpy batch -> sharded device arrays per the batch rules."""
+    if mesh is None:
+        return {k: jax.numpy.asarray(v) for k, v in batch.items()}
+    out = {}
+    for k, v in batch.items():
+        spec = shd.pspec_for(v.shape, ("batch",) + (None,) * (v.ndim - 1),
+                             rules, mesh)
+        out[k] = jax.device_put(v, NamedSharding(mesh, spec))
+    return out
+
+
+def make_train_iterator(cfg, seq_len: int, batch_size: int, mesh=None,
+                        rules=None, start_step: int = 0, seed: int = 0,
+                        prefetch_depth: int = 2):
+    corpus = SyntheticCorpus(cfg.vocab_size, seq_len, seed)
+    loader = ShardedLoader(corpus, batch_size, start_step)
+    return DoubleBuffer(loader, depth=prefetch_depth,
+                        transform=lambda b: shard_batch(b, mesh, rules))

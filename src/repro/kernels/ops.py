@@ -1,0 +1,39 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+The model layer calls these (``cfg.use_pallas=True``); on non-TPU backends
+they run the kernel bodies in interpret mode (Python on CPU) so correctness
+is exercised everywhere, while the lowered TPU path uses the real kernels.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.rglru_scan import rglru_scan as _rglru
+from repro.kernels.rmsnorm import rmsnorm as _rmsnorm
+from repro.kernels.ssd_scan import ssd_scan as _ssd
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k"))
+def flash_attention(q, k, v, *, causal=True, window=None, block_q=128,
+                    block_k=128):
+    return _flash(q, k, v, causal=causal, window=window, block_q=block_q,
+                  block_k=block_k)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "block_h"))
+def ssd_scan(x, dt, A_log, B_mat, C_mat, chunk, block_h=None):
+    return _ssd(x, dt, A_log, B_mat, C_mat, chunk, block_h=block_h)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "block_w"))
+def rglru_scan(log_a, b, chunk=256, block_w=None):
+    return _rglru(log_a, b, chunk=chunk, block_w=block_w)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_rows"))
+def rmsnorm(x, w, eps=1e-6, block_rows=128):
+    return _rmsnorm(x, w, eps=eps, block_rows=block_rows)

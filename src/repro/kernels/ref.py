@@ -1,0 +1,45 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+Each function is the numerical ground truth its kernel is validated against
+(tests/test_kernels.py sweeps shapes/dtypes with assert_allclose). Where the
+model already owns the reference implementation (SSD chunked scan, RG-LRU
+associative scan) we re-export it so there is exactly ONE source of truth.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.griffin import lru_scan as rglru_scan_ref  # noqa: F401
+from repro.models.ssm import ssd_chunked as ssd_scan_ref     # noqa: F401
+
+
+def rmsnorm_ref(x, w, eps=1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    out = (x32 * jax.lax.rsqrt(var + eps)) * (1.0 + w.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=None, scale=None):
+    """q: (B,T,H,d), k/v: (B,S,K,d) with H % K == 0 (GQA). Returns (B,T,H,d).
+
+    Positions are 0..T-1 / 0..S-1 aligned at 0 (self-attention)."""
+    B, T, H, d = q.shape
+    S, K = k.shape[1], k.shape[2]
+    G = H // K
+    scale = scale if scale is not None else d ** -0.5
+    qr = q.reshape(B, T, K, G, d)
+    scores = jnp.einsum("btkgd,bskd->bkgts", qr, k).astype(jnp.float32)
+    scores *= scale
+    q_pos = jnp.arange(T)[:, None]
+    k_pos = jnp.arange(S)[None, :]
+    mask = jnp.ones((T, S), bool)
+    if causal:
+        mask &= q_pos >= k_pos
+    if window is not None:
+        mask &= (q_pos - k_pos) < window
+    scores = jnp.where(mask[None, None, None], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgts,bskd->btkgd", p, v)
+    return out.reshape(B, T, H, d)

@@ -1,0 +1,46 @@
+"""Fused RMSNorm for TPU (Pallas): one pass, f32 statistics in-register.
+
+Grid over row blocks; each step normalizes a (block_rows x D) tile — the
+reduction and the scale apply fuse into one VMEM-resident pass instead of
+the 3 HBM round-trips the unfused jnp version costs.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, w_ref, o_ref, *, eps):
+    x = x_ref[...].astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    w = w_ref[...].astype(jnp.float32)
+    o_ref[...] = ((x * jax.lax.rsqrt(var + eps))
+                  * (1.0 + w[None, :])).astype(o_ref.dtype)
+
+
+def rmsnorm(x, w, eps=1e-6, block_rows=128, interpret=None):
+    """x: (..., D); w: (D,)."""
+    orig_shape = x.shape
+    D = orig_shape[-1]
+    xf = x.reshape(-1, D)
+    N = xf.shape[0]
+    br = min(block_rows, N)
+    # pad rows to a block multiple
+    pad = (-N) % br
+    if pad:
+        xf = jnp.pad(xf, ((0, pad), (0, 0)))
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    out = pl.pallas_call(
+        functools.partial(_kernel, eps=eps),
+        grid=((N + pad) // br,),
+        in_specs=[pl.BlockSpec((br, D), lambda i: (i, 0)),
+                  pl.BlockSpec((D,), lambda i: (0,))],
+        out_specs=pl.BlockSpec((br, D), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((N + pad, D), x.dtype),
+        interpret=interpret,
+    )(xf, w)
+    return out[:N].reshape(orig_shape)

@@ -1,0 +1,107 @@
+"""Mamba-2 SSD chunk scan for TPU (Pallas).
+
+TPU adaptation of the SSD algorithm (arXiv:2405.21060 §6): grid is
+(batch, head-block, chunk) with the CHUNK dimension sequential — the
+inter-chunk recurrent state (heads_blk, P, N) lives in f32 VMEM scratch and
+is carried across chunk steps, while the intra-chunk quadratic term runs on
+the MXU as (Q x N)(N x Q) and (Q x Q)(Q x P) tiles. This replaces the GPU
+formulation's separate state-passing kernel + atomics with grid-sequential
+scratch carry, which is the idiomatic TPU pattern.
+
+Shapes match models/ssm.ssd_chunked (the oracle): x (B,L,H,P), dt (B,L,H),
+A_log (H,), B/C (B,L,N) -> y (B,L,H,P), final_state (B,H,P,N).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, dt_ref, alog_ref, b_ref, c_ref, y_ref, state_ref,
+            h_scr, *, nchunks, chunk):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    x = x_ref[0].astype(jnp.float32)          # (Q, bh, P)
+    dt = dt_ref[0].astype(jnp.float32)        # (Q, bh)
+    a = -jnp.exp(alog_ref[...].astype(jnp.float32))   # (bh,)
+    Bm = b_ref[0].astype(jnp.float32)         # (Q, N)
+    Cm = c_ref[0].astype(jnp.float32)         # (Q, N)
+
+    dA = dt * a[None, :]                      # (Q, bh)
+    cum = jnp.cumsum(dA, axis=0)              # (Q, bh)
+
+    # intra-chunk: y[t] = sum_{s<=t} CB[t,s] * exp(cum[t]-cum[s]) dt[s] x[s]
+    CB = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (Q,Q)
+    diff = cum[:, None, :] - cum[None, :, :]                      # (Q,Q,bh)
+    tri = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    # mask before exp (t<s diffs are positive and can overflow)
+    L = jnp.exp(jnp.where(tri[:, :, None], diff, -1e30))          # (Q,Q,bh)
+    G = CB[:, :, None] * L * dt[None, :, :]                       # (Q,Q,bh)
+    y = jnp.einsum("tsh,shp->thp", G, x)                          # (Q,bh,P)
+
+    # inter-chunk: y[t] += C[t] . (h_prev * exp(cum[t]))
+    h_prev = h_scr[...]                                           # (bh,P,N)
+    y = y + jnp.einsum("tn,hpn,th->thp", Cm, h_prev, jnp.exp(cum))
+
+    # state update: h = h_prev * exp(cum[-1]) + sum_s w_end[s] B[s] x[s]
+    w_end = jnp.exp(cum[-1][None, :] - cum) * dt                  # (Q,bh)
+    S_c = jnp.einsum("sh,sn,shp->hpn", w_end, Bm, x)
+    h_new = h_prev * jnp.exp(cum[-1])[:, None, None] + S_c
+    h_scr[...] = h_new
+
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    @pl.when(ic == nchunks - 1)
+    def _final():
+        state_ref[0] = h_new.astype(state_ref.dtype)
+
+
+def ssd_scan(x, dt, A_log, B_mat, C_mat, chunk, *, block_h=None,
+             interpret=None):
+    """Pallas SSD. Returns (y (B,L,H,P), final_state (B,H,P,N))."""
+    Bb, L, H, P = x.shape
+    N = B_mat.shape[-1]
+    Q = min(chunk, L)
+    assert L % Q == 0
+    nc = L // Q
+    bh = block_h or H
+    assert H % bh == 0
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+
+    kernel = functools.partial(_kernel, nchunks=nc, chunk=Q)
+    grid = (Bb, H // bh, nc)
+    y, state = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, Q, bh, P), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, Q, bh), lambda b, h, c: (b, c, h)),
+            pl.BlockSpec((bh,), lambda b, h, c: (h,)),
+            pl.BlockSpec((1, Q, N), lambda b, h, c: (b, c, 0)),
+            pl.BlockSpec((1, Q, N), lambda b, h, c: (b, c, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, Q, bh, P), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, bh, P, N), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bb, L, H, P), x.dtype),
+            jax.ShapeDtypeStruct((Bb, H, P, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((bh, P, N), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(x, dt, A_log, B_mat, C_mat)
+    return y, state

@@ -1,0 +1,419 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import (jax locks device count on first init).
+# This flag is dry-run-only: smoke tests and benches see the real device.
+
+"""Multi-pod dry-run: prove the distribution config is coherent.
+
+For every (architecture x input-shape x mesh) cell, build the production
+mesh, lower the cell's step program(s) with sharded ShapeDtypeStruct inputs
+(no allocation), ``.compile()`` them, and record ``memory_analysis()`` +
+``cost_analysis()`` + the HLO collective schedule. Output JSON feeds
+benchmarks/roofline.py.
+
+Train cells lower TWO programs, matching the production trainer: the
+microbatch grad step (fwd+bwd+accumulate; run n_micro times per step) and
+the optimizer apply step. The dry-run unrolls the layer loop so XLA's
+cost_analysis counts every matmul and collective exactly (XLA counts
+while-loop bodies once — verified); the remaining inner scans (long-prefill
+attention chunks, SSD chunks) get closed-form corrections from
+launch/analytic.py.
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3.2-3b --shape train_4k [--multi-pod]
+  python -m repro.launch.dryrun --all --both-meshes      # every live cell
+  ... --set seq_shard_attn=true --tag variant_seqshard
+"""
+import argparse
+import json
+import math
+import re
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import ARCH_IDS, get_config
+from repro.configs.base import SHAPES, applicable_shapes
+from repro.dist import sharding as shd
+from repro.launch import mesh as meshlib
+from repro.launch.analytic import CellModel
+from repro.models import model as M
+from repro.models import params as prm
+from repro.optim import AdamW
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+MICRO_TOKENS_PER_DEV = 4096   # microbatch sizing target (activation memory)
+
+_COLL_RE = re.compile(
+    r"=\s*(\([^)]*\)|\S+)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+_SHAPE_RE = re.compile(r"(f32|f16|bf16|f64|s32|s64|s8|u8|u32|pred|s16|u16)"
+                       r"\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+_DTYPE_BYTES = {"f64": 8, "s64": 8, "f32": 4, "s32": 4, "u32": 4, "f16": 2,
+                "bf16": 2, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1}
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str, pod_count: int = 1) -> dict:
+    """Per-device collective traffic from the post-optimization SPMD HLO.
+
+    Wire-bytes use the ring model: all-gather / reduce-scatter move
+    ~shard-size x (G-1) bytes per device; all-reduce ~2x that. Collectives
+    whose group size equals the pod count are attributed to DCN (the 'pod'
+    axis is the only size-2 axis in the multi-pod mesh), the rest to ICI.
+    """
+    ops = []
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m or "-done(" in line:
+            continue
+        out_bytes = _shape_bytes(m.group(1))
+        opcode = m.group(2)
+        gm = _GROUPS_RE.search(line)
+        n_groups, group_size = (int(gm.group(1)), int(gm.group(2))) if gm \
+            else (1, 1)
+        if opcode == "all-gather":
+            wire = out_bytes * (group_size - 1) / max(group_size, 1)
+        elif opcode == "reduce-scatter":
+            wire = out_bytes * (group_size - 1)  # output is the small side
+        elif opcode == "all-reduce":
+            wire = 2 * out_bytes * (group_size - 1) / max(group_size, 1)
+        elif opcode == "all-to-all":
+            wire = out_bytes * (group_size - 1) / max(group_size, 1)
+        else:  # collective-permute
+            wire = out_bytes
+        ops.append({"op": opcode, "bytes": out_bytes, "wire_bytes": wire,
+                    "group_size": group_size, "n_groups": n_groups})
+    dcn = sum(o["wire_bytes"] for o in ops
+              if pod_count > 1 and o["group_size"] == pod_count)
+    ici = sum(o["wire_bytes"] for o in ops) - dcn
+    by_op: dict = {}
+    for o in ops:
+        d = by_op.setdefault(o["op"], {"count": 0, "wire_bytes": 0.0})
+        d["count"] += 1
+        d["wire_bytes"] += o["wire_bytes"]
+    return {"num_collectives": len(ops), "ici_wire_bytes": ici,
+            "dcn_wire_bytes": dcn, "by_op": by_op}
+
+
+# ---------------------------------------------------------------------------
+# per-cell execution defaults (the baseline; --set overrides for hillclimbs)
+# ---------------------------------------------------------------------------
+def cell_defaults(cfg, shape):
+    kw = {"scan_layers": False}           # exact HLO accounting (layer loop)
+    if shape.kind == "train":
+        kw["remat"] = cfg.remat if cfg.remat != "none" else "full"
+        kw["attn_chunk_q"] = cfg.attn_chunk_q or 512
+        # lax.scan over q-chunks (memory: one chunk live at a time; flops
+        # corrected analytically — validated vs the unrolled variant)
+        kw["attn_chunk_unroll"] = False
+        if cfg.vocab_size % 16 != 0 and cfg.vocab_size > 10_000:
+            kw["ce_chunk"] = cfg.ce_chunk or 512
+    elif shape.kind == "prefill":
+        kw["attn_chunk_q"] = cfg.attn_chunk_q or 256
+        kw["attn_chunk_unroll"] = False   # lax.scan; analytic correction
+    return cfg.replace(**kw)
+
+
+def micro_batch_plan(shape, mesh, micro_tokens=None):
+    """(micro_global_batch, n_micro) for train cells."""
+    batch_shards = mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
+    per_dev = max(1, (micro_tokens or MICRO_TOKENS_PER_DEV) // shape.seq_len)
+    micro = min(shape.global_batch, per_dev * batch_shards)
+    n_micro = max(1, shape.global_batch // micro)
+    return micro, n_micro
+
+
+def _analyze(compiled, pod_count):
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    try:
+        ma = compiled.memory_analysis()
+        mem = {k: getattr(ma, k) for k in
+               ("argument_size_in_bytes", "output_size_in_bytes",
+                "temp_size_in_bytes", "alias_size_in_bytes")}
+    except Exception:
+        mem = {}
+    coll = parse_collectives(compiled.as_text(), pod_count)
+    return (float(ca.get("flops", 0.0)), float(ca.get("bytes accessed", 0.0)),
+            mem, coll)
+
+
+def apply_overrides(cfg, sets):
+    for kv in sets or []:
+        k, v = kv.split("=", 1)
+        cur = getattr(cfg, k)
+        if isinstance(cur, bool):
+            v = v.lower() in ("1", "true", "yes")
+        elif isinstance(cur, int):
+            v = int(v)
+        elif isinstance(cur, float):
+            v = float(v)
+        elif isinstance(cur, tuple):
+            v = tuple(v.split(","))
+        cfg = cfg.replace(**{k: v})
+    return cfg
+
+
+# ---------------------------------------------------------------------------
+# cell runner
+# ---------------------------------------------------------------------------
+DIFF_CYCLES = (2, 4)   # lowered depths for the depth-differencing estimator
+
+
+def _model_program_metrics(cfg, shape, mesh, rules, pod_count,
+                           micro_global):
+    """Analysis dict {flops, bytes, ici, dcn, temp} for the model-bearing
+    program (micro grad step / prefill / decode) at cfg's FULL depth.
+
+    Train and prefill use DEPTH DIFFERENCING: the layer stack is a repeated
+    cycle, so lowering the model at 2 and 4 cycles and extrapolating
+    per-cycle deltas reproduces the full-depth unrolled counts exactly
+    (validated vs a full unroll on llama: <2% — see EXPERIMENTS.md §Dry-run)
+    while compiling ~10x faster on this 1-core host. Decode compiles fast
+    and is lowered at full depth.
+    """
+    pattern = len(cfg.block_pattern)
+    n_cyc, n_rem = divmod(cfg.num_layers, pattern)
+
+    def lower_at(num_layers, use_cfg):
+        c = use_cfg.replace(num_layers=num_layers)
+        pdefs = M.param_defs(c)
+        pstructs = prm.abstract_params(pdefs, jnp.dtype(c.param_dtype),
+                                       rules, mesh)
+        if shape.kind == "train":
+            mshape = shape.__class__(shape.name, shape.seq_len, micro_global,
+                                     "train")
+            batch = M.input_specs(c, mshape, rules, mesh)
+            gstructs = prm.abstract_params(M.grad_acc_defs(pdefs),
+                                           jnp.float32, rules, mesh)
+            micro_step = M.make_micro_step(c)
+
+            def fn(params, grad_acc, b):
+                with shd.use_sharding(mesh, rules):
+                    return micro_step(params, grad_acc, b)
+
+            compiled = jax.jit(fn, donate_argnums=(1,)).lower(
+                pstructs, gstructs, batch).compile()
+        elif shape.kind == "prefill":
+            batch = M.input_specs(c, shape, rules, mesh)
+
+            def fn(params, b):
+                with shd.use_sharding(mesh, rules):
+                    return M.prefill(c, params, b)
+
+            compiled = jax.jit(fn).lower(pstructs, batch).compile()
+        else:
+            specs = M.input_specs(c, shape, rules, mesh)
+
+            def fn(params, token, caches, cur_index):
+                with shd.use_sharding(mesh, rules):
+                    return M.decode_step(c, params, token, caches, cur_index)
+
+            compiled = jax.jit(fn, donate_argnums=(2,)).lower(
+                pstructs, specs["token"], specs["caches"],
+                specs["cur_index"]).compile()
+        flops, bts, mem, coll = _analyze(compiled, pod_count)
+        cm = CellModel(c, shape, dict(mesh.shape), micro_global)
+        return {"flops": flops + cm.corrections_dev(),
+                "bytes": bts + cm.bytes_corrections_dev(),
+                "ici": coll["ici_wire_bytes"],
+                "dcn": coll["dcn_wire_bytes"],
+                "temp": mem.get("temp_size_in_bytes", 0),
+                "coll_detail": coll}
+
+    if shape.kind == "decode" or n_cyc <= max(DIFF_CYCLES):
+        return lower_at(cfg.num_layers, cfg)
+
+    lo, hi = DIFF_CYCLES
+    a = lower_at(lo * pattern + n_rem, cfg)
+    b = lower_at(hi * pattern + n_rem, cfg)
+    out = {}
+    for k in ("flops", "bytes", "ici", "dcn", "temp"):
+        per_cycle = (b[k] - a[k]) / (hi - lo)
+        out[k] = a[k] + per_cycle * (n_cyc - lo)
+    out["coll_detail"] = b["coll_detail"]
+    out["diff_estimator"] = {"lo_cycles": lo, "hi_cycles": hi,
+                             "n_cycles": n_cyc}
+    return out
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, sets=None,
+             tag: str = "", out_dir: str = OUT_DIR, verbose: bool = True,
+             micro_tokens: int = 0):
+    shape = SHAPES[shape_name]
+    cfg = apply_overrides(cell_defaults(get_config(arch), shape), sets)
+    mesh = meshlib.make_production_mesh(multi_pod=multi_pod)
+    n_dev = math.prod(mesh.shape.values())
+    pod_count = mesh.shape.get("pod", 1)
+    rules = shd.rules_for(shape.kind, multi_pod=multi_pod,
+                          seq_shard_attn=cfg.seq_shard_attn,
+                          seq_shard_resid=cfg.seq_shard_resid)
+    t0 = time.time()
+
+    if shape.kind == "train":
+        micro_global, n_micro = micro_batch_plan(shape, mesh,
+                                                 micro_tokens or None)
+    else:
+        micro_global, n_micro = shape.global_batch, 1
+
+    model_m = _model_program_metrics(cfg, shape, mesh, rules, pod_count,
+                                     micro_global)
+
+    apply_m = None
+    if shape.kind == "train":
+        pdefs = M.param_defs(cfg)
+        pstructs = prm.abstract_params(pdefs, jnp.dtype(cfg.param_dtype),
+                                       rules, mesh)
+        opt = AdamW()
+        ostructs = prm.abstract_params(opt.state_defs(pdefs), jnp.float32,
+                                       rules, mesh)
+        gstructs = prm.abstract_params(M.grad_acc_defs(pdefs), jnp.float32,
+                                       rules, mesh)
+        apply_step = M.make_apply_step(cfg, opt, n_micro)
+
+        def apply_fn(params, opt_state, grad_acc, step):
+            with shd.use_sharding(mesh, rules):
+                return apply_step(params, opt_state, grad_acc, step)
+
+        c_apply = jax.jit(apply_fn, donate_argnums=(0, 1, 2)).lower(
+            pstructs, ostructs, gstructs,
+            jax.ShapeDtypeStruct((), jnp.int32)).compile()
+        af, ab, am, ac = _analyze(c_apply, pod_count)
+        apply_m = {"flops": af, "bytes": ab, "ici": ac["ici_wire_bytes"],
+                   "dcn": ac["dcn_wire_bytes"],
+                   "temp": am.get("temp_size_in_bytes", 0)}
+
+    t_compile = time.time() - t0
+    cm = CellModel(cfg, shape, dict(mesh.shape), micro_global)
+    corr = cm.corrections_dev()
+
+    # aggregate per full step (n_micro x model program + apply)
+    flops_dev = model_m["flops"] * n_micro
+    bytes_dev = model_m["bytes"] * n_micro
+    ici = model_m["ici"] * n_micro
+    dcn = model_m["dcn"] * n_micro
+    peak_temp = model_m["temp"]
+    if apply_m:
+        flops_dev += apply_m["flops"]
+        bytes_dev += apply_m["bytes"]
+        ici += apply_m["ici"]
+        dcn += apply_m["dcn"]
+        peak_temp = max(peak_temp, apply_m["temp"])
+
+    t_compute = flops_dev / meshlib.PEAK_FLOPS_BF16
+    t_memory = bytes_dev / meshlib.HBM_BW
+    t_coll = ici / meshlib.ICI_BW + dcn / meshlib.DCN_BW
+
+    tokens = shape.global_batch * (shape.seq_len
+                                   if shape.kind != "decode" else 1)
+    mult = 6 if shape.kind == "train" else 2
+    model_flops = mult * cfg.active_param_count() * tokens
+    useful = model_flops / max(flops_dev * n_dev, 1.0)
+
+    res = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "multipod_2x16x16" if multi_pod else "pod_16x16",
+        "tag": tag, "overrides": list(sets or []),
+        "n_devices": n_dev, "n_micro": n_micro,
+        "micro_global_batch": micro_global,
+        "compile_s": round(t_compile, 2),
+        "flops_per_dev_step": flops_dev,
+        "bytes_per_dev_step": bytes_dev,
+        "scan_correction_flops_dev": corr,
+        "diff_estimator": model_m.get("diff_estimator"),
+        "collectives": {
+            "ici_wire_bytes": ici, "dcn_wire_bytes": dcn,
+            "by_op": model_m["coll_detail"]["by_op"]},
+        "peak_temp_bytes": peak_temp,
+        "roofline": {
+            "compute_s": t_compute, "memory_s": t_memory,
+            "collective_s": t_coll,
+            "bottleneck": max(
+                (("compute", t_compute), ("memory", t_memory),
+                 ("collective", t_coll)), key=lambda kv: kv[1])[0],
+            "step_s_lower_bound": max(t_compute, t_memory, t_coll),
+        },
+        "model_flops": model_flops,
+        "useful_flops_ratio": useful,
+        "analytic_flops_dev": cm.model_flops_analytic_dev() * n_micro,
+        "params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+    }
+    os.makedirs(out_dir, exist_ok=True)
+    name = f"{arch.replace('.', '_')}__{shape_name}__" \
+           f"{'mp' if multi_pod else 'sp'}{('__' + tag) if tag else ''}.json"
+    with open(os.path.join(out_dir, name), "w") as f:
+        json.dump(res, f, indent=1)
+    if verbose:
+        print(f"[dryrun] {arch} {shape_name} "
+              f"{'mp' if multi_pod else 'sp'} "
+              f"compile={t_compile:.1f}s n_micro={n_micro} "
+              f"compute={t_compute*1e3:.2f}ms memory={t_memory*1e3:.2f}ms "
+              f"collective={t_coll*1e3:.2f}ms "
+              f"bottleneck={res['roofline']['bottleneck']} "
+              f"useful={useful:.2%} peak_temp={peak_temp/2**30:.2f}GiB",
+              flush=True)
+    return res
+
+
+def live_cells():
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for shape in applicable_shapes(cfg):
+            yield arch, shape.name
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--set", action="append", dest="sets", default=[])
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--micro-tokens", type=int, default=0,
+                    help="override microbatch tokens/device (perf lever)")
+    ap.add_argument("--out-dir", default=OUT_DIR)
+    args = ap.parse_args(argv)
+
+    cells = list(live_cells()) if args.all else [(args.arch, args.shape)]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    failures = []
+    for arch, shape in cells:
+        for mp in meshes:
+            try:
+                run_cell(arch, shape, mp, args.sets, args.tag, args.out_dir,
+                         micro_tokens=args.micro_tokens)
+            except Exception:
+                failures.append((arch, shape, mp))
+                traceback.print_exc()
+            finally:
+                jax.clear_caches()   # keep the 62-cell sweep bounded in RAM
+    if failures:
+        print("FAILURES:", failures)
+        sys.exit(1)
+    print(f"dry-run OK: {len(cells) * len(meshes)} cells")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""HLO text introspection: per-dot FLOP attribution by source op_name.
+
+Used by the dry-run debugging/perf loop: XLA's cost_analysis only reports
+totals, but the optimized HLO names every fusion/dot with the jaxpr path
+(op_name metadata), so we can attribute FLOPs to model components
+(attention / mlp / unembed / optimizer) and catch redundant compute
+(e.g. attention replicated over the model axis because heads don't divide).
+"""
+from __future__ import annotations
+
+import math
+import re
+from collections import defaultdict
+
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*([a-z0-9]+)\[([\d,]*)\]")
+_DOT_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*[a-z0-9]+\[([\d,]*)\][^=]*"
+    r"dot\(%([\w.\-]+),\s*%([\w.\-]+)\)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_OPNAME_RE = re.compile(r'op_name="([^"]*)"')
+
+
+def _dims(s: str):
+    return [int(x) for x in s.split(",") if x] if s else []
+
+
+def dot_flops_by_opname(hlo_text: str) -> dict:
+    """{op_name_prefix: flops} summed over all dot ops (per device)."""
+    shapes = {}
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if m:
+            shapes[m.group(1)] = _dims(m.group(3))
+    out = defaultdict(float)
+    for line in hlo_text.splitlines():
+        m = _DOT_RE.match(line)
+        if not m:
+            continue
+        out_shape = _dims(m.group(2))
+        lhs = shapes.get(m.group(3), [])
+        cm = _CONTRACT_RE.search(line)
+        contract = 1
+        if cm and lhs:
+            for d in _dims(cm.group(1)):
+                if d < len(lhs):
+                    contract *= lhs[d]
+        flops = 2.0 * math.prod(out_shape) * contract if out_shape else 0.0
+        om = _OPNAME_RE.search(line)
+        name = om.group(1) if om else "?"
+        # strip to a readable component path
+        name = re.sub(r"jit\([^)]*\)/", "", name)
+        out[name] += flops
+    return dict(out)
+
+
+def top_dot_flops(hlo_text: str, n: int = 25):
+    d = dot_flops_by_opname(hlo_text)
+    return sorted(d.items(), key=lambda kv: -kv[1])[:n]
+
+
+def total_dot_flops(hlo_text: str) -> float:
+    return sum(dot_flops_by_opname(hlo_text).values())

@@ -1,0 +1,50 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so that
+importing this module never touches jax device state. The dry-run process
+sets ``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import; everything else (smoke tests, benches) sees the real single device.
+
+Mesh geometry (TPU v5e pods as the reference target):
+  single-pod:  (data=16, model=16)           = 256 chips, ICI everywhere
+  multi-pod:   (pod=2, data=16, model=16)    = 512 chips; the leading "pod"
+               axis crosses DCN — gradient reduction over "pod" is the only
+               cross-pod collective on the train path (see dist/sharding.py).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    need = math.prod(shape)
+    devs = jax.devices()
+    if len(devs) < need:
+        raise RuntimeError(
+            f"mesh {shape} needs {need} devices, have {len(devs)} — run under "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=512 (dry-run "
+            "only)")
+    return jax.sharding.Mesh(
+        np.asarray(devs[:need]).reshape(shape), axes)
+
+
+def make_host_mesh(model_parallel: int = 1):
+    """A mesh over whatever devices actually exist (smoke tests, examples)."""
+    devs = jax.devices()
+    n = len(devs)
+    dp = n // model_parallel
+    return jax.sharding.Mesh(
+        np.asarray(devs[:dp * model_parallel]).reshape(dp, model_parallel),
+        ("data", "model"))
+
+
+# TPU v5e hardware constants for the roofline terms (per chip).
+PEAK_FLOPS_BF16 = 197e12      # FLOP/s
+HBM_BW = 819e9                # B/s
+ICI_BW = 50e9                 # B/s per link (~4 links usable per chip)
+DCN_BW = 25e9                 # B/s per host crossing pods

@@ -1,0 +1,128 @@
+"""RecurrentGemma / Griffin temporal-mixing block: RG-LRU linear recurrence.
+
+Block layout (arXiv:2402.19427): two parallel branches off the input —
+  gate branch: linear -> GeLU
+  lru branch:  linear -> causal conv1d -> RG-LRU
+merged multiplicatively, then projected back to d_model.
+
+RG-LRU recurrence (per channel, diagonal):
+  r_t = sigmoid(W_a x_t)            recurrence gate
+  i_t = sigmoid(W_x x_t)            input gate
+  a_t = exp(-c * softplus(Lambda) * r_t)   with c = 8
+  h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Train/prefill evaluate the recurrence with an associative scan
+(`jax.lax.associative_scan`) — O(log T) depth; decode is the O(1) update.
+The pure-jnp `lru_scan` here is the oracle for the Pallas `rglru_scan`
+kernel (kernels/ref.py re-exports it).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import shard
+from repro.models.params import ParamDef
+from repro.models.ssm import causal_conv, conv_step
+
+RG_LRU_C = 8.0
+
+
+def rglru_defs(cfg) -> dict:
+    D, W = cfg.d_model, (cfg.lru_width or cfg.d_model)
+    return {
+        "in_x": ParamDef((D, W), ("embed", "lru")),
+        "in_gate": ParamDef((D, W), ("embed", "lru")),
+        "conv_w": ParamDef((cfg.conv_width, W), ("conv", "lru")),
+        "conv_b": ParamDef((W,), ("lru",), "zeros"),
+        "w_a": ParamDef((W, W), ("lru", None)),
+        "b_a": ParamDef((W,), (None,), "zeros"),
+        "w_i": ParamDef((W, W), ("lru", None)),
+        "b_i": ParamDef((W,), (None,), "zeros"),
+        "lam": ParamDef((W,), (None,), "lru_lambda"),
+        "out": ParamDef((W, D), ("lru", "embed")),
+    }
+
+
+def _gates(p, x):
+    """x: (..., W) -> (log_a, gated_input) both (..., W), float32."""
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(jnp.einsum("...w,wv->...v", xf, p["w_a"].astype(jnp.float32))
+                       + p["b_a"].astype(jnp.float32))
+    i = jax.nn.sigmoid(jnp.einsum("...w,wv->...v", xf, p["w_i"].astype(jnp.float32))
+                       + p["b_i"].astype(jnp.float32))
+    log_a = -RG_LRU_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r
+    gated = i * xf
+    return log_a, gated
+
+
+def lru_scan(log_a, b, h0=None):
+    """Linear recurrence h_t = a_t h_{t-1} + b_t via associative scan.
+
+    log_a, b: (B, T, W) float32; h0: (B, W) or None. Returns (y, h_final):
+    y (B,T,W) = all h_t; h_final (B,W).
+    """
+    a = jnp.exp(log_a)
+    if h0 is not None:
+        # fold h0 into the first step: b_0' = a_0 * h0 + b_0
+        b = b.at[:, 0, :].add(a[:, 0, :] * h0)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    ys = jax.lax.associative_scan(combine, (a, b), axis=1)[1]
+    return ys, ys[:, -1, :]
+
+
+def lru_step(log_a_t, b_t, h):
+    """One decode step: (B,W) each. Returns (y, new_h)."""
+    a = jnp.exp(log_a_t)
+    new = a * h + b_t
+    return new, new
+
+
+def rglru_block(cfg, p, x, mode, cache=None, use_pallas=False):
+    """Temporal-mixing half of a griffin layer. x: (B,T,D) (pre-normed).
+
+    cache (decode): {"conv": (B, cw-1, W), "h": (B, W)}.
+    Returns (out (B,T,D), new_cache) — new_cache also produced by prefill.
+    """
+    B, T, D = x.shape
+    W = cfg.lru_width or cfg.d_model
+    gate = jax.nn.gelu(jnp.einsum("btd,dw->btw", x, p["in_gate"]))
+    xb = jnp.einsum("btd,dw->btw", x, p["in_x"])
+    xb = shard(xb, "batch", "seq", "act_inner")
+
+    if mode in ("train", "prefill"):
+        xc = causal_conv(xb, p["conv_w"], p["conv_b"])
+        log_a, gated = _gates(p, xc)
+        beta = jnp.sqrt(-jnp.expm1(2.0 * log_a))        # sqrt(1 - a^2), stable
+        b = beta * gated
+        if use_pallas:
+            from repro.kernels import ops as kops
+            y, h_last = kops.rglru_scan(log_a, b)
+        else:
+            y, h_last = lru_scan(log_a, b)
+        new_cache = None
+        if mode == "prefill":
+            tail = xb[:, -(cfg.conv_width - 1):, :]
+            new_cache = {"conv": tail.astype(x.dtype), "h": h_last}
+    else:  # decode, T == 1
+        xb_t = xb[:, 0, :]
+        xc_t, conv_cache = conv_step(xb_t, cache["conv"], p["conv_w"], p["conv_b"])
+        log_a, gated = _gates(p, xc_t)
+        beta = jnp.sqrt(-jnp.expm1(2.0 * log_a))
+        y_t, h_new = lru_step(log_a, beta * gated, cache["h"].astype(jnp.float32))
+        y = y_t[:, None, :]
+        new_cache = {"conv": conv_cache.astype(x.dtype), "h": h_new}
+
+    y = y.astype(x.dtype) * gate
+    out = jnp.einsum("btw,wd->btd", y, p["out"])
+    return shard(out, "batch", "seq", "act_embed"), new_cache
+
+
+def rglru_cache_specs(cfg, batch):
+    W = cfg.lru_width or cfg.d_model
+    return {"conv": (batch, cfg.conv_width - 1, W), "h": (batch, W)}

@@ -1,0 +1,419 @@
+"""Transformer building blocks: RMSNorm, RoPE, GQA attention (global /
+sliding-window, qk-norm, ring-buffer decode caches), gated MLP, and
+capacity-based top-k MoE with scatter dispatch (EP-shardable).
+
+All blocks run in three modes:
+  train   — full sequence, no cache
+  prefill — full sequence, returns the KV cache (+ last-position states)
+  decode  — T=1 step against a cache (full-length or ring buffer)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import shard
+from repro.models.params import ParamDef
+
+
+@dataclass(frozen=True)
+class BlockCfg:
+    """Static per-layer info resolved from ArchConfig.block_pattern."""
+    kind: str                 # attn | rglru | ssd
+    window: Optional[int]     # None -> global attention
+    theta: float = 10_000.0
+
+
+def block_cfg_for(cfg, kind: str) -> BlockCfg:
+    if kind == "global":
+        theta = cfg.rope_theta_global or cfg.rope_theta
+        return BlockCfg("attn", None, theta)
+    if kind == "local":
+        return BlockCfg("attn", cfg.local_window, cfg.rope_theta)
+    if kind == "rglru":
+        return BlockCfg("rglru", None)
+    if kind == "ssd":
+        return BlockCfg("ssd", None)
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# norms / rope
+# ---------------------------------------------------------------------------
+def rmsnorm(x, w, eps=1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return ((x32 * jax.lax.rsqrt(var + eps)) * (1.0 + w.astype(jnp.float32))
+            ).astype(x.dtype)
+
+
+def rope(x, positions, theta):
+    """x: (..., T, n, d) rotated pairwise; positions: (..., T)."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq  # (..., T, half)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+def attn_defs(cfg) -> dict:
+    D, H, K, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    d = {
+        "wq": ParamDef((D, H, hd), ("embed", "heads", "head_dim")),
+        "wk": ParamDef((D, K, hd), ("embed", "kv_heads", "head_dim")),
+        "wv": ParamDef((D, K, hd), ("embed", "kv_heads", "head_dim")),
+        "wo": ParamDef((H, hd, D), ("heads", "head_dim", "embed")),
+    }
+    if cfg.qk_norm:
+        d["q_norm"] = ParamDef((hd,), ("head_dim",), "zeros")
+        d["k_norm"] = ParamDef((hd,), ("head_dim",), "zeros")
+    return d
+
+
+def _attn_mask(q_pos, k_pos, window, causal):
+    """q_pos: (Tq,), k_pos: (Tk,) absolute positions; True = attend."""
+    dq = q_pos[:, None] - k_pos[None, :]
+    m = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        m &= dq >= 0
+    if window is not None:
+        m &= dq < window
+    return m
+
+
+def _sdpa(cfg, q, k, v, mask):
+    """q:(B,T,H,hd) k/v:(B,S,K,hd) mask:(T,S) or (B,T,S)."""
+    B, T, H, hd = q.shape
+    K = k.shape[2]
+    G = H // K
+    q = q.reshape(B, T, K, G, hd)
+    scores = jnp.einsum("btkgd,bskd->bkgts", q, k).astype(jnp.float32)
+    scores *= hd ** -0.5
+    if mask.ndim == 2:
+        mask = mask[None]
+    scores = jnp.where(mask[:, None, None, :, :], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgts,bskd->btkgd", p, v)
+    return out.reshape(B, T, H, hd)
+
+
+def _sdpa_chunked(cfg, q, k, v, q_pos, k_pos, window, causal, chunk, unroll):
+    """Flash-style q-chunked attention: scores stay O(chunk x S).
+
+    For sliding-window layers the K/V are sliced to the band
+    [chunk_start - window + 1, chunk_end] so local attention costs
+    O(T*(window+chunk)) instead of O(T*S).
+
+    unroll=True emits a python loop (exact XLA flop accounting — used by the
+    dry-run for train shapes); unroll=False emits one lax.scan (small HLO —
+    used for very long prefills; flops corrected analytically, see
+    launch/analytic.py).
+    """
+    B, T, H, hd = q.shape
+    S = k.shape[1]
+    n = T // chunk
+    assert T % chunk == 0, (T, chunk)
+
+    banded = window is not None and S > window + chunk
+    if banded:
+        band = window + chunk
+        # left-pad so every chunk's band slice has static size `band`;
+        # padded positions get k_pos = -window (always masked by dq < window)
+        pad = band - chunk
+        k = jnp.pad(k, ((0, 0), (pad, 0), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (pad, 0), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, (pad, 0), constant_values=-(window + 1))
+
+    # checkpoint per chunk: the bwd pass recomputes the O(chunk x S) score
+    # tile instead of saving it — without this, the stacked per-chunk scores
+    # (f32, n x B x H x chunk x S) dominate peak memory.
+    @jax.checkpoint
+    def one(i, qi, qpos_i):
+        if banded:
+            ks = jax.lax.dynamic_slice_in_dim(k, i * chunk, band, axis=1)
+            vs = jax.lax.dynamic_slice_in_dim(v, i * chunk, band, axis=1)
+            kp = jax.lax.dynamic_slice_in_dim(k_pos, i * chunk, band, axis=0)
+        else:
+            ks, vs, kp = k, v, k_pos
+        mask = _attn_mask(qpos_i, kp, window, causal)
+        return _sdpa(cfg, qi, ks, vs, mask)
+
+    if unroll:
+        outs = [one(i, q[:, i * chunk:(i + 1) * chunk],
+                    q_pos[i * chunk:(i + 1) * chunk]) for i in range(n)]
+        return jnp.concatenate(outs, axis=1)
+
+    qr = jnp.moveaxis(q.reshape(B, n, chunk, H, hd), 1, 0)      # (n,B,c,H,hd)
+    pr = q_pos.reshape(n, chunk)
+
+    def body(_, inp):
+        i, qi, pi = inp
+        return None, one(i, qi, pi)
+
+    _, outs = jax.lax.scan(body, None,
+                           (jnp.arange(n), qr, pr))
+    return jnp.moveaxis(outs, 0, 1).reshape(B, T, H, hd)
+
+
+def attention(cfg, bc: BlockCfg, p, x, positions, mode, cache=None,
+              cur_index=None):
+    """Returns (out, new_cache).
+
+    prefill: cache returned is (k, v) over the full sequence, or a ring
+    buffer of size `window` for local layers.
+    decode:  T==1; cache is updated functionally at `cur_index`.
+    """
+    B, T, D = x.shape
+    q = jnp.einsum("btd,dhk->bthk", x, p["wq"])
+    k = jnp.einsum("btd,dhk->bthk", x, p["wk"])
+    v = jnp.einsum("btd,dhk->bthk", x, p["wv"])
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"])
+        k = rmsnorm(k, p["k_norm"])
+    q = rope(q, positions, bc.theta)
+    k = rope(k, positions, bc.theta)
+    q = shard(q, "batch", "attn_seq", "act_heads", None)
+    k = shard(k, "batch", None, "act_kv", None)
+    v = shard(v, "batch", None, "act_kv", None)
+
+    if mode in ("train", "prefill"):
+        causal = cfg.causal
+        pos = positions if positions.ndim == 1 else positions[0]
+        chunk = cfg.attn_chunk_q
+        if cfg.use_pallas:
+            from repro.kernels import ops as kops
+            out = kops.flash_attention(q, k, v, causal=causal,
+                                       window=bc.window)
+        elif chunk and T > chunk:
+            out = _sdpa_chunked(cfg, q, k, v, pos, pos, bc.window, causal,
+                                chunk, cfg.attn_chunk_unroll)
+        else:
+            mask = _attn_mask(pos, pos, bc.window, causal)
+            out = _sdpa(cfg, q, k, v, mask)
+        new_cache = None
+        if mode == "prefill":
+            if bc.window is not None and T > bc.window:
+                # keep only the trailing window as a ring buffer
+                W = bc.window
+                start = T - W
+                kr, vr = k[:, start:], v[:, start:]
+                # roll so that slot i = position p with p % W == i
+                shift = (start % W)
+                kr = jnp.roll(kr, shift, axis=1)
+                vr = jnp.roll(vr, shift, axis=1)
+                new_cache = (kr, vr)
+            else:
+                new_cache = (k, v)
+    else:  # decode
+        ck, cv = cache
+        S = ck.shape[1]
+        if bc.window is not None and S == bc.window:
+            slot = cur_index % S
+        else:
+            slot = cur_index
+        ck = jax.lax.dynamic_update_slice_in_dim(ck, k, slot, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cv, v, slot, axis=1)
+        ck = shard(ck, "batch", "cache_seq", "act_kv", None)
+        cv = shard(cv, "batch", "cache_seq", "act_kv", None)
+        idx = jnp.arange(S)
+        if bc.window is not None and S == bc.window:
+            # slot i holds absolute position cur_index - ((cur_index - i) mod S)
+            k_pos = cur_index - jnp.mod(cur_index - idx, S)
+            valid = k_pos >= 0
+        else:
+            k_pos = idx
+            valid = idx <= cur_index
+        dq = cur_index - k_pos
+        m = valid & (dq >= 0)
+        if bc.window is not None:
+            m &= dq < bc.window
+        out = _sdpa(cfg, q, ck, cv, m[None, None, :].repeat(B, 0))
+        new_cache = (ck, cv)
+
+    out = jnp.einsum("bthk,hkd->btd", out, p["wo"])
+    return shard(out, "batch", "seq", "act_embed"), new_cache
+
+
+def attn_cache_shape(cfg, bc: BlockCfg, batch, seq_len):
+    S = seq_len if bc.window is None else min(bc.window, seq_len)
+    return (batch, S, cfg.num_kv_heads, cfg.head_dim)
+
+
+# ---------------------------------------------------------------------------
+# gated MLP
+# ---------------------------------------------------------------------------
+def mlp_defs(cfg) -> dict:
+    D, F = cfg.d_model, cfg.d_ff
+    return {
+        "w_gate": ParamDef((D, F), ("embed", "ff")),
+        "w_up": ParamDef((D, F), ("embed", "ff")),
+        "w_down": ParamDef((F, D), ("ff", "embed")),
+    }
+
+
+def mlp(cfg, p, x):
+    g = jnp.einsum("btd,df->btf", x, p["w_gate"])
+    u = jnp.einsum("btd,df->btf", x, p["w_up"])
+    h = jax.nn.silu(g) * u
+    h = shard(h, "batch", "seq", "act_ff")
+    out = jnp.einsum("btf,fd->btd", h, p["w_down"])
+    return shard(out, "batch", "seq", "act_embed")
+
+
+# ---------------------------------------------------------------------------
+# MoE: top-k token-choice routing with BATCH-GROUP-LOCAL dispatch.
+#
+# Tokens are regrouped (N,D) -> (G, N/G, D) with G = the mesh's batch-shard
+# count, and routing positions/capacity are computed with per-group cumsums.
+# The scatter then lands in a group-local (G, E, C, D) buffer — batch-sharded
+# over `data`, so dispatch needs NO collectives (a global cumsum would force
+# GSPMD to replicate the buffers and all-reduce the scatter — measured 100x
+# worse on granite, whose 40 experts don't divide the model axis).
+#
+# Expert weights shard over `model` via EP when E divides (moonshot 64e) —
+# the combine gather then costs one all-gather of the out-buffer (the EP
+# "all-to-all") — and fall back to TP on the expert ff dim otherwise
+# (granite 40e), costing the standard Megatron down-proj all-reduce.
+# ---------------------------------------------------------------------------
+def moe_defs(cfg) -> dict:
+    D, F, E = cfg.d_model, cfg.d_ff, cfg.num_experts
+    e_ax = None if cfg.moe_tp_ff else "expert"
+    return {
+        "router": ParamDef((D, E), ("embed", None)),
+        "w_gate": ParamDef((E, D, F), (e_ax, "embed", "ff")),
+        "w_up": ParamDef((E, D, F), (e_ax, "embed", "ff")),
+        "w_down": ParamDef((E, F, D), (e_ax, "ff", "embed")),
+    }
+
+
+def _batch_groups(n_tokens: int) -> int:
+    """Batch-shard count from the ambient mesh (1 outside a mesh ctx)."""
+    from repro.dist.sharding import current_sharding
+    mesh, rules = current_sharding()
+    if mesh is None or rules is None:
+        return 1
+    spec = rules.lookup("batch")
+    if spec is None:
+        return 1
+    axes = (spec,) if isinstance(spec, str) else tuple(spec)
+    g = 1
+    for a in axes:
+        g *= mesh.shape.get(a, 1)
+    return g if n_tokens % g == 0 else 1
+
+
+def moe(cfg, p, x):
+    """x: (B,T,D) -> ((B,T,D), aux load-balance loss)."""
+    B, T, D = x.shape
+    E, K = cfg.num_experts, cfg.top_k
+    N = B * T
+    G = _batch_groups(N)
+    n = N // G                                           # tokens per group
+    xg = x.reshape(G, n, D)
+    xg = shard(xg, "batch", None, None)
+
+    logits = jnp.einsum("gnd,de->gne", xg.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_w, gate_i = jax.lax.top_k(probs, K)             # (G,n,K)
+    gate_w = gate_w / jnp.sum(gate_w, -1, keepdims=True)
+
+    # group-local capacity
+    C = max(1, int(n * K / E * cfg.capacity_factor))
+
+    # slot of each (token, choice) within its expert: per-choice exclusive
+    # cumsum over the GROUP-LOCAL token dim (k <= 8, tiny python loop)
+    pos = jnp.zeros((G, n, K), jnp.int32)
+    base = jnp.zeros((G, 1, E), jnp.int32)
+    for j in range(K):
+        oh = jax.nn.one_hot(gate_i[:, :, j], E, dtype=jnp.int32)  # (G,n,E)
+        within = jnp.cumsum(oh, axis=1) - oh                      # exclusive
+        pos = pos.at[:, :, j].set(jnp.take_along_axis(
+            within + base, gate_i[:, :, j:j + 1], axis=2)[:, :, 0])
+        base = base + jnp.sum(oh, axis=1, keepdims=True)
+    keep = pos < C
+    slot = jnp.where(keep, pos, C - 1)
+
+    # dispatch: group-local scatter into (G, E, C, D). All scatters/gathers
+    # are vmapped over G so the group axis is an explicit scatter BATCH
+    # dimension — GSPMD then partitions them cleanly over `data`; indexing
+    # G with an iota instead makes it all-reduce the whole buffer across
+    # the batch shards (measured ~10 GB/layer of pure waste).
+    w_in = jnp.where(keep, 1.0, 0.0).astype(x.dtype)
+    upd = (xg[:, :, None, :] * w_in[..., None]).reshape(G, n * K, D)
+    e_idx = gate_i.reshape(G, n * K)
+    s_idx = slot.reshape(G, n * K)
+    buf = jax.vmap(lambda e, s, u: jnp.zeros((E, C, D), x.dtype)
+                   .at[e, s].add(u))(e_idx, s_idx, upd)
+    if cfg.moe_tp_ff:
+        # expert FFN TP-sharded on ff: the buffer stays model-replicated;
+        # scatter/gather (fwd AND bwd) never cross the model axis.
+        buf = shard(buf, "batch", None, None, None)
+    else:
+        if cfg.moe_local_scatter:
+            # pin the scatter model-LOCAL (replicated over `model`,
+            # redundant but memory-bound and tiny), THEN slice to the EP
+            # sharding — GSPMD otherwise makes the scatter produce the
+            # E-sharded buffer directly and all-reduces the whole dispatch
+            # buffer to get there.
+            buf = shard(buf, "batch", None, None, None)
+        buf = shard(buf, "batch", "act_expert", None, None)
+
+    # expert FFN (weights EP-sharded over `model` when E divides, else the
+    # ff dim shards — see moe_defs axes)
+    g_ = jnp.einsum("gecd,edf->gecf", buf, p["w_gate"])
+    u = jnp.einsum("gecd,edf->gecf", buf, p["w_up"])
+    h = jax.nn.silu(g_) * u
+    out_buf = jnp.einsum("gecf,efd->gecd", h, p["w_down"])
+
+    # combine: scatter-BACK (not gather). Each slot knows its source token;
+    # every device scatters the slots it owns into a token-indexed buffer.
+    # With E sharded over `model` (EP) each rank contributes its experts'
+    # slots; with the ff-dim TP fallback each rank contributes partial sums
+    # — either way the cross-device reduction happens on the TOKEN-sized
+    # (G,n,D) tensor, not the kxcapacity_factor-larger dispatch buffer
+    # (gathering from the E-sharded buffer instead made GSPMD all-gather
+    # the whole thing: measured 50-100x more collective traffic).
+    flat_tok = jnp.broadcast_to(
+        jnp.arange(n, dtype=jnp.int32)[None, :, None], (G, n, K)
+    ).reshape(G, n * K)
+    keep_f = keep.reshape(G, n * K)
+    tok_of_slot = jax.vmap(lambda e, s, t: jnp.zeros((E, C), jnp.int32)
+                           .at[e, s].add(t))(
+        e_idx, s_idx, jnp.where(keep_f, flat_tok, 0))
+    gate_of_slot = jax.vmap(lambda e, s, g: jnp.zeros((E, C), jnp.float32)
+                            .at[e, s].add(g))(
+        e_idx, s_idx, (gate_w.reshape(G, n * K) * keep_f).astype(jnp.float32))
+    contrib = out_buf * gate_of_slot[..., None].astype(out_buf.dtype)
+    out_tokens = jax.vmap(lambda t, c: jnp.zeros((n, D), x.dtype)
+                          .at[t].add(c))(
+        tok_of_slot.reshape(G, E * C), contrib.reshape(G, E * C, D))
+    out = shard(out_tokens, "batch", None, None).reshape(B, T, D)
+
+    # switch-style load-balance aux loss
+    me = jnp.mean(probs, axis=(0, 1))                              # (E,)
+    fe = jnp.mean(jax.nn.one_hot(gate_i[..., 0], E, dtype=jnp.float32),
+                  axis=(0, 1))                                     # (E,)
+    aux = jnp.sum(me * fe) * E
+    return shard(out, "batch", "seq", "act_embed"), aux
+
+
+def ffn_defs(cfg) -> dict:
+    return moe_defs(cfg) if cfg.num_experts else mlp_defs(cfg)
+
+
+def ffn(cfg, p, x):
+    """Returns (out, aux_loss)."""
+    if cfg.num_experts:
+        return moe(cfg, p, x)
+    return mlp(cfg, p, x), jnp.float32(0.0)

@@ -1,0 +1,265 @@
+"""Model-level public API.
+
+  param_defs / init_params        declarative params (single sharding source)
+  loss_fn / make_train_step       training
+  prefill / decode_step           serving
+  input_specs / step_for_shape    allocation-free dry-run inputs (ShapeDtypeStruct)
+
+Every entry point is mesh-polymorphic: sharding comes from the ambient
+``use_sharding`` context plus the SpecDef/ParamDef logical axes, so the same
+step function deploys to any GeoFF platform (single host, one pod, multi-pod).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.dist import sharding as shd
+from repro.models import params as prm
+from repro.models import transformer as tfm
+from repro.models.transformer import SpecDef, _is_spec, cache_defs
+
+AUX_LOSS_WEIGHT = 0.01
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+def param_defs(cfg) -> dict:
+    return tfm.transformer_defs(cfg)
+
+
+def init_params(cfg, key):
+    return prm.init_params(param_defs(cfg), key, jnp.dtype(cfg.param_dtype))
+
+
+# ---------------------------------------------------------------------------
+# forward passes
+# ---------------------------------------------------------------------------
+def _ce_terms(cfg, params, x, labels):
+    """Cross-entropy pieces for hidden states x vs labels: (nll_sum, n_tok)."""
+    logits = tfm.unembed(cfg, params, x)
+    lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    mask = (labels >= 0).astype(jnp.float32)
+    labels_safe = jnp.maximum(labels, 0)
+    ll = jnp.take_along_axis(lp, labels_safe[..., None], axis=-1)[..., 0]
+    return -jnp.sum(ll * mask), jnp.sum(mask)
+
+
+def forward_train(cfg, params, batch):
+    """Returns (loss, metrics). Labels are pre-shifted by the data pipeline."""
+    p = tfm.cast_params(cfg, params)
+    x = tfm.embed_inputs(cfg, p, batch)
+    T = x.shape[1]
+    positions = jnp.arange(T, dtype=jnp.int32)
+    x, _, aux = tfm.run_blocks(cfg, p, x, positions, "train")
+    x = tfm.rmsnorm(x, p["final_norm"])
+    labels = batch["labels"]
+    if cfg.input_kind == "tokens+patches":
+        x = x[:, x.shape[1] - labels.shape[1]:, :]
+    Tl = labels.shape[1]
+    if cfg.ce_chunk and Tl > cfg.ce_chunk and Tl % cfg.ce_chunk == 0:
+        # seq-chunked CE: never materializes the full (B,T,V) float32 logits
+        c = cfg.ce_chunk
+        nll, ntok = jnp.float32(0.0), jnp.float32(0.0)
+        for i in range(Tl // c):
+            s, n = _ce_terms(cfg, p, x[:, i * c:(i + 1) * c, :],
+                             labels[:, i * c:(i + 1) * c])
+            nll, ntok = nll + s, ntok + n
+    else:
+        nll, ntok = _ce_terms(cfg, p, x, labels)
+    ce = nll / jnp.maximum(ntok, 1.0)
+    loss = ce + AUX_LOSS_WEIGHT * aux
+    return loss, {"ce": ce, "aux": aux, "tokens": ntok.astype(jnp.int32)}
+
+
+def prefill(cfg, params, batch):
+    """Full-sequence forward that also returns the layer caches.
+
+    Returns (last_logits (B,V) float32, caches). Cache sequence capacity is
+    the prompt length; serving pads to the generation budget
+    (serving/engine.pad_cache).
+    """
+    p = tfm.cast_params(cfg, params)
+    x = tfm.embed_inputs(cfg, p, batch)
+    T = x.shape[1]
+    positions = jnp.arange(T, dtype=jnp.int32)
+    mode = "prefill" if cfg.supports_decode else "train"  # encoders: no cache
+    x, caches, _ = tfm.run_blocks(cfg, p, x, positions, mode)
+    x = tfm.rmsnorm(x, p["final_norm"])
+    logits = tfm.unembed(cfg, p, x[:, -1:, :])
+    return logits[:, 0, :].astype(jnp.float32), (caches or {})
+
+
+def decode_step(cfg, params, token, caches, cur_index):
+    """One autoregressive step.
+
+    token: (B, 1) int32; cur_index: scalar int32 — the absolute position the
+    new token occupies (its KV lands at ``cur_index % window`` for local
+    layers). Returns (logits (B, V) float32, new_caches).
+    """
+    p = tfm.cast_params(cfg, params)
+    x = tfm.embed_inputs(cfg, p, {"tokens": token})
+    positions = jnp.full((1,), cur_index, dtype=jnp.int32)
+    x, caches, _ = tfm.run_blocks(cfg, p, x, positions, "decode", caches,
+                                  cur_index)
+    x = tfm.rmsnorm(x, p["final_norm"])
+    logits = tfm.unembed(cfg, p, x)
+    return logits[:, 0, :].astype(jnp.float32), caches
+
+
+# ---------------------------------------------------------------------------
+# train step factory
+# ---------------------------------------------------------------------------
+def make_train_step(cfg, optimizer, num_microbatches: int = 1):
+    """(params, opt_state, batch, step) -> (params, opt_state, metrics).
+
+    ``num_microbatches > 1`` runs gradient accumulation as a scan over
+    microbatches (memory, not throughput).
+    """
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(
+            lambda pp: forward_train(cfg, pp, batch), has_aux=True)(params)
+
+    def train_step(params, opt_state, batch, step):
+        if num_microbatches == 1:
+            (loss, metrics), grads = grads_of(params, batch)
+        else:
+            def mb(carry, mbatch):
+                gsum = carry
+                (l, m), g = grads_of(params, mbatch)
+                return jax.tree_util.tree_map(jnp.add, gsum, g), (l, m)
+
+            split = jax.tree_util.tree_map(
+                lambda x: x.reshape((num_microbatches,
+                                     x.shape[0] // num_microbatches)
+                                    + x.shape[1:]), batch)
+            zeros = jax.tree_util.tree_map(
+                lambda x: jnp.zeros(x.shape, jnp.float32), params)
+            gsum, (ls, ms) = jax.lax.scan(mb, zeros, split)
+            grads = jax.tree_util.tree_map(
+                lambda g: g / num_microbatches, gsum)
+            loss = jnp.mean(ls)
+            metrics = jax.tree_util.tree_map(lambda x: x[-1], ms)
+        params, opt_state, gnorm = optimizer.update(params, opt_state, grads,
+                                                    step)
+        metrics = dict(metrics, loss=loss, grad_norm=gnorm)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# microbatched training (production path): the jit'd unit is one microbatch
+# grad step; the optimizer applies on the accumulation boundary. Two small
+# programs instead of one giant scan keeps the dry-run HLO exact (XLA counts
+# while-loop bodies once) and matches how the GeoFF trainer choreographs
+# steps (data prefetch overlaps the previous micro step).
+# ---------------------------------------------------------------------------
+def make_micro_step(cfg):
+    """(params, grad_acc, batch_micro) -> (grad_acc', (loss, metrics)).
+
+    grad_acc mirrors params in float32 and is donated; grads arrive already
+    reduced over the batch axes (pjit inserts the reduce-scatter/all-reduce
+    for the sharded param axes automatically).
+    """
+
+    def micro_step(params, grad_acc, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: forward_train(cfg, p, batch), has_aux=True)(params)
+        grad_acc = jax.tree_util.tree_map(
+            lambda a, g: a + g.astype(jnp.float32), grad_acc, grads)
+        return grad_acc, (loss, metrics)
+
+    return micro_step
+
+
+def make_apply_step(cfg, optimizer, num_microbatches: int):
+    """(params, opt_state, grad_acc, step) -> (params', opt_state', zeros)."""
+
+    def apply_step(params, opt_state, grad_acc, step):
+        grads = jax.tree_util.tree_map(
+            lambda g: g / float(num_microbatches), grad_acc)
+        params, opt_state, gnorm = optimizer.update(params, opt_state, grads,
+                                                    step)
+        zeros = jax.tree_util.tree_map(jnp.zeros_like, grad_acc)
+        return params, opt_state, zeros, gnorm
+
+    return apply_step
+
+
+def grad_acc_defs(pdefs):
+    from repro.models.params import ParamDef
+    return jax.tree_util.tree_map(
+        lambda d: ParamDef(d.shape, d.axes, "zeros"), pdefs,
+        is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+# ---------------------------------------------------------------------------
+# spec helpers (SpecDef / ParamDef -> ShapeDtypeStruct / PartitionSpec)
+# ---------------------------------------------------------------------------
+def spec_structs(defs, rules=None, mesh=None):
+    def mk(d: SpecDef):
+        sh = None
+        if rules is not None and mesh is not None:
+            sh = NamedSharding(mesh, shd.pspec_for(d.shape, d.axes, rules, mesh))
+        return jax.ShapeDtypeStruct(d.shape, jnp.dtype(d.dtype), sharding=sh)
+    return jax.tree_util.tree_map(mk, defs, is_leaf=_is_spec)
+
+
+def spec_pspecs(defs, rules, mesh):
+    return jax.tree_util.tree_map(
+        lambda d: shd.pspec_for(d.shape, d.axes, rules, mesh), defs,
+        is_leaf=_is_spec)
+
+
+def spec_zeros(defs):
+    return jax.tree_util.tree_map(
+        lambda d: jnp.zeros(d.shape, jnp.dtype(d.dtype)), defs,
+        is_leaf=_is_spec)
+
+
+# ---------------------------------------------------------------------------
+# batch / input specs per (arch x shape) cell
+# ---------------------------------------------------------------------------
+def batch_defs(cfg, shape) -> dict:
+    """SpecDefs for one batch of the given ShapeSpec (train/prefill kinds)."""
+    B, T = shape.global_batch, shape.seq_len
+    cdt = cfg.compute_dtype
+    if cfg.input_kind == "frames":
+        d = {"frames": SpecDef((B, T, cfg.d_model), ("batch", "seq", None), cdt)}
+        if shape.kind == "train":
+            d["labels"] = SpecDef((B, T), ("batch", "seq"), "int32")
+        return d
+    if cfg.input_kind == "tokens+patches":
+        P_ = cfg.num_patches
+        Ttxt = T - P_
+        d = {"tokens": SpecDef((B, Ttxt), ("batch", "seq"), "int32"),
+             "patches": SpecDef((B, P_, cfg.d_model), ("batch", "seq", None), cdt)}
+        if shape.kind == "train":
+            d["labels"] = SpecDef((B, Ttxt), ("batch", "seq"), "int32")
+        return d
+    d = {"tokens": SpecDef((B, T), ("batch", "seq"), "int32")}
+    if shape.kind == "train":
+        d["labels"] = SpecDef((B, T), ("batch", "seq"), "int32")
+    return d
+
+
+def decode_input_defs(cfg, shape) -> dict:
+    """SpecDefs for one decode step: token + caches at capacity seq_len."""
+    B, T = shape.global_batch, shape.seq_len
+    return {"token": SpecDef((B, 1), ("batch", "seq"), "int32"),
+            "caches": cache_defs(cfg, B, T),
+            "cur_index": SpecDef((), (), "int32")}
+
+
+def input_specs(cfg, shape, rules=None, mesh=None) -> dict:
+    """ShapeDtypeStruct stand-ins for every input of the cell's step fn."""
+    if shape.kind == "decode":
+        return spec_structs(decode_input_defs(cfg, shape), rules, mesh)
+    return spec_structs(batch_defs(cfg, shape), rules, mesh)

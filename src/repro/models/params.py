@@ -1,0 +1,108 @@
+"""Declarative parameter definitions.
+
+A model is described once as a pytree of ``ParamDef`` (shape + logical axes +
+init); materialized params, abstract ShapeDtypeStructs (for the allocation-free
+dry-run), and PartitionSpecs are all derived from that single source, so the
+sharding metadata can never diverge from the parameter structure.
+"""
+from __future__ import annotations
+
+import hashlib
+import math
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+
+from repro.dist.sharding import pspec_for
+
+
+@dataclass(frozen=True)
+class ParamDef:
+    shape: tuple
+    axes: tuple               # logical axis names, len == len(shape)
+    init: str = "normal"      # normal | zeros | ones | embed | lru_lambda | ssd_alog | dt_bias
+    scale: Optional[float] = None
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _is_def(x):
+    return isinstance(x, ParamDef)
+
+
+def _path_key(base_key, path):
+    s = jax.tree_util.keystr(path)
+    h = int.from_bytes(hashlib.sha256(s.encode()).digest()[:4], "big")
+    return jax.random.fold_in(base_key, h)
+
+
+def _materialize(d: ParamDef, key, dtype):
+    shape = d.shape
+    if d.init == "zeros":
+        return jnp.zeros(shape, dtype)
+    if d.init == "ones":
+        return jnp.ones(shape, dtype)
+    if d.init == "dt_bias":
+        # mamba2 dt bias: softplus^-1 of dt in [1e-3, 1e-1]
+        u = jax.random.uniform(key, shape, jnp.float32,
+                               math.log(1e-3), math.log(1e-1))
+        dt = jnp.exp(u)
+        return (dt + jnp.log(-jnp.expm1(-dt))).astype(dtype)
+    if d.init == "ssd_alog":
+        a = jax.random.uniform(key, shape, jnp.float32, 1.0, 16.0)
+        return jnp.log(a).astype(dtype)
+    if d.init == "lru_lambda":
+        # RG-LRU Lambda: sigmoid(L)^c in [0.9, 0.999] at c=8
+        r = jax.random.uniform(key, shape, jnp.float32, 0.9, 0.999)
+        a = r ** (1.0 / 8.0)
+        return jnp.log(a / (1 - a)).astype(dtype)
+    scale = d.scale
+    if scale is None:
+        # fan-in variance scaling; the stacked "layers" axis (scan over
+        # cycles) is NOT a fan-in dim — skipping it matters: with it, a
+        # 2-cycle model initializes every weight ~1/sqrt(2), saturating
+        # gates (found via NaN grads in the RG-LRU smoke).
+        eff = shape[1:] if (d.axes and d.axes[0] == "layers") else shape
+        fan_in = eff[0] if len(eff) >= 1 else 1
+        if d.init == "embed":
+            scale = 1.0
+        else:
+            scale = 1.0 / math.sqrt(max(1, fan_in))
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def init_params(defs, key, dtype=jnp.float32):
+    return jax.tree_util.tree_map_with_path(
+        lambda p, d: _materialize(d, _path_key(key, p), dtype),
+        defs, is_leaf=_is_def)
+
+
+def abstract_params(defs, dtype=jnp.float32, rules=None, mesh=None):
+    """ShapeDtypeStructs (optionally with shardings) — dry-run inputs."""
+    def mk(d: ParamDef):
+        sh = None
+        if rules is not None and mesh is not None:
+            sh = NamedSharding(mesh, pspec_for(d.shape, d.axes, rules, mesh))
+        return jax.ShapeDtypeStruct(d.shape, dtype, sharding=sh)
+    return jax.tree_util.tree_map(mk, defs, is_leaf=_is_def)
+
+
+def param_pspecs(defs, rules, mesh):
+    return jax.tree_util.tree_map(
+        lambda d: pspec_for(d.shape, d.axes, rules, mesh), defs, is_leaf=_is_def)
+
+
+def param_count(defs) -> int:
+    return sum(math.prod(d.shape)
+               for d in jax.tree_util.tree_leaves(defs, is_leaf=_is_def))
+
+
+def stack_defs(defs, n: int):
+    """Stack a block's defs along a leading `layers` axis (for scan)."""
+    return jax.tree_util.tree_map(
+        lambda d: ParamDef((n,) + d.shape, ("layers",) + d.axes, d.init, d.scale),
+        defs, is_leaf=_is_def)

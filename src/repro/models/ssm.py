@@ -1,0 +1,196 @@
+"""Mamba-2 block: SSD (state-space duality) chunked algorithm.
+
+Train/prefill use the chunked SSD decomposition (intra-chunk quadratic term
++ inter-chunk state scan, arXiv:2405.21060 §6); decode is the O(1) recurrent
+update. The pure-jnp path here is also the oracle for the Pallas
+`ssd_scan` kernel (kernels/ssd_scan/ref.py re-exports `ssd_chunked`).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import shard
+from repro.models.layers import rmsnorm
+from repro.models.params import ParamDef
+
+
+def ssd_defs(cfg) -> dict:
+    D = cfg.d_model
+    d_inner = cfg.d_inner
+    N = cfg.ssm_state
+    H = cfg.ssm_heads
+    conv_ch = d_inner + 2 * N  # x, B, C all pass the causal conv
+    d_in_proj = 2 * d_inner + 2 * N + H
+    return {
+        "norm": ParamDef((D,), ("embed",), "zeros"),
+        "in_proj": ParamDef((D, d_in_proj), ("embed", "inner")),
+        "conv_w": ParamDef((cfg.conv_width, conv_ch), ("conv", "inner")),
+        "conv_b": ParamDef((conv_ch,), ("inner",), "zeros"),
+        "A_log": ParamDef((H,), (None,), "ssd_alog"),
+        "D": ParamDef((H,), (None,), "ones"),
+        "dt_bias": ParamDef((H,), (None,), "dt_bias"),
+        "norm_y": ParamDef((d_inner,), ("inner",), "zeros"),
+        "out_proj": ParamDef((d_inner, D), ("inner", "embed")),
+    }
+
+
+def causal_conv(x, w, b):
+    """Depthwise causal conv. x: (B,L,C), w: (cw,C). Returns (B,L,C)."""
+    cw = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (cw - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(cw):
+        out = out + pad[:, i:i + x.shape[1], :] * w[i][None, None, :]
+    return jax.nn.silu(out + b[None, None, :])
+
+
+def conv_step(x_t, conv_cache, w, b):
+    """One decode step. x_t: (B,C); conv_cache: (B,cw-1,C). Returns (y, cache)."""
+    window = jnp.concatenate([conv_cache, x_t[:, None, :]], axis=1)  # (B,cw,C)
+    y = jnp.einsum("bwc,wc->bc", window, w) + b[None, :]
+    return jax.nn.silu(y), window[:, 1:, :]
+
+
+def ssd_chunked(x, dt, A_log, B_mat, C_mat, chunk, init_state=None):
+    """Chunked SSD. Shapes:
+      x: (B,L,H,P)  dt: (B,L,H)  A_log: (H,)  B_mat/C_mat: (B,L,N)
+    Returns y: (B,L,H,P), final_state: (B,H,P,N).
+    """
+    Bb, L, H, Pp = x.shape
+    N = B_mat.shape[-1]
+    Q = min(chunk, L)
+    assert L % Q == 0, (L, Q)
+    nc = L // Q
+    f32 = jnp.float32
+
+    a = -jnp.exp(A_log.astype(f32))                     # (H,)
+    dA = a[None, None, :] * dt.astype(f32)              # (B,L,H), <= 0
+    xr = x.reshape(Bb, nc, Q, H, Pp)
+    dtr = dt.reshape(Bb, nc, Q, H).astype(f32)
+    Br = B_mat.reshape(Bb, nc, Q, N).astype(f32)
+    Cr = C_mat.reshape(Bb, nc, Q, N).astype(f32)
+    dAr = dA.reshape(Bb, nc, Q, H)
+    cum = jnp.cumsum(dAr, axis=2)                       # (B,nc,Q,H)
+
+    # intra-chunk (quadratic within chunk). Mask BEFORE exp: for t < s the
+    # raw diff is positive and can overflow; exp(overflow) * 0 would push
+    # NaNs through the backward pass.
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # (B,nc,Q,Q,H) t,s
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    Lmat = jnp.exp(jnp.where(tri[None, None, :, :, None], diff, -1e30))
+    CB = jnp.einsum("bcqn,bcsn->bcqs", Cr, Br)
+    # G[b,c,t,s,h] = CB[b,c,t,s] * Lmat[b,c,t,s,h] * dt[b,c,s,h]
+    G = CB[..., None] * Lmat * dtr[:, :, None, :, :]
+    y_intra = jnp.einsum("bcqsh,bcshp->bcqhp", G, xr.astype(f32))
+
+    # chunk states: S_c = sum_s exp(cum[-1]-cum[s]) dt_s B_s x_s
+    w_end = jnp.exp(cum[:, :, -1:, :] - cum) * dtr       # (B,nc,Q,H)
+    S_c = jnp.einsum("bcsh,bcsn,bcshp->bchpn", w_end, Br, xr.astype(f32))
+
+    # inter-chunk recurrence over nc
+    decay_chunk = jnp.exp(cum[:, :, -1, :])              # (B,nc,H)
+    h0 = (jnp.zeros((Bb, H, Pp, N), f32) if init_state is None
+          else init_state.astype(f32))
+
+    def step(h, inp):
+        dc, s = inp                                       # dc:(B,H), s:(B,H,P,N)
+        h_new = h * dc[:, :, None, None] + s
+        return h_new, h
+
+    dc_seq = jnp.moveaxis(decay_chunk, 1, 0)             # (nc,B,H)
+    s_seq = jnp.moveaxis(S_c, 1, 0)                      # (nc,B,H,P,N)
+    h_final, h_prevs = jax.lax.scan(step, h0, (dc_seq, s_seq))
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)                # (B,nc,H,P,N) state before chunk
+
+    # inter-chunk contribution: C_t · (h_prev * exp(cum[t]))
+    y_inter = jnp.einsum("bcqn,bchpn,bcqh->bcqhp", Cr, h_prevs, jnp.exp(cum))
+
+    y = (y_intra + y_inter).reshape(Bb, L, H, Pp)
+    return y.astype(x.dtype), h_final
+
+
+def ssd_step(x_t, dt_t, A_log, B_t, C_t, state):
+    """O(1) decode update.
+      x_t:(B,H,P) dt_t:(B,H) B_t/C_t:(B,N) state:(B,H,P,N)
+    Returns (y:(B,H,P), new_state)."""
+    f32 = jnp.float32
+    a = -jnp.exp(A_log.astype(f32))
+    da = jnp.exp(a[None, :] * dt_t.astype(f32))                     # (B,H)
+    upd = jnp.einsum("bh,bn,bhp->bhpn", dt_t.astype(f32),
+                     B_t.astype(f32), x_t.astype(f32))
+    new = state.astype(f32) * da[:, :, None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", new, C_t.astype(f32))
+    return y.astype(x_t.dtype), new.astype(state.dtype)
+
+
+def ssd_block(cfg, p, x, mode, cache=None, use_pallas=False):
+    """Full mamba2 block (norm -> in_proj -> conv -> SSD -> gated norm -> out).
+
+    cache (decode): {"conv": (B,cw-1,conv_ch), "state": (B,H,P,N)}.
+    Returns (out, new_cache) — new_cache also produced by prefill.
+    """
+    d_inner, N, H, Pp = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    Bb, T, D = x.shape
+    u = rmsnorm(x, p["norm"])
+    zxbcdt = jnp.einsum("btd,de->bte", u, p["in_proj"])
+    z = zxbcdt[..., :d_inner]
+    xBC = zxbcdt[..., d_inner:2 * d_inner + 2 * N]
+    dt = zxbcdt[..., 2 * d_inner + 2 * N:]
+
+    if mode in ("train", "prefill"):
+        xBC = causal_conv(xBC, p["conv_w"], p["conv_b"])
+        xs = xBC[..., :d_inner].reshape(Bb, T, H, Pp)
+        Bm = xBC[..., d_inner:d_inner + N]
+        Cm = xBC[..., d_inner + N:]
+        dt = jax.nn.softplus(dt + p["dt_bias"][None, None, :])
+        xs = shard(xs, "batch", "seq", "act_inner", None)
+        # pad T to a chunk multiple; zero-dt padding is EXACT for SSD
+        # (state multiplies by exp(0)=1 and accumulates dt*B*x = 0)
+        Q = min(cfg.ssm_chunk, T)
+        pad = (-T) % Q
+        if pad:
+            xs_p = jnp.pad(xs, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            dt_p = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+            Bm_p = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+            Cm_p = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+        else:
+            xs_p, dt_p, Bm_p, Cm_p = xs, dt, Bm, Cm
+        if use_pallas:
+            from repro.kernels import ops as kops
+            y, state = kops.ssd_scan(xs_p, dt_p, p["A_log"], Bm_p, Cm_p, Q)
+        else:
+            y, state = ssd_chunked(xs_p, dt_p, p["A_log"], Bm_p, Cm_p, Q)
+        if pad:
+            y = y[:, :T]
+        y = y + xs * p["D"][None, None, :, None]
+        new_cache = None
+        if mode == "prefill":
+            # conv tail for continuing decode
+            raw = jnp.einsum("btd,de->bte", u, p["in_proj"])[
+                ..., d_inner:2 * d_inner + 2 * N]
+            tail = raw[:, -(cfg.conv_width - 1):, :]
+            new_cache = {"conv": tail, "state": state}
+    else:  # decode, T == 1
+        xBC_t = xBC[:, 0, :]
+        xc, conv_cache = conv_step(xBC_t, cache["conv"], p["conv_w"], p["conv_b"])
+        xs = xc[:, :d_inner].reshape(Bb, H, Pp)
+        Bm = xc[:, d_inner:d_inner + N]
+        Cm = xc[:, d_inner + N:]
+        dt_t = jax.nn.softplus(dt[:, 0, :] + p["dt_bias"][None, :])
+        y, state = ssd_step(xs, dt_t, p["A_log"], Bm, Cm, cache["state"])
+        y = (y + xs * p["D"][None, :, None])[:, None]          # (B,1,H,P)
+        new_cache = {"conv": conv_cache, "state": state}
+
+    y = y.reshape(Bb, T, d_inner)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm_y"])
+    out = jnp.einsum("bte,ed->btd", y, p["out_proj"])
+    return shard(out, "batch", "seq", "act_embed"), new_cache
+
+
+def ssd_cache_specs(cfg, batch):
+    conv_ch = cfg.d_inner + 2 * cfg.ssm_state
+    return {
+        "conv": (batch, cfg.conv_width - 1, conv_ch),
+        "state": (batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state),
+    }

@@ -1,0 +1,268 @@
+"""Unified backbone covering all ten assigned architectures.
+
+A model is ``embed -> [blocks cycled from cfg.block_pattern] -> norm -> head``.
+Block kinds: "global"/"local" attention (GQA, qk-norm, sliding window),
+"rglru" (griffin temporal mixing), "ssd" (mamba-2). Dense/MoE FFN is attached
+to every block unless ``d_ff == 0`` (mamba2 blocks are mixer-only).
+
+Depth handling: layers are grouped into *cycles* of ``len(block_pattern)``
+and scanned with ``jax.lax.scan`` over stacked parameters, so HLO size is
+independent of depth (compile time is the binding constraint for the 62-cell
+dry-run sweep). Remainder layers (``num_layers % pattern``) run unscanned.
+
+Modality frontends are stubs per the assignment: "frames" (hubert) and
+"tokens+patches" (llava) models consume precomputed embeddings through a
+linear adapter.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import shard
+from repro.models.griffin import rglru_block, rglru_cache_specs, rglru_defs
+from repro.models.layers import (attention, attn_cache_shape, attn_defs,
+                                 block_cfg_for, ffn, ffn_defs, rmsnorm)
+from repro.models.params import ParamDef, stack_defs
+from repro.models.ssm import ssd_block, ssd_cache_specs, ssd_defs
+
+
+# ---------------------------------------------------------------------------
+# parameter structure
+# ---------------------------------------------------------------------------
+def block_defs(cfg, kind: str) -> dict:
+    bc = block_cfg_for(cfg, kind)
+    D = cfg.d_model
+    if bc.kind == "ssd":
+        d = {"mixer": ssd_defs(cfg)}          # ssd blocks self-norm
+    elif bc.kind == "rglru":
+        d = {"norm1": ParamDef((D,), ("embed",), "zeros"),
+             "mixer": rglru_defs(cfg)}
+    else:
+        d = {"norm1": ParamDef((D,), ("embed",), "zeros"),
+             "mixer": attn_defs(cfg)}
+    if cfg.d_ff:
+        d["norm2"] = ParamDef((D,), ("embed",), "zeros")
+        d["ffn"] = ffn_defs(cfg)
+    return d
+
+
+def transformer_defs(cfg) -> dict:
+    D, V = cfg.d_model, cfg.vocab_size
+    pattern = cfg.block_pattern
+    n_cyc, n_rem = divmod(cfg.num_layers, len(pattern))
+    blocks: dict = {}
+    if n_cyc:
+        blocks["cycle"] = {
+            f"p{j}": stack_defs(block_defs(cfg, k), n_cyc)
+            for j, k in enumerate(pattern)}
+    rem_kinds = cfg.layer_kinds()[n_cyc * len(pattern):]
+    for i, k in enumerate(rem_kinds):
+        blocks[f"rem{i}"] = block_defs(cfg, k)
+
+    d: dict = {"blocks": blocks,
+               "final_norm": ParamDef((D,), ("embed",), "zeros")}
+    if cfg.input_kind == "frames":
+        d["in_proj"] = ParamDef((D, D), ("embed", None))
+        d["head"] = ParamDef((D, V), ("embed", "vocab"))
+    else:
+        d["embed"] = ParamDef((V, D), ("vocab", "embed"), "embed")
+        if cfg.input_kind == "tokens+patches":
+            d["patch_proj"] = ParamDef((D, D), ("embed", None))
+        if not cfg.tie_embeddings:
+            d["head"] = ParamDef((D, V), ("embed", "vocab"))
+    return d
+
+
+# ---------------------------------------------------------------------------
+# one block
+# ---------------------------------------------------------------------------
+def apply_block(cfg, kind, p, x, positions, mode, cache=None, cur_index=None):
+    """Returns (x, new_cache, aux_loss)."""
+    bc = block_cfg_for(cfg, kind)
+    if bc.kind == "attn":
+        h, c = attention(cfg, bc, p["mixer"], rmsnorm(x, p["norm1"]),
+                         positions, mode, cache, cur_index)
+    elif bc.kind == "rglru":
+        h, c = rglru_block(cfg, p["mixer"], rmsnorm(x, p["norm1"]), mode,
+                           cache, cfg.use_pallas)
+    else:
+        h, c = ssd_block(cfg, p["mixer"], x, mode, cache, cfg.use_pallas)
+    x = x + h
+    aux = jnp.float32(0.0)
+    if "ffn" in p:
+        f, aux = ffn(cfg, p["ffn"], rmsnorm(x, p["norm2"]))
+        x = x + f
+    return x, c, aux
+
+
+# ---------------------------------------------------------------------------
+# the stack (scan over cycles + unscanned remainder)
+# ---------------------------------------------------------------------------
+def _cycle_body(cfg, pattern, positions, mode, cur_index, x, p_sl, c_sl):
+    aux_total = jnp.float32(0.0)
+    new_c = {}
+    for j, kind in enumerate(pattern):
+        cj = None if c_sl is None else c_sl[f"p{j}"]
+        x, cj_new, aux = apply_block(cfg, kind, p_sl[f"p{j}"], x, positions,
+                                     mode, cj, cur_index)
+        if mode != "train":
+            new_c[f"p{j}"] = cj_new
+        aux_total = aux_total + aux
+    return x, (new_c if mode != "train" else None), aux_total
+
+
+def run_blocks(cfg, params, x, positions, mode, caches=None, cur_index=None):
+    """Returns (x, new_caches, aux_total)."""
+    pattern = cfg.block_pattern
+    n_cyc = cfg.num_layers // len(pattern)
+    blocks_p = params["blocks"]
+    new_caches: dict = {}
+    aux_total = jnp.float32(0.0)
+
+    if "cycle" in blocks_p:
+        cyc_caches = None if caches is None else caches.get("cycle")
+
+        def body(carry, xs):
+            p_sl, c_sl = xs
+            x, new_c, aux = _cycle_body(cfg, pattern, positions, mode,
+                                        cur_index, carry, p_sl, c_sl)
+            return x, (new_c, aux)
+
+        if cfg.remat == "full":
+            body = jax.checkpoint(body, policy=None)
+        elif cfg.remat == "dots":
+            body = jax.checkpoint(
+                body,
+                policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+
+        xs = (blocks_p["cycle"], cyc_caches)
+        if cfg.scan_layers:
+            # scan requires every xs leaf to carry the cycle axis; a bare
+            # None (cyc_caches in train) is an empty pytree node, so it's ok.
+            x, (cyc_new, auxs) = jax.lax.scan(body, x, xs, length=n_cyc)
+            aux_total = aux_total + jnp.sum(auxs)
+        else:
+            # Unrolled: same stacked param structure, python loop + index.
+            # Exact XLA flop/collective accounting (the dry-run path).
+            cyc_list, aux_list = [], []
+            for i in range(n_cyc):
+                xs_i = jax.tree_util.tree_map(lambda a: a[i], xs)
+                x, (c_i, aux_i) = body(x, xs_i)
+                cyc_list.append(c_i)
+                aux_list.append(aux_i)
+            cyc_new = None
+            if mode != "train":
+                cyc_new = jax.tree_util.tree_map(
+                    lambda *ls: jnp.stack(ls), *cyc_list)
+            aux_total = aux_total + sum(aux_list)
+        if mode != "train":
+            new_caches["cycle"] = cyc_new
+
+    rem_kinds = cfg.layer_kinds()[n_cyc * len(pattern):]
+    for i, kind in enumerate(rem_kinds):
+        ci = None if caches is None else caches.get(f"rem{i}")
+        x, c_new, aux = apply_block(cfg, kind, blocks_p[f"rem{i}"], x,
+                                    positions, mode, ci, cur_index)
+        if mode != "train":
+            new_caches[f"rem{i}"] = c_new
+        aux_total = aux_total + aux
+    return x, (new_caches if mode != "train" else None), aux_total
+
+
+# ---------------------------------------------------------------------------
+# embedding / head
+# ---------------------------------------------------------------------------
+def embed_inputs(cfg, params, batch):
+    """Returns x: (B, T, D) in compute dtype."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    if cfg.input_kind == "frames":
+        x = batch["frames"].astype(cdt)
+        x = jnp.einsum("btd,de->bte", x, params["in_proj"])
+    elif cfg.input_kind == "tokens+patches" and "patches" in batch:
+        tok = jnp.take(params["embed"], batch["tokens"], axis=0)
+        pat = jnp.einsum("bpd,de->bpe", batch["patches"].astype(cdt),
+                         params["patch_proj"])
+        x = jnp.concatenate([pat, tok], axis=1)
+    else:
+        x = jnp.take(params["embed"], batch["tokens"], axis=0)
+    return shard(x.astype(cdt), "batch", "seq", "act_embed")
+
+
+def unembed(cfg, params, x):
+    """x: (B,T,D) -> logits (B,T,V) in compute dtype (+softcap)."""
+    if "head" in params:
+        logits = jnp.einsum("btd,dv->btv", x, params["head"])
+    else:
+        logits = jnp.einsum("btd,vd->btv", x, params["embed"])
+    if cfg.logits_softcap:
+        c = cfg.logits_softcap
+        logits = c * jnp.tanh(logits.astype(jnp.float32) / c)
+    return shard(logits, "batch", "seq", "act_vocab")
+
+
+def cast_params(cfg, params):
+    """Matmul weights (ndim>=2) -> compute dtype; vectors stay float32
+    (norm scales, A_log/lam/dt_bias gates are precision-sensitive)."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+
+    def cast(x):
+        return x.astype(cdt) if x.ndim >= 2 else x.astype(jnp.float32)
+    return jax.tree_util.tree_map(cast, params)
+
+
+# ---------------------------------------------------------------------------
+# cache structure (SpecDefs mirror forward()'s cache pytree exactly)
+# ---------------------------------------------------------------------------
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class SpecDef:
+    shape: tuple
+    axes: tuple
+    dtype: str = "bfloat16"
+
+
+def _is_spec(x):
+    return isinstance(x, SpecDef)
+
+
+def _block_cache_defs(cfg, kind, batch, seq_len):
+    bc = block_cfg_for(cfg, kind)
+    cdt = cfg.compute_dtype
+    if bc.kind == "attn":
+        sh = attn_cache_shape(cfg, bc, batch, seq_len)
+        ax = ("batch", "cache_seq", "act_kv", None)
+        return (SpecDef(sh, ax, cdt), SpecDef(sh, ax, cdt))
+    if bc.kind == "rglru":
+        s = rglru_cache_specs(cfg, batch)
+        return {"conv": SpecDef(s["conv"], ("batch", None, "act_inner"), cdt),
+                "h": SpecDef(s["h"], ("batch", "act_inner"), "float32")}
+    s = ssd_cache_specs(cfg, batch)
+    return {"conv": SpecDef(s["conv"], ("batch", None, "act_inner"), cdt),
+            "state": SpecDef(s["state"], ("batch", "act_inner", None, None),
+                             "float32")}
+
+
+def _stack_spec(d: SpecDef, n: int) -> SpecDef:
+    return SpecDef((n,) + d.shape, ("layers",) + d.axes, d.dtype)
+
+
+def cache_defs(cfg, batch, seq_len) -> dict:
+    pattern = cfg.block_pattern
+    n_cyc, _ = divmod(cfg.num_layers, len(pattern))
+    out: dict = {}
+    if n_cyc:
+        out["cycle"] = {
+            f"p{j}": jax.tree_util.tree_map(
+                lambda d: _stack_spec(d, n_cyc),
+                _block_cache_defs(cfg, k, batch, seq_len), is_leaf=_is_spec)
+            for j, k in enumerate(pattern)}
+    rem_kinds = cfg.layer_kinds()[n_cyc * len(pattern):]
+    for i, k in enumerate(rem_kinds):
+        out[f"rem{i}"] = _block_cache_defs(cfg, k, batch, seq_len)
+    return out

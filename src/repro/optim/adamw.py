@@ -1,0 +1,95 @@
+"""AdamW with warmup+cosine schedule and global-norm clipping.
+
+Self-contained (no optax dependency). State is {m, v, count}; m/v mirror the
+parameter pytree (same logical axes -> same sharding), so the optimizer adds
+exactly 2x parameter bytes, FSDP/TP-sharded identically to the params.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import ParamDef
+
+
+def cosine_schedule(step, *, peak_lr, warmup_steps, total_steps,
+                    final_frac=0.1):
+    step = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+    warm = peak_lr * (step + 1.0) / max(1, warmup_steps)
+    t = jnp.clip((step - warmup_steps) / max(1, total_steps - warmup_steps),
+                 0.0, 1.0)
+    cos = peak_lr * (final_frac + (1 - final_frac) * 0.5 *
+                     (1.0 + jnp.cos(jnp.pi * t)))
+    return jnp.where(step < warmup_steps, warm, cos)
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+class AdamW:
+    def __init__(self, cfg: AdamWConfig = AdamWConfig()):
+        self.cfg = cfg
+
+    # -- state ---------------------------------------------------------------
+    def init(self, params):
+        zeros = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return {"m": zeros,
+                "v": jax.tree_util.tree_map(jnp.copy, zeros),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def state_defs(self, pdefs):
+        """ParamDef pytree for the opt state (dry-run ShapeDtypeStructs)."""
+        f32 = jax.tree_util.tree_map(
+            lambda d: ParamDef(d.shape, d.axes, "zeros"), pdefs,
+            is_leaf=lambda x: isinstance(x, ParamDef))
+        return {"m": f32, "v": jax.tree_util.tree_map(lambda d: d, f32),
+                "count": ParamDef((), (), "zeros")}
+
+    # -- update ----------------------------------------------------------------
+    def update(self, params, state, grads, step):
+        c = self.cfg
+        gnorm = jnp.sqrt(sum(
+            jnp.sum(jnp.square(g.astype(jnp.float32)))
+            for g in jax.tree_util.tree_leaves(grads)))
+        scale = jnp.minimum(1.0, c.clip_norm / (gnorm + 1e-9))
+        lr = cosine_schedule(step, peak_lr=c.peak_lr,
+                             warmup_steps=c.warmup_steps,
+                             total_steps=c.total_steps)
+        count = state["count"] + 1
+        bc1 = 1.0 - c.b1 ** count.astype(jnp.float32)
+        bc2 = 1.0 - c.b2 ** count.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            g = g.astype(jnp.float32) * scale
+            m = c.b1 * m + (1 - c.b1) * g
+            v = c.b2 * v + (1 - c.b2) * g * g
+            mhat = m / bc1
+            vhat = v / bc2
+            step_ = mhat / (jnp.sqrt(vhat) + c.eps)
+            if p.ndim >= 2:  # decoupled wd on matrices only
+                step_ = step_ + c.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * step_).astype(p.dtype), m, v
+
+        flat_p, treedef = jax.tree_util.tree_flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_m = treedef.flatten_up_to(state["m"])
+        flat_v = treedef.flatten_up_to(state["v"])
+        out = [upd(p, g, m, v) for p, g, m, v
+               in zip(flat_p, flat_g, flat_m, flat_v)]
+        new_p = treedef.unflatten([o[0] for o in out])
+        new_m = treedef.unflatten([o[1] for o in out])
+        new_v = treedef.unflatten([o[2] for o in out])
+        return new_p, {"m": new_m, "v": new_v, "count": count}, gnorm

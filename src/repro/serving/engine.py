@@ -1,0 +1,192 @@
+"""Serving engine: continuous batching + GeoFF prefill/decode disaggregation.
+
+A request's lifecycle is a two-step GeoFF workflow:
+
+    prefill (platform A)  ->  decode (platform B)
+
+The prefill "function" builds the KV cache; the decode "function" consumes
+it. Disaggregation is the paper's choreography applied to serving: while a
+prefill runs, the decode platform is POKED — its step function pre-warms
+(AOT compile at the decode batch shape) and its weights are already resident
+(platform state). The KV-cache handoff is the function-shipping decision
+inverted: ship the CACHE to the decode pod (cheap: one sequence) rather than
+the decode step to the prefill pod (which would idle the prefill compute).
+
+Continuous batching: decode runs a fixed-slot batch; finished sequences free
+their slot and the scheduler immediately admits the next prefilled request
+(slot-level admission, like vLLM's continuous batching but with functional
+JAX cache updates — the cache is a pytree with a leading slot axis).
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.prewarm import CompileCache
+from repro.models import model as M
+from repro.models.transformer import cache_defs, SpecDef, _is_spec
+
+
+def _axis_trees(cfg):
+    """Pytrees (matching the cache structure) of the batch axis index and
+    the cache_seq axis index (or -1) for every cache leaf, derived from the
+    SpecDef logical axes — the single source of cache-layout truth."""
+    defs = cache_defs(cfg, 1, 8)
+    baxis = jax.tree_util.tree_map(lambda d: d.axes.index("batch"), defs,
+                                   is_leaf=_is_spec)
+    saxis = jax.tree_util.tree_map(
+        lambda d: d.axes.index("cache_seq") if "cache_seq" in d.axes else -1,
+        defs, is_leaf=_is_spec)
+    return baxis, saxis
+
+
+def pad_cache(caches, target_len: int, cur_len: int, cfg=None, saxis=None):
+    """Pad prefill caches (capacity == prompt len) to the generation budget.
+
+    Attention caches grow along their cache_seq axis; recurrent states
+    (ssd/rglru conv/h/state) are length-independent and pass through, as do
+    ring buffers already at their window size.
+    """
+    if target_len == cur_len:
+        return caches
+    if saxis is None:
+        saxis = _axis_trees(cfg)[1]
+
+    def pad(leaf, ax):
+        if ax < 0 or leaf.shape[ax] != cur_len:
+            return leaf           # recurrent state / ring buffer
+        width = [(0, 0)] * leaf.ndim
+        width[ax] = (0, target_len - cur_len)
+        return jnp.pad(leaf, width)
+
+    return jax.tree_util.tree_map(pad, caches, saxis)
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                  # (T,) int32
+    max_new_tokens: int = 16
+    t_submit: float = field(default_factory=time.perf_counter)
+    t_first_token: Optional[float] = None
+    t_done: Optional[float] = None
+    tokens: list = field(default_factory=list)
+
+
+class ServingEngine:
+    """Single-host engine (the real thing runs one instance per platform and
+    GeoFF choreographs between them — see examples/federated_serving.py)."""
+
+    def __init__(self, cfg, params, max_batch: int = 4,
+                 max_len: int = 512, cache: Optional[CompileCache] = None):
+        self.cfg = cfg.replace(scan_layers=True)
+        self.params = params
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.queue: deque = deque()
+        self.active: dict = {}            # slot -> Request
+        self.cache = cache or CompileCache()
+        self.stats = {"prefills": 0, "decode_steps": 0, "ttft_s": [],
+                      "done": 0}
+
+        self._prefill = jax.jit(
+            lambda p, b: M.prefill(self.cfg, p, b))
+        self._decode = jax.jit(
+            lambda p, t, c, i: M.decode_step(self.cfg, p, t, c, i))
+        self._baxis, self._saxis = _axis_trees(self.cfg)
+        # slot-batched decode state
+        self.slot_caches = None
+        self.slot_tokens = jnp.zeros((max_batch, 1), jnp.int32)
+        self.slot_pos = np.zeros(max_batch, np.int64)  # per-slot next index
+        self.free_slots = list(range(max_batch))
+
+    # -- pre-warm (GeoFF poke) -----------------------------------------------------
+    def prewarm(self, prompt_len: int):
+        """Compile prefill+decode ahead of traffic (cold start off path)."""
+        B = self.max_batch
+        dummy = {"tokens": jnp.zeros((1, prompt_len), jnp.int32)}
+        self._prefill.lower(self.params, dummy).compile()
+        cd = cache_defs(self.cfg, B, self.max_len)
+        caches = M.spec_zeros(cd)
+        self._decode.lower(self.params, self.slot_tokens, caches,
+                           jnp.zeros((), jnp.int32)).compile()
+
+    # -- admission -------------------------------------------------------------------
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _admit(self):
+        while self.queue and self.free_slots:
+            req = self.queue.popleft()
+            slot = self.free_slots.pop(0)
+            T = len(req.prompt)
+            logits, caches = self._prefill(
+                self.params, {"tokens": jnp.asarray(req.prompt)[None, :]})
+            self.stats["prefills"] += 1
+            tok = int(jnp.argmax(logits[0]))
+            req.tokens.append(tok)
+            req.t_first_token = time.perf_counter()
+            self.stats["ttft_s"].append(req.t_first_token - req.t_submit)
+            caches = pad_cache(caches, self.max_len, T, saxis=self._saxis)
+            if self.slot_caches is None:
+                # materialize the slot-batched cache pytree lazily
+                self.slot_caches = jax.tree_util.tree_map(
+                    lambda l, ax: jnp.zeros(
+                        l.shape[:ax] + (self.max_batch,) + l.shape[ax + 1:],
+                        l.dtype),
+                    caches, self._baxis)
+            self.slot_caches = jax.tree_util.tree_map(
+                lambda sc, c, ax: jax.lax.dynamic_update_slice_in_dim(
+                    sc, c.astype(sc.dtype), slot, axis=ax),
+                self.slot_caches, caches, self._baxis)
+            self.slot_tokens = self.slot_tokens.at[slot, 0].set(tok)
+            self.slot_pos[slot] = T
+            self.active[slot] = req
+
+    # -- decode ----------------------------------------------------------------------
+    def _decode_once(self):
+        if not self.active:
+            return
+        # one position index per step: use the max (sequences are
+        # right-aligned enough for the demo; production uses per-slot
+        # positions via vmapped decode)
+        cur = int(max(self.slot_pos[s] for s in self.active))
+        cur = min(cur, self.max_len - 1)
+        logits, self.slot_caches = self._decode(
+            self.params, self.slot_tokens, self.slot_caches,
+            jnp.asarray(cur, jnp.int32))
+        self.stats["decode_steps"] += 1
+        toks = np.asarray(jnp.argmax(logits, -1))
+        finished = []
+        for slot, req in list(self.active.items()):
+            tok = int(toks[slot])
+            req.tokens.append(tok)
+            self.slot_pos[slot] += 1
+            if (len(req.tokens) >= req.max_new_tokens
+                    or self.slot_pos[slot] >= self.max_len - 1):
+                req.t_done = time.perf_counter()
+                finished.append(slot)
+        for slot in finished:
+            req = self.active.pop(slot)
+            self.free_slots.append(slot)
+            self.stats["done"] += 1
+        self.slot_tokens = jnp.asarray(
+            toks.reshape(-1, 1).astype(np.int32))
+
+    # -- main loop ---------------------------------------------------------------------
+    def run(self, max_steps: int = 1000):
+        """Continuous batching: admit whenever slots free up, decode the
+        active batch, repeat until drained."""
+        done_reqs = []
+        steps = 0
+        while (self.queue or self.active) and steps < max_steps:
+            self._admit()
+            self._decode_once()
+            steps += 1
+        return self.stats

@@ -1,0 +1,65 @@
+"""Checkpointing: roundtrip, atomicity, async overlap, GC."""
+import json
+import os
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+
+
+@pytest.fixture
+def tmp_ckpt(tmp_path):
+    return CheckpointManager(str(tmp_path / "ckpt"), keep=2)
+
+
+def tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {"params": {"w": jax.random.normal(k, (8, 8)),
+                       "b": jnp.zeros(8)},
+            "opt": {"m": jnp.ones((8, 8)), "count": jnp.int32(7)}}
+
+
+def test_roundtrip(tmp_ckpt):
+    t = tree()
+    tmp_ckpt.save(10, t, blocking=True)
+    restored = tmp_ckpt.restore(10, jax.tree_util.tree_map(jnp.zeros_like, t))
+    jax.tree_util.tree_map(
+        lambda a, b: np.testing.assert_allclose(np.asarray(a),
+                                                np.asarray(b)), t, restored)
+
+
+def test_async_save_then_wait(tmp_ckpt):
+    t = tree(1)
+    tmp_ckpt.save(5, t, blocking=False)
+    tmp_ckpt.wait()
+    assert tmp_ckpt.latest_step() == 5
+
+
+def test_atomicity_incomplete_save_ignored(tmp_ckpt):
+    t = tree(2)
+    tmp_ckpt.save(1, t, blocking=True)
+    # simulate a crash mid-save: a step dir without a manifest
+    broken = os.path.join(tmp_ckpt.dir, "step_2")
+    os.makedirs(broken)
+    np.save(os.path.join(broken, "junk.npy"), np.zeros(3))
+    assert tmp_ckpt.latest_step() == 1     # step_2 has no manifest
+
+
+def test_gc_keeps_last_k(tmp_ckpt):
+    t = tree(3)
+    for s in (1, 2, 3, 4):
+        tmp_ckpt.save(s, t, blocking=True)
+    assert tmp_ckpt.all_steps() == [3, 4]
+
+
+def test_restore_rejects_shape_mismatch(tmp_ckpt):
+    t = tree(4)
+    tmp_ckpt.save(9, t, blocking=True)
+    bad = jax.tree_util.tree_map(jnp.zeros_like, t)
+    bad["params"]["w"] = jnp.zeros((4, 4))
+    with pytest.raises(AssertionError):
+        tmp_ckpt.restore(9, bad)

@@ -1,0 +1,116 @@
+"""Per-kernel allclose vs the pure-jnp oracles, swept over shapes/dtypes.
+
+Kernels run in interpret mode on CPU (the TPU lowering is exercised by the
+same pallas_call with interpret=False on real hardware).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+def tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else \
+        dict(rtol=2e-5, atol=2e-5)
+
+
+# -- flash attention ----------------------------------------------------------
+@pytest.mark.parametrize("B,T,S,H,K,d", [
+    (1, 128, 128, 4, 4, 64),     # MHA
+    (2, 256, 256, 8, 2, 64),     # GQA 4:1
+    (1, 128, 256, 4, 1, 128),    # MQA, T != S
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal,window", [(True, None), (True, 96),
+                                           (False, None)])
+def test_flash_attention_sweep(B, T, S, H, K, d, dtype, causal, window):
+    ks = jax.random.split(jax.random.fold_in(KEY, T * H + d), 3)
+    q = jax.random.normal(ks[0], (B, T, H, d), dtype)
+    k = jax.random.normal(ks[1], (B, S, K, d), dtype)
+    v = jax.random.normal(ks[2], (B, S, K, d), dtype)
+    out = ops.flash_attention(q, k, v, causal=causal, window=window,
+                              block_q=64, block_k=64)
+    want = ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **tol(dtype))
+
+
+@given(st.sampled_from([32, 64, 128]), st.sampled_from([16, 32, 64]))
+@settings(max_examples=10, deadline=None)
+def test_flash_attention_block_shape_invariance(bq, bk):
+    """Output must not depend on the BlockSpec tiling."""
+    q = jax.random.normal(KEY, (1, 128, 2, 32))
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (1, 128, 2, 32))
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (1, 128, 2, 32))
+    out = ops.flash_attention(q, k, v, block_q=bq, block_k=bk)
+    want = ref.flash_attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=2e-5,
+                               atol=2e-5)
+
+
+# -- ssd scan -------------------------------------------------------------------
+@pytest.mark.parametrize("B,L,H,P,N,Q,bh", [
+    (1, 64, 2, 16, 8, 16, 2),
+    (2, 128, 4, 32, 16, 32, 2),   # head-blocked
+    (1, 96, 3, 16, 8, 32, 1),     # H not a power of two
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssd_scan_sweep(B, L, H, P, N, Q, bh, dtype):
+    ks = jax.random.split(jax.random.fold_in(KEY, L + H), 5)
+    x = jax.random.normal(ks[0], (B, L, H, P), dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, L, H))).astype(dtype)
+    A_log = jnp.log(jax.random.uniform(ks[2], (H,), minval=1.0, maxval=8.0))
+    Bm = jax.random.normal(ks[3], (B, L, N), dtype)
+    Cm = jax.random.normal(ks[4], (B, L, N), dtype)
+    y, s = ops.ssd_scan(x, dt, A_log, Bm, Cm, Q, block_h=bh)
+    yr, sr = ref.ssd_scan_ref(x, dt, A_log, Bm, Cm, Q)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(yr, np.float32), **tol(dtype))
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr), **tol(dtype))
+
+
+# -- rg-lru scan ------------------------------------------------------------------
+@pytest.mark.parametrize("B,T,W,chunk,bw", [
+    (1, 64, 32, 16, 32), (2, 128, 64, 64, 16), (1, 256, 16, 256, 16)])
+def test_rglru_scan_sweep(B, T, W, chunk, bw):
+    ks = jax.random.split(jax.random.fold_in(KEY, T + W), 2)
+    log_a = -jax.nn.softplus(jax.random.normal(ks[0], (B, T, W)))
+    b = jax.random.normal(ks[1], (B, T, W))
+    y, h = ops.rglru_scan(log_a, b, chunk=chunk, block_w=bw)
+    yr, hr = ref.rglru_scan_ref(log_a, b)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), rtol=1e-5,
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(hr), rtol=1e-5,
+                               atol=1e-5)
+
+
+# -- rmsnorm ----------------------------------------------------------------------
+@pytest.mark.parametrize("shape", [(7, 64), (3, 5, 128), (1, 256)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_sweep(shape, dtype):
+    x = jax.random.normal(KEY, shape, dtype)
+    w = jax.random.normal(jax.random.fold_in(KEY, 3), (shape[-1],)) * 0.1
+    out = ops.rmsnorm(x, w)
+    want = ref.rmsnorm_ref(x, w)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **tol(dtype))
+
+
+def test_model_paths_agree_with_pallas():
+    """cfg.use_pallas=True must reproduce the jnp model end to end."""
+    from repro.configs.registry import smoke_config
+    from repro.models import model as M
+    for arch in ("qwen3-1.7b", "mamba2-370m", "recurrentgemma-9b"):
+        cfg = smoke_config(arch).replace(attn_chunk_q=0)
+        params = M.init_params(cfg, jax.random.PRNGKey(11))
+        batch = {"tokens": jax.random.randint(KEY, (2, 32), 1, 255),
+                 "labels": jax.random.randint(KEY, (2, 32), 0, 255)}
+        l_jnp, _ = M.forward_train(cfg, params, batch)
+        l_pls, _ = M.forward_train(cfg.replace(use_pallas=True), params,
+                                   batch)
+        np.testing.assert_allclose(float(l_jnp), float(l_pls), rtol=5e-3), arch

@@ -1,0 +1,170 @@
+"""Per-arch smoke tests + model-level equivalence properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import ARCH_IDS, get_config, smoke_config
+from repro.configs.base import applicable_shapes, SHAPES
+from repro.models import model as M
+
+
+def make_batch(cfg, B=2, T=32, key=None):
+    key = key or jax.random.PRNGKey(0)
+    if cfg.input_kind == "frames":
+        return {"frames": jax.random.normal(key, (B, T, cfg.d_model)),
+                "labels": jnp.zeros((B, T), jnp.int32)}
+    if cfg.input_kind == "tokens+patches":
+        P = cfg.num_patches
+        return {"tokens": jnp.ones((B, T - P), jnp.int32),
+                "patches": jax.random.normal(key, (B, P, cfg.d_model)),
+                "labels": jnp.zeros((B, T - P), jnp.int32)}
+    return {"tokens": jax.random.randint(key, (B, T), 1, cfg.vocab_size),
+            "labels": jax.random.randint(key, (B, T), 0, cfg.vocab_size)}
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_smoke_forward_and_train_step(arch):
+    """REDUCED same-family config: one forward + one optimizer step on CPU,
+    asserting output shapes and no NaNs (mandated per-arch smoke)."""
+    from repro.optim import AdamW, AdamWConfig
+    cfg = smoke_config(arch)
+    params = M.init_params(cfg, jax.random.PRNGKey(1))
+    batch = make_batch(cfg)
+    loss, metrics = M.forward_train(cfg, params, batch)
+    assert jnp.isfinite(loss), arch
+    opt = AdamW(AdamWConfig(warmup_steps=1, total_steps=10))
+    step = M.make_train_step(cfg, opt)
+    p2, o2, m2 = step(params, opt.init(params), batch, jnp.int32(0))
+    assert jnp.isfinite(m2["loss"])
+    assert jnp.isfinite(m2["grad_norm"])
+    # params actually changed
+    d = jax.tree_util.tree_map(lambda a, b: float(jnp.max(jnp.abs(a - b))),
+                               params, p2)
+    assert max(jax.tree_util.tree_leaves(d)) > 0
+
+
+@pytest.mark.parametrize("arch", ["qwen3-1.7b", "mamba2-370m",
+                                  "recurrentgemma-9b", "gemma3-27b"])
+def test_decode_matches_full_forward(arch):
+    """Prefill + N decode steps produce the same final logits as one full
+    forward over the whole sequence (KV cache / SSM state correctness)."""
+    cfg = smoke_config(arch)
+    if not cfg.supports_decode:
+        pytest.skip("encoder-only")
+    params = M.init_params(cfg, jax.random.PRNGKey(2))
+    T0, N = 16, 4
+    toks = jax.random.randint(jax.random.PRNGKey(3), (1, T0 + N), 1, 255)
+    _, caches = M.prefill(cfg, params, {"tokens": toks[:, :T0]})
+    from repro.serving.engine import pad_cache
+    caches = pad_cache(caches, T0 + N, T0, cfg=cfg)
+    logits = None
+    for i in range(N):
+        logits, caches = M.decode_step(cfg, params, toks[:, T0 + i:T0 + i + 1],
+                                       caches, jnp.int32(T0 + i))
+    full_logits, _ = M.prefill(cfg, params, {"tokens": toks})
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(full_logits),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_chunked_attention_equals_full():
+    cfg = smoke_config("qwen3-1.7b")
+    params = M.init_params(cfg, jax.random.PRNGKey(4))
+    batch = make_batch(cfg, B=2, T=64)
+    l_full, _ = M.forward_train(cfg.replace(attn_chunk_q=0), params, batch)
+    l_unroll, _ = M.forward_train(
+        cfg.replace(attn_chunk_q=16, attn_chunk_unroll=True), params, batch)
+    l_scan, _ = M.forward_train(
+        cfg.replace(attn_chunk_q=16, attn_chunk_unroll=False), params, batch)
+    np.testing.assert_allclose(float(l_full), float(l_unroll), rtol=1e-5)
+    np.testing.assert_allclose(float(l_full), float(l_scan), rtol=1e-5)
+
+
+def test_banded_local_attention_equals_masked():
+    """Sliding-window attention via banded K/V slices == full-score mask."""
+    cfg = smoke_config("gemma3-27b").replace(local_window=8)
+    params = M.init_params(cfg, jax.random.PRNGKey(5))
+    batch = make_batch(cfg, B=1, T=64)
+    l_full, _ = M.forward_train(cfg.replace(attn_chunk_q=0), params, batch)
+    l_band, _ = M.forward_train(cfg.replace(attn_chunk_q=16), params, batch)
+    np.testing.assert_allclose(float(l_full), float(l_band), rtol=1e-5)
+
+
+def test_scan_equals_unrolled_layers():
+    cfg = smoke_config("recurrentgemma-9b")
+    params = M.init_params(cfg, jax.random.PRNGKey(6))
+    batch = make_batch(cfg, B=2, T=24)
+    l_scan, _ = M.forward_train(cfg.replace(scan_layers=True), params, batch)
+    l_unroll, _ = M.forward_train(cfg.replace(scan_layers=False), params,
+                                  batch)
+    np.testing.assert_allclose(float(l_scan), float(l_unroll), rtol=1e-5)
+
+
+def test_ce_chunking_equals_full():
+    cfg = smoke_config("granite-moe-3b-a800m")
+    params = M.init_params(cfg, jax.random.PRNGKey(7))
+    batch = make_batch(cfg, B=2, T=32)
+    l_full, _ = M.forward_train(cfg.replace(ce_chunk=0), params, batch)
+    l_chunk, _ = M.forward_train(cfg.replace(ce_chunk=8), params, batch)
+    np.testing.assert_allclose(float(l_full), float(l_chunk), rtol=1e-5)
+
+
+def test_moe_matches_dense_loop_reference():
+    """Group-local scatter dispatch == a naive per-token loop over experts
+    (capacity large enough that nothing drops)."""
+    from repro.models import layers as L
+    cfg = smoke_config("granite-moe-3b-a800m").replace(capacity_factor=8.0)
+    key = jax.random.PRNGKey(8)
+    p = {k: v for k, v in zip(
+        ["router", "w_gate", "w_up", "w_down"],
+        [jax.random.normal(jax.random.fold_in(key, i), s) * 0.2
+         for i, s in enumerate([
+             (cfg.d_model, cfg.num_experts),
+             (cfg.num_experts, cfg.d_model, cfg.d_ff),
+             (cfg.num_experts, cfg.d_model, cfg.d_ff),
+             (cfg.num_experts, cfg.d_ff, cfg.d_model)])])}
+    x = jax.random.normal(jax.random.fold_in(key, 9), (2, 8, cfg.d_model))
+    out, aux = L.moe(cfg, p, x)
+
+    # naive reference
+    logits = jnp.einsum("btd,de->bte", x, p["router"])
+    probs = jax.nn.softmax(logits, -1)
+    gw, gi = jax.lax.top_k(probs, cfg.top_k)
+    gw = gw / gw.sum(-1, keepdims=True)
+    ref = jnp.zeros_like(x)
+    for b in range(2):
+        for t in range(8):
+            acc = jnp.zeros(cfg.d_model)
+            for j in range(cfg.top_k):
+                e = int(gi[b, t, j])
+                h = jax.nn.silu(x[b, t] @ p["w_gate"][e]) * (
+                    x[b, t] @ p["w_up"][e])
+                acc = acc + gw[b, t, j] * (h @ p["w_down"][e])
+            ref = ref.at[b, t].set(acc)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-4,
+                               atol=2e-4)
+
+
+def test_applicable_shapes_per_family():
+    cells = {a: [s.name for s in applicable_shapes(get_config(a))]
+             for a in ARCH_IDS}
+    assert "long_500k" in cells["mamba2-370m"]
+    assert "long_500k" in cells["recurrentgemma-9b"]
+    assert "long_500k" not in cells["llama3.2-3b"]
+    assert "decode_32k" not in cells["hubert-xlarge"]
+    assert sum(len(v) for v in cells.values()) == 31
+
+
+def test_param_counts_in_expected_range():
+    """Sanity: analytic param counts are in the family ballpark."""
+    expect = {"llama3.2-3b": (2.5e9, 4.5e9), "qwen3-32b": (28e9, 36e9),
+              "gemma3-27b": (22e9, 30e9), "mamba2-370m": (0.3e9, 0.45e9),
+              "recurrentgemma-9b": (7e9, 11e9),
+              # the assigned 48L/64e config is ~28B total; its ACTIVE count
+              # (~4B with top-6) is what matches the "A3B" name
+              "moonshot-v1-16b-a3b": (26e9, 30e9)}
+    for arch, (lo, hi) in expect.items():
+        n = get_config(arch).param_count()
+        assert lo < n < hi, (arch, n)
+    active = get_config("moonshot-v1-16b-a3b").active_param_count()
+    assert 2.5e9 < active < 5.5e9, active

@@ -1,0 +1,86 @@
+"""Sharding-rule resolution properties (hypothesis)."""
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.dist import sharding as shd
+
+# a fake 2-axis mesh over 1 real device is enough to test RESOLUTION logic
+# (pspec_for only reads mesh.shape)
+
+
+class FakeMesh:
+    def __init__(self, shape):
+        self.shape = shape
+
+
+MESH = FakeMesh({"data": 16, "model": 16})
+MESH_MP = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def test_divisibility_fallback():
+    rules = shd.train_rules()
+    # 24 heads don't divide 16 -> replicated; 64 do -> sharded
+    assert shd.pspec_for((3072, 24, 128), ("embed", "heads", "head_dim"),
+                         rules, MESH) == P("data", None, None)
+    assert shd.pspec_for((5120, 64, 128), ("embed", "heads", "head_dim"),
+                         rules, MESH) == P("data", "model", None)
+
+
+def test_axis_never_used_twice():
+    rules = shd.train_rules()
+    # cache_seq takes `model` first; act_kv then falls back to replication
+    spec = shd.pspec_for((16, 4096, 16, 128),
+                         ("batch", "cache_seq", "act_kv", None), rules, MESH)
+    assert spec == P("data", "model", None, None)
+
+
+def test_multipod_batch_axes():
+    rules = shd.train_rules(multi_pod=True)
+    spec = shd.pspec_for((256, 4096), ("batch", "seq"), rules, MESH_MP)
+    assert spec == P(("pod", "data"), None)
+
+
+def test_seq_shard_attn_lever():
+    on = shd.train_rules(seq_shard_attn=True)
+    off = shd.train_rules(seq_shard_attn=False)
+    shape = (16, 4096, 24, 128)
+    axes = ("batch", "attn_seq", "act_heads", None)
+    assert shd.pspec_for(shape, axes, on, MESH) == P("data", "model", None,
+                                                     None)
+    assert shd.pspec_for(shape, axes, off, MESH) == P("data", None, None,
+                                                      None)
+
+
+dims = st.integers(1, 8).map(lambda k: 2 ** k)
+
+
+@given(st.lists(dims, min_size=1, max_size=4), st.integers(0, 1))
+@settings(max_examples=50, deadline=None)
+def test_pspec_always_valid(shape, which):
+    """Every resolved spec uses only existing axes, never reuses one, and
+    only shards dims it divides."""
+    rules = shd.train_rules() if which else shd.decode_rules()
+    names = ["batch", "seq", "act_heads", "embed", "ff", "vocab", "expert",
+             None]
+    axes = tuple(names[i % len(names)] for i in range(len(shape)))
+    spec = shd.pspec_for(tuple(shape), axes, rules, MESH)
+    used = []
+    for dim, part in zip(shape, spec):
+        if part is None:
+            continue
+        parts = (part,) if isinstance(part, str) else part
+        for p in parts:
+            assert p in MESH.shape
+            assert p not in used
+            used.append(p)
+        total = int(np.prod([MESH.shape[p] for p in parts]))
+        assert dim % total == 0
+
+
+def test_shard_noop_outside_ctx():
+    import jax.numpy as jnp
+    x = jnp.ones((4, 4))
+    assert shd.shard(x, "batch", None) is x

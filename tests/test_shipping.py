@@ -1,0 +1,59 @@
+"""Function-shipping placement: DP optimality + the paper's §4.3 decision."""
+import itertools
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.shipping import PlacementCosts, chain_cost, place_chain
+from repro.core.workflow import DataRef, StepSpec, WorkflowSpec
+
+
+def costs_from_tables(fetch, compute, transfer):
+    return PlacementCosts(
+        fetch_s=lambda name, p, deps: fetch.get((name, p), 0.0),
+        compute_s=lambda name, p: compute.get((name, p), 0.1),
+        transfer_s=lambda a, b, size: transfer.get((a, b), 0.0),
+        payload_size=1.0)
+
+
+def test_ships_ocr_to_data_region():
+    """Reproduces the paper's §4.3 decision: the optimizer moves OCR to
+    us-east-1, where its data lives."""
+    spec = WorkflowSpec((
+        StepSpec("check", "edge"), StepSpec("virus", "edge"),
+        StepSpec("ocr", "eu-central-1",
+                 data_deps=(DataRef("scans", "us-east-1", int(30e6)),)),
+        StepSpec("e_mail", "us-east-1")))
+    fetch = {("ocr", "eu-central-1"): 3.6, ("ocr", "us-east-1"): 0.9}
+    compute = {("ocr", p): 5.85 for p in ("eu-central-1", "us-east-1")}
+    transfer = {(a, b): (0.1 if a == b else 0.8)
+                for a in ("edge", "eu-central-1", "us-east-1")
+                for b in ("edge", "eu-central-1", "us-east-1")}
+    placed = place_chain(spec, {"ocr": ["eu-central-1", "us-east-1"]},
+                         costs_from_tables(fetch, compute, transfer))
+    assert placed.steps[2].platform == "us-east-1"
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=25, deadline=None)
+def test_chain_dp_matches_bruteforce(seed):
+    import random
+    rnd = random.Random(seed)
+    plats = ["p0", "p1", "p2"]
+    n = rnd.randint(2, 4)
+    spec = WorkflowSpec(tuple(StepSpec(f"s{i}", "p0") for i in range(n)))
+    fetch = {(f"s{i}", p): rnd.uniform(0, 2) for i in range(n)
+             for p in plats}
+    compute = {(f"s{i}", p): rnd.uniform(0.1, 2) for i in range(n)
+               for p in plats}
+    transfer = {(a, b): 0.0 if a == b else rnd.uniform(0.05, 1.0)
+                for a in plats for b in plats}
+    costs = costs_from_tables(fetch, compute, transfer)
+    cand = {f"s{i}": plats for i in range(n)}
+    placed = place_chain(spec, cand, costs)
+    best_dp = chain_cost(placed, costs)
+    best_brute = min(
+        chain_cost(WorkflowSpec(tuple(
+            StepSpec(f"s{i}", route[i]) for i in range(n))), costs)
+        for route in itertools.product(plats, repeat=n))
+    assert best_dp == pytest.approx(best_brute, rel=1e-9)

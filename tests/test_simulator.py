@@ -1,0 +1,90 @@
+"""Calibrated simulator: paper medians + protocol properties."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import simulator as S
+
+TOL = 0.08  # 8% relative tolerance on the paper's medians
+
+
+@pytest.fixture(scope="module")
+def sim():
+    return S.WorkflowSimulator(S.paper_platforms(), seed=7)
+
+
+def test_fig4_document_workflow(sim):
+    steps = S.document_workflow_fig4()
+    base = S.median(sim.run_experiment(steps, 1800, prefetch=False))
+    geo = S.median(sim.run_experiment(steps, 1800, prefetch=True))
+    assert base == pytest.approx(4.65, rel=TOL), base
+    assert geo == pytest.approx(2.19, rel=TOL), geo
+    improv = (base - geo) / base
+    assert improv == pytest.approx(0.5302, abs=0.06), improv
+
+
+def test_fig6_function_shipping(sim):
+    far = S.median(sim.run_experiment(
+        S.shipping_workflow_fig6("lambda-eu-central-1"), 1800))
+    close = S.median(sim.run_experiment(
+        S.shipping_workflow_fig6("lambda-us-east-1"), 1800))
+    assert far == pytest.approx(10.47, rel=TOL), far
+    assert close == pytest.approx(7.65, rel=TOL), close
+    assert (far - close) / far == pytest.approx(0.2690, abs=0.05)
+
+
+def test_fig8_native_prefetch(sim):
+    steps = S.native_prefetch_workflow_fig8()
+    base = S.median(sim.run_experiment(steps, 1800, prefetch=False))
+    geo = S.median(sim.run_experiment(steps, 1800, prefetch=True))
+    assert base == pytest.approx(5.87, rel=TOL), base
+    assert geo == pytest.approx(5.08, rel=TOL), geo
+
+
+compute_st = st.floats(0.05, 3.0)
+fetch_st = st.floats(0.0, 3.0)
+
+
+@given(st.lists(st.tuples(compute_st, fetch_st), min_size=2, max_size=5),
+       st.integers(0, 3))
+@settings(max_examples=40, deadline=None)
+def test_prefetch_never_slower(steps_raw, seed):
+    """Protocol property: with identical sampled durations, the GeoFF
+    schedule is never slower than the sequential baseline."""
+    plats = S.paper_platforms()
+    steps = [S.SimStep(f"s{i}", plats[i % len(plats)].name,
+                       compute=S.Dist(c, 0.0), fetch=S.Dist(f, 0.0))
+             for i, (c, f) in enumerate(steps_raw)]
+    sim = S.WorkflowSimulator(plats, seed=seed)
+    base = sim.run_request(steps, 1e6, prefetch=False).total_s
+    sim2 = S.WorkflowSimulator(plats, seed=seed)
+    geo = sim2.run_request(steps, 1e6, prefetch=True).total_s
+    assert geo <= base + 1e-9
+
+
+@given(st.lists(st.tuples(compute_st, fetch_st), min_size=2, max_size=5))
+@settings(max_examples=30, deadline=None)
+def test_hiding_bounded_by_total_fetch(steps_raw):
+    """The saving can never exceed the total fetch + cold-start time."""
+    plats = S.paper_platforms()
+    steps = [S.SimStep(f"s{i}", "tinyfaas-edge", compute=S.Dist(c, 0.0),
+                       fetch=S.Dist(f, 0.0)) for i, (c, f) in
+             enumerate(steps_raw)]
+    total_fetch = sum(f for _, f in steps_raw)
+    sim = S.WorkflowSimulator(plats, seed=0)
+    tr_base = sim.run_request(steps, 1e6, prefetch=False)
+    sim2 = S.WorkflowSimulator(plats, seed=0)
+    tr_geo = sim2.run_request(steps, 1e6, prefetch=True)
+    # first request is cold; both schedules pay it somewhere
+    assert tr_base.total_s - tr_geo.total_s <= total_fetch + 5.0 + 1e-6
+
+
+def test_double_billing_accounting(sim):
+    """Eager pokes produce double-billing exactly when preparation finishes
+    before the payload arrives."""
+    steps = [S.SimStep("a", "tinyfaas-edge", compute=S.Dist(2.0, 0.0)),
+             S.SimStep("b", "tinyfaas-edge", compute=S.Dist(0.1, 0.0),
+                       fetch=S.Dist(0.2, 0.0))]
+    tr = sim.run_request(steps, 1e6, prefetch=True)
+    # b prepared after ~0.25s, payload after ~2s -> ~1.75s idle
+    assert tr.double_billed_s == pytest.approx(1.75, abs=0.3)

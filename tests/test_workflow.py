@@ -1,0 +1,47 @@
+"""WorkflowSpec / StepSpec / DataRef: serialization + recomposition."""
+import json
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.workflow import DataRef, StepSpec, WorkflowSpec
+
+names = st.text(st.characters(min_codepoint=97, max_codepoint=122),
+                min_size=1, max_size=8)
+
+
+def make_step(name, platform, nd):
+    return StepSpec(name, platform,
+                    tuple(DataRef(f"k{i}", "eu", 100 * i) for i in range(nd)),
+                    prefetch=bool(nd % 2), sync=False,
+                    params={"x": nd})
+
+
+@given(st.lists(st.tuples(names, names, st.integers(0, 3)), min_size=1,
+                max_size=6))
+@settings(max_examples=50, deadline=None)
+def test_json_roundtrip(steps_raw):
+    spec = WorkflowSpec(tuple(make_step(n, p, d) for n, p, d in steps_raw),
+                        "wf")
+    again = WorkflowSpec.from_json(spec.to_json())
+    assert again == spec
+
+
+def test_successor_chain():
+    spec = WorkflowSpec(tuple(make_step(f"s{i}", "p", 0) for i in range(4)))
+    assert spec.successor(0).name == "s1"
+    assert spec.successor(3) is None
+
+
+def test_reroute_is_pure_recomposition():
+    spec = WorkflowSpec((make_step("a", "p1", 1), make_step("b", "p1", 2)))
+    moved = spec.reroute("b", "p2")
+    assert moved.steps[1].platform == "p2"
+    assert moved.steps[1].data_deps == spec.steps[1].data_deps
+    assert spec.steps[1].platform == "p1"          # original untouched
+    assert moved.steps[0] == spec.steps[0]
+
+
+def test_empty_workflow_rejected():
+    with pytest.raises(AssertionError):
+        WorkflowSpec(())
