@@ -107,7 +107,7 @@ def main(n=1800, write=True):
                          "paper": p}
     ship = run_shipping_optimizer_check()
     print(f"shipping_optimizer_choice,{ship},,,,,(paper ships OCR to"
-          f" us-east-1)")
+          " us-east-1)")
     results["shipping_optimizer_choice"] = ship
     if write:
         with open(os.path.join(OUT, "summary.json"), "w") as f:

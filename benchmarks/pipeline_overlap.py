@@ -5,7 +5,6 @@ from __future__ import annotations
 import time
 
 import jax
-import numpy as np
 
 from repro.configs.registry import smoke_config
 from repro.core.prefetch import DoubleBuffer

@@ -11,21 +11,33 @@ Output: CSV-ish ``name,us_per_call,derived`` blocks per bench.
 """
 from __future__ import annotations
 
+import argparse
 import os
 import sys
 import traceback
 
 
-def main() -> None:
-    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced sample counts — the CI smoke gate that "
+                         "keeps the perf scripts importable and running")
+    args = ap.parse_args(argv)
+
+    root = os.path.join(os.path.dirname(__file__), "..")
+    sys.path.insert(0, os.path.join(root, "src"))
+    sys.path.insert(0, root)   # `benchmarks` as a package from anywhere
     from benchmarks import (paper_figs, pipeline_overlap, real_overlap,
                             roofline, timing_bench, wrapper_overhead)
 
+    n_fig = 80 if args.quick else 1800
     benches = [
-        ("paper_figs", lambda: paper_figs.main(n=1800)),
-        ("wrapper_overhead", wrapper_overhead.main),
+        ("paper_figs", lambda: paper_figs.main(n=n_fig, write=not args.quick)),
+        ("wrapper_overhead",
+         lambda: wrapper_overhead.main(n_calls=100 if args.quick else 2000)),
         ("real_overlap", real_overlap.main),
-        ("pipeline_overlap", pipeline_overlap.main),
+        ("pipeline_overlap",
+         lambda: pipeline_overlap.main(steps=4 if args.quick else 8)),
         ("timing", timing_bench.main),
         ("roofline", roofline.main),
     ]

@@ -3,7 +3,6 @@ from __future__ import annotations
 
 import time
 
-import numpy as np
 
 from repro.core.platform import Platform, PlatformWrapper
 
@@ -12,7 +11,8 @@ def main(n_calls=2000):
     plat = Platform("edge", "eu", kind="edge")
     w = PlatformWrapper(plat, lambda payload, data: payload, "noop")
     # measure full-call overhead vs a direct call
-    direct = lambda payload, data: payload
+    def direct(payload, data):
+        return payload
     t0 = time.perf_counter()
     for _ in range(n_calls):
         direct(1, {})

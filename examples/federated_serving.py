@@ -18,7 +18,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import (DataRef, Deployment, Platform, PlatformRegistry,
+from repro.core import (Deployment, Platform, PlatformRegistry,
                         PlacementCosts, StepSpec, WorkflowSpec, place_chain)
 from repro.configs.registry import smoke_config
 from repro.models import model as M

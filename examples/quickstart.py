@@ -15,18 +15,26 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import (DataRef, Deployment, Platform, PlatformRegistry,
-                        StepSpec, WorkflowSpec)
+                        StepSpec, WorkflowSpec, bind_sharding)
 from repro.configs.registry import smoke_config
+from repro.launch.mesh import make_host_mesh
 from repro.models import model as M
 
 
 def main():
     # --- platforms (the federation) ----------------------------------------
+    # Heterogeneous sharding configs: the edge node stays single-device
+    # (bind_sharding drops the mesh), cloud regions carry a mesh over this
+    # host's devices + the decode sharding rules — the platform wrapper
+    # binds them as the ambient use_sharding context around every step.
+    mesh = make_host_mesh(model_parallel=1)
     reg = PlatformRegistry()
-    reg.register(Platform("edge-berlin", "eu", kind="edge",
-                          native_prefetch=True))
-    reg.register(Platform("cloud-us", "us", kind="cloud"))
-    reg.register(Platform("cloud-eu", "eu", kind="cloud"))
+    reg.register(bind_sharding(Platform("edge-berlin", "eu", kind="edge",
+                                        native_prefetch=True)))
+    reg.register(bind_sharding(Platform("cloud-us", "us", kind="cloud"),
+                               mesh=mesh))
+    reg.register(bind_sharding(Platform("cloud-eu", "eu", kind="cloud"),
+                               mesh=mesh))
     dep = Deployment(reg)
     dep.store.enforce_latency = True            # real (slept) transfer time
     dep.store.network.set_link("eu", "us", 0.08, 10e6)

@@ -1,0 +1,1 @@
+"""GeoFF reproduction: federated serverless workflows over sharded JAX."""

@@ -20,7 +20,6 @@ from __future__ import annotations
 import json
 import os
 import shutil
-import threading
 import time
 from concurrent.futures import ThreadPoolExecutor
 from typing import Optional
@@ -123,7 +122,7 @@ class CheckpointManager:
         d = os.path.join(self.dir, f"step_{step}")
         with open(os.path.join(d, "manifest.json")) as f:
             manifest = json.load(f)
-        by_key = {l["key"]: l for l in manifest["leaves"]}
+        by_key = {leaf["key"]: leaf for leaf in manifest["leaves"]}
 
         flat, treedef = jax.tree_util.tree_flatten_with_path(target_tree)
         sh_flat = None

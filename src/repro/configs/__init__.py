@@ -1,0 +1,1 @@
+"""Architecture configs; see registry.ARCH_IDS / registry.get_config."""

@@ -8,7 +8,6 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass
-from typing import Optional
 
 
 @dataclass(frozen=True)
@@ -55,7 +54,8 @@ class ArchConfig:
     causal: bool = True          # False for encoder-only (hubert)
     supports_decode: bool = True  # False for encoder-only
     sub_quadratic: bool = False   # True -> runs the long_500k shape
-    input_kind: str = "tokens"    # tokens | frames (audio stub) | tokens+patches (vlm stub)
+    input_kind: str = "tokens"    # tokens | frames (audio stub)
+                                  # | tokens+patches (vlm stub)
     num_patches: int = 0          # vlm: patch-embedding stub length within the sequence
 
     # -- numerics / execution -------------------------------------------------

@@ -1,4 +1,5 @@
-"""recurrentgemma-9b — hybrid RG-LRU + local attention (griffin), 1 attn : 2 recurrent.
+"""recurrentgemma-9b — hybrid RG-LRU + local attention (griffin),
+1 attn : 2 recurrent.
 
 38L d_model=4096 16H (MQA kv=1) d_ff=12288 vocab=256000
 [arXiv:2402.19427; unverified]

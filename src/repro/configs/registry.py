@@ -8,7 +8,8 @@ from __future__ import annotations
 
 import importlib
 
-from repro.configs.base import ArchConfig, SHAPES, ALL_SHAPES, applicable_shapes  # noqa: F401
+from repro.configs.base import (ArchConfig, SHAPES, ALL_SHAPES,  # noqa: F401
+                                applicable_shapes)
 
 _MODULES = {
     "llama3.2-3b": "repro.configs.llama3_2_3b",

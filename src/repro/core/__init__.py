@@ -15,12 +15,14 @@ The paper's contribution as a composable library:
   timing          learned poke-delay controller (paper §5.5 future work)
   simulator       calibrated discrete-event sim reproducing Figs 4/6/8
 """
-from repro.core.workflow import DataRef, Invocation, StepSpec, WorkflowSpec  # noqa: F401
+from repro.core.workflow import (DataRef, Invocation, StepSpec,  # noqa: F401
+                                 WorkflowSpec)
 from repro.core.platform import (NetworkModel, Platform, PlatformRegistry,  # noqa: F401
-                                 PlatformWrapper)
+                                 PlatformWrapper, bind_sharding)
 from repro.core.store import ObjectStore  # noqa: F401
 from repro.core.choreographer import Deployment, Middleware, StepResult  # noqa: F401
 from repro.core.prewarm import CompileCache  # noqa: F401
 from repro.core.prefetch import DoubleBuffer, Prefetcher  # noqa: F401
-from repro.core.shipping import PlacementCosts, chain_cost, place_chain, place_dag  # noqa: F401
+from repro.core.shipping import (PlacementCosts, chain_cost,  # noqa: F401
+                                 place_chain, place_dag)
 from repro.core.timing import PokeTimingController  # noqa: F401

@@ -23,8 +23,7 @@ from __future__ import annotations
 import threading
 import time
 import uuid
-from concurrent.futures import Future
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Callable, Optional
 
 from repro.core.platform import Platform, PlatformRegistry, PlatformWrapper
@@ -32,7 +31,7 @@ from repro.core.prefetch import Prefetcher
 from repro.core.prewarm import CompileCache
 from repro.core.store import ObjectStore
 from repro.core.timing import PokeTimingController
-from repro.core.workflow import Invocation, StepSpec, WorkflowSpec
+from repro.core.workflow import Invocation, WorkflowSpec
 
 
 @dataclass

@@ -14,13 +14,12 @@ function code deploys anywhere. The paper reports < 1 ms wrapper overhead
 """
 from __future__ import annotations
 
+import dataclasses
 import threading
 import time
 from concurrent.futures import ThreadPoolExecutor
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Callable, Optional
-
-import jax
 
 from repro.dist import sharding as shd
 
@@ -38,6 +37,26 @@ class Platform:
 
     def executor_key(self):
         return self.name
+
+
+def bind_sharding(platform: Platform, mesh=None, rules=None,
+                  workload: str = "decode") -> Platform:
+    """Attach a mesh + sharding rules to a platform (heterogeneous federation).
+
+    Every platform in a GeoFF deployment can carry its own placement config:
+    an edge node is a single device (mesh dropped, everything replicated), a
+    cloud region runs the logical-axis rules for its workload — multi-pod
+    rules when the mesh has a "pod" axis. The PlatformWrapper then binds the
+    pair as the ambient ``use_sharding`` context around every step it runs,
+    so the SAME step function deploys to either.
+    """
+    if platform.kind == "edge":
+        mesh = None                       # edge nodes are single-device
+    if rules is None:
+        multi_pod = mesh is not None and "pod" in mesh.shape
+        rules = shd.rules_for_platform(platform.kind, workload,
+                                       multi_pod=multi_pod)
+    return dataclasses.replace(platform, mesh=mesh, rules=rules)
 
 
 class NetworkModel:

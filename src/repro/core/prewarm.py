@@ -15,7 +15,7 @@ from __future__ import annotations
 import threading
 import time
 from concurrent.futures import Future, ThreadPoolExecutor
-from typing import Callable, Optional
+from typing import Callable
 
 import jax
 
@@ -23,9 +23,9 @@ import jax
 def signature_of(args_pytree) -> tuple:
     leaves, treedef = jax.tree_util.tree_flatten(args_pytree)
     return (str(treedef),
-            tuple((tuple(getattr(l, "shape", ())),
-                   str(getattr(l, "dtype", type(l).__name__)))
-                  for l in leaves))
+            tuple((tuple(getattr(leaf, "shape", ())),
+                   str(getattr(leaf, "dtype", type(leaf).__name__)))
+                  for leaf in leaves))
 
 
 class CompileCache:

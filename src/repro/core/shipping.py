@@ -20,10 +20,10 @@ serving/disagg.py uses the same optimizer with state residency as data_deps.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Callable, Optional
+from dataclasses import dataclass
+from typing import Callable
 
-from repro.core.workflow import DataRef, StepSpec, WorkflowSpec
+from repro.core.workflow import StepSpec, WorkflowSpec
 
 
 @dataclass(frozen=True)

@@ -23,7 +23,7 @@ the instance is up and idle (paper §5.5); the learned timing controller
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional
 
 import numpy as np

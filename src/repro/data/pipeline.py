@@ -11,8 +11,6 @@ step k's compute (the data-pipeline instance of the paper's pre-fetching).
 """
 from __future__ import annotations
 
-from typing import Optional
-
 import jax
 import numpy as np
 from jax.sharding import NamedSharding

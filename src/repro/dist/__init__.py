@@ -1,0 +1,35 @@
+"""Distribution layer: logical-axis sharding rules (GSPMD placement).
+
+The subsystem has one module, ``repro.dist.sharding``; this package re-exports
+the public surface so call sites can use either
+``from repro.dist import sharding as shd`` or ``from repro.dist import shard``.
+"""
+from repro.dist.sharding import (
+    ShardingRules,
+    current_sharding,
+    decode_rules,
+    describe,
+    pspec_for,
+    replicated_rules,
+    rules_for,
+    rules_for_platform,
+    shard,
+    train_rules,
+    use_sharding,
+    validate_rules,
+)
+
+__all__ = [
+    "ShardingRules",
+    "current_sharding",
+    "decode_rules",
+    "describe",
+    "pspec_for",
+    "replicated_rules",
+    "rules_for",
+    "rules_for_platform",
+    "shard",
+    "train_rules",
+    "use_sharding",
+    "validate_rules",
+]

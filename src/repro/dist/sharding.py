@@ -1,0 +1,297 @@
+"""Logical-axis sharding rules: the single GSPMD placement source.
+
+Every tensor in the codebase names its dimensions with LOGICAL axes
+("batch", "embed", "act_ff", ...) instead of mesh axes. This module owns the
+table that maps logical axes onto the physical mesh ("data"/"model", plus
+"pod" across DCN on the multi-pod mesh), and the resolver that turns
+(shape, logical axes, rules, mesh) into a concrete ``PartitionSpec``.
+
+Layout strategy (TPU v5e reference, launch/mesh.py):
+
+  params        FSDP over "data" on the embed dim; tensor-parallel over
+                "model" on heads / ff / vocab / experts / inner widths.
+                The "pod" axis never shards parameters — gradient reduction
+                over "pod" is the only cross-pod (DCN) collective.
+  activations   batch over "data" (x "pod" when multi-pod); the act_* width
+                axes over "model" so block-internal activations stay
+                TP-sharded between matmuls.
+  levers        seq_shard_attn (sequence-parallel attention scores),
+                seq_shard_resid (Megatron-SP residual stream) map the
+                relevant seq axes onto "model".
+
+Resolution is defensive by construction — ``pspec_for`` guarantees a VALID
+spec for any shape on any mesh:
+
+  * divisibility fallback: a dim that the mapped mesh axes don't divide
+    evenly is replicated instead (e.g. 24 heads on a model=16 axis);
+  * a mesh axis is never used twice in one spec (first logical axis wins,
+    later ones fall back to replication);
+  * mesh axes the mesh doesn't have (e.g. "pod" on a single-pod mesh) are
+    treated as unavailable and the dim is replicated.
+
+The ambient-context half (``use_sharding`` / ``current_sharding`` /
+``shard``) lets model code state constraints without threading mesh+rules
+through every call: contexts nest, are thread-local (each simulated GeoFF
+platform executor carries its own), and ``shard`` is an exact no-op outside
+any context — the single-device path the simulator and smoke tests rely on.
+"""
+from __future__ import annotations
+
+import math
+import threading
+from dataclasses import dataclass
+from typing import Mapping, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# A logical axis maps to one mesh axis, a tuple of mesh axes (consumed
+# together, e.g. batch -> ("pod", "data")), or None (always replicated).
+AxisSpec = Union[None, str, Tuple[str, ...]]
+
+
+# ---------------------------------------------------------------------------
+# rules
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class ShardingRules:
+    """An immutable logical-axis -> mesh-axes table.
+
+    ``lookup`` is the only read path (layers.py uses it directly to size the
+    MoE batch groups); unknown names resolve to None (replicated) so new
+    logical axes degrade safely rather than crash a deployed platform.
+    """
+
+    table: Mapping[str, AxisSpec]
+    name: str = "custom"
+
+    def lookup(self, logical: Optional[str]) -> AxisSpec:
+        if logical is None:
+            return None
+        return self.table.get(logical)
+
+    def replace(self, **updates: AxisSpec) -> "ShardingRules":
+        """A copy with some logical axes remapped (hillclimb lever)."""
+        t = dict(self.table)
+        t.update(updates)
+        return ShardingRules(t, name=self.name + "+")
+
+    def items(self):
+        return self.table.items()
+
+
+# Parameter axes. "layers" is the scan axis (never sharded); "embed" carries
+# the FSDP shard; widths carry tensor parallelism.
+_PARAM_TABLE: Mapping[str, AxisSpec] = {
+    "layers": None,
+    "embed": "data",
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "ff": "model",
+    "vocab": "model",
+    "expert": "model",
+    "inner": "model",
+    "lru": "model",
+    "conv": None,
+}
+
+# Activation axes common to every workload.
+_ACT_TABLE: Mapping[str, AxisSpec] = {
+    "act_heads": "model",
+    "act_kv": "model",
+    "act_embed": None,
+    "act_ff": "model",
+    "act_vocab": "model",
+    "act_expert": "model",
+    "act_inner": "model",
+}
+
+
+def train_rules(*, multi_pod: bool = False, seq_shard_attn: bool = False,
+                seq_shard_resid: bool = False) -> ShardingRules:
+    """Rules for the train (and prefill) programs.
+
+    multi_pod        batch spans ("pod", "data") — grad reduction over "pod"
+                     is then the only DCN collective on the step.
+    seq_shard_attn   shard the attention q-sequence over "model"
+                     (sequence-parallel scores; act_heads then replicates).
+    seq_shard_resid  Megatron-SP: the residual-stream seq axis shards over
+                     "model" between blocks.
+    """
+    table = dict(_PARAM_TABLE)
+    table.update(_ACT_TABLE)
+    table.update({
+        "batch": ("pod", "data") if multi_pod else "data",
+        "seq": "model" if seq_shard_resid else None,
+        "attn_seq": "model" if seq_shard_attn else None,
+        "cache_seq": "model",
+    })
+    return ShardingRules(table, name="train" + ("_mp" if multi_pod else ""))
+
+
+def decode_rules(*, multi_pod: bool = False) -> ShardingRules:
+    """Rules for the decode step: KV caches shard their seq dim over
+    "model" (cache memory is the binding constraint at decode); the T=1
+    activation seq axes stay replicated."""
+    table = dict(_PARAM_TABLE)
+    table.update(_ACT_TABLE)
+    table.update({
+        "batch": ("pod", "data") if multi_pod else "data",
+        "seq": None,
+        "attn_seq": None,
+        "cache_seq": "model",
+    })
+    return ShardingRules(table, name="decode" + ("_mp" if multi_pod else ""))
+
+
+def replicated_rules() -> ShardingRules:
+    """Everything replicated — edge platforms / single-device simulators."""
+    return ShardingRules({}, name="replicated")
+
+
+def rules_for(kind: str, *, multi_pod: bool = False,
+              seq_shard_attn: bool = False,
+              seq_shard_resid: bool = False) -> ShardingRules:
+    """Rules for a ShapeSpec kind: "train" | "prefill" | "decode"."""
+    if kind in ("train", "prefill"):
+        return train_rules(multi_pod=multi_pod, seq_shard_attn=seq_shard_attn,
+                           seq_shard_resid=seq_shard_resid)
+    if kind == "decode":
+        return decode_rules(multi_pod=multi_pod)
+    raise ValueError(f"unknown workload kind: {kind!r}")
+
+
+def rules_for_platform(platform_kind: str, workload: str = "decode", *,
+                       multi_pod: bool = False) -> ShardingRules:
+    """Heterogeneous federation: each GeoFF platform kind gets its own
+    placement. Edge nodes are single-device (everything replicated); cloud
+    and private platforms run the mesh rules for their workload."""
+    if platform_kind == "edge":
+        return replicated_rules()
+    return rules_for(workload, multi_pod=multi_pod)
+
+
+# ---------------------------------------------------------------------------
+# resolution
+# ---------------------------------------------------------------------------
+def _mesh_shape(mesh) -> Mapping[str, int]:
+    # jax.sharding.Mesh exposes .shape as an OrderedDict; the tests' FakeMesh
+    # provides a plain dict. Both quack the same.
+    return mesh.shape
+
+
+def pspec_for(shape: Sequence[int], axes: Sequence[Optional[str]],
+              rules: ShardingRules, mesh) -> P:
+    """Resolve logical axes to a PartitionSpec that is always valid.
+
+    Per dim (left to right): look the logical axis up in the rules; keep the
+    mapping only if every mesh axis exists, none was already used by an
+    earlier dim, and their combined size divides the dim — otherwise the dim
+    replicates. All-or-nothing per dim: a ("pod", "data") batch never
+    degrades to a bare "data" shard, it replicates (predictability beats
+    opportunism; the dry-run flags the replication instead).
+    """
+    assert len(shape) == len(axes), (tuple(shape), tuple(axes))
+    mshape = _mesh_shape(mesh)
+    used: set = set()
+    parts: list = []
+    for dim, logical in zip(shape, axes):
+        entry = rules.lookup(logical)
+        resolved = None
+        if entry is not None:
+            mesh_axes = (entry,) if isinstance(entry, str) else tuple(entry)
+            ok = all(a in mshape and a not in used for a in mesh_axes)
+            if ok:
+                total = math.prod(mshape[a] for a in mesh_axes)
+                if total > 0 and dim % total == 0:
+                    resolved = (mesh_axes[0] if len(mesh_axes) == 1
+                                else mesh_axes)
+                    used.update(mesh_axes)
+        parts.append(resolved)
+    return P(*parts)
+
+
+def validate_rules(rules: ShardingRules, mesh) -> dict:
+    """Which logical axes CAN shard on this mesh? {logical: mesh_axes|None}.
+    Purely diagnostic — pspec_for already degrades per-tensor."""
+    mshape = _mesh_shape(mesh)
+    out = {}
+    for logical, entry in rules.items():
+        if entry is None:
+            out[logical] = None
+            continue
+        mesh_axes = (entry,) if isinstance(entry, str) else tuple(entry)
+        out[logical] = entry if all(a in mshape for a in mesh_axes) else None
+    return out
+
+
+def describe(rules: ShardingRules, mesh=None) -> str:
+    """Human-readable rule table (README / dry-run logs)."""
+    lines = [f"ShardingRules[{rules.name}]"]
+    avail = validate_rules(rules, mesh) if mesh is not None else None
+    for logical in sorted(rules.table):
+        entry = rules.table[logical]
+        note = ""
+        if avail is not None and entry is not None and avail[logical] is None:
+            note = "   (unavailable on this mesh -> replicated)"
+        lines.append(f"  {logical:12s} -> {entry!r}{note}")
+    return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# ambient context
+# ---------------------------------------------------------------------------
+class _Ambient(threading.local):
+    """Per-thread stack of (mesh, rules). Thread-local on purpose: each
+    simulated platform runs steps on its own executor threads (see
+    core/platform.py), and an edge platform's replicated context must not
+    leak into a cloud platform's mesh context."""
+
+    def __init__(self):
+        self.stack = []
+
+
+_AMBIENT = _Ambient()
+
+
+def current_sharding():
+    """(mesh, rules) of the innermost active context, else (None, None)."""
+    if _AMBIENT.stack:
+        return _AMBIENT.stack[-1]
+    return (None, None)
+
+
+class use_sharding:
+    """Context manager binding (mesh, rules) for the current thread.
+
+    Class-based (not a generator) so one instance is reusable AND reentrant
+    — the platform wrapper constructs it once per call, the trainer nests it
+    inside jit traces.
+    """
+
+    def __init__(self, mesh, rules):
+        self.mesh = mesh
+        self.rules = rules
+
+    def __enter__(self):
+        _AMBIENT.stack.append((self.mesh, self.rules))
+        return self
+
+    def __exit__(self, *exc):
+        _AMBIENT.stack.pop()
+        return False
+
+
+def shard(x, *axes):
+    """Constrain ``x`` to the ambient sharding; identity outside a context.
+
+    The no-op path returns ``x`` itself (not a copy): single-device
+    platforms and the simulator call model code with no context bound, and
+    the constraint must cost nothing there.
+    """
+    mesh, rules = current_sharding()
+    if mesh is None or rules is None:
+        return x
+    spec = pspec_for(x.shape, axes, rules, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

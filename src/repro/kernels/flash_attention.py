@@ -16,12 +16,13 @@ EXPERIMENTS.md SPerf as a further step).
 from __future__ import annotations
 
 import functools
-import math
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import CompilerParams as _CompilerParams
 
 NEG_INF = -1e30
 
@@ -122,7 +123,7 @@ def flash_attention(q, k, v, *, causal=True, window=None, scale=None,
             pltpu.VMEM((block_q,), jnp.float32),       # running denominator
             pltpu.VMEM((block_q, d), jnp.float32),     # output accumulator
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary")),
         interpret=interpret,

@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import CompilerParams as _CompilerParams
+
 
 def _kernel(loga_ref, b_ref, y_ref, hlast_ref, h_scr, *, nchunks, chunk):
     ic = pl.program_id(2)
@@ -71,7 +73,7 @@ def rglru_scan(log_a, b, *, chunk=256, block_w=None, interpret=None):
             jax.ShapeDtypeStruct((B, W), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((bw,), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(log_a, b)

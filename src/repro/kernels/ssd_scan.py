@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import CompilerParams as _CompilerParams
+
 
 def _kernel(x_ref, dt_ref, alog_ref, b_ref, c_ref, y_ref, state_ref,
             h_scr, *, nchunks, chunk):
@@ -100,7 +102,7 @@ def ssd_scan(x, dt, A_log, B_mat, C_mat, chunk, *, block_h=None,
             jax.ShapeDtypeStruct((Bb, H, P, N), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((bh, P, N), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(x, dt, A_log, B_mat, C_mat)

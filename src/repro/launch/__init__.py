@@ -1,0 +1,1 @@
+"""Meshes, the multi-pod dry-run, and HLO accounting tools."""

@@ -16,7 +16,6 @@ ratio 6·N_active·D / total.
 """
 from __future__ import annotations
 
-import math
 
 from repro.configs.base import ArchConfig, ShapeSpec
 

@@ -13,9 +13,12 @@ import re
 from collections import defaultdict
 
 _DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*([a-z0-9]+)\[([\d,]*)\]")
+# operands may carry an inline type, e.g. dot(f32[64,128]{1,0} %lhs, ...)
+# (jaxlib >= 0.4.36 prints it; older versions print bare %names)
+_OPERAND = r"(?:[a-z0-9]+\[[\d,]*\](?:\{[\d,]*\})?\s+)?%([\w.\-]+)"
 _DOT_RE = re.compile(
     r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*[a-z0-9]+\[([\d,]*)\][^=]*"
-    r"dot\(%([\w.\-]+),\s*%([\w.\-]+)\)")
+    r"\bdot\(" + _OPERAND + r",\s*" + _OPERAND + r"\)")
 _CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
 _OPNAME_RE = re.compile(r'op_name="([^"]*)"')
 

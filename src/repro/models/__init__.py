@@ -1,0 +1,1 @@
+"""Declarative params + the unified multi-arch backbone."""

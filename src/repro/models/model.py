@@ -11,12 +11,9 @@ step function deploys to any GeoFF platform (single host, one pod, multi-pod).
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Optional
-
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding
 
 from repro.dist import sharding as shd
 from repro.models import params as prm
@@ -132,8 +129,8 @@ def make_train_step(cfg, optimizer, num_microbatches: int = 1):
         else:
             def mb(carry, mbatch):
                 gsum = carry
-                (l, m), g = grads_of(params, mbatch)
-                return jax.tree_util.tree_map(jnp.add, gsum, g), (l, m)
+                (mb_loss, m), g = grads_of(params, mbatch)
+                return jax.tree_util.tree_map(jnp.add, gsum, g), (mb_loss, m)
 
             split = jax.tree_util.tree_map(
                 lambda x: x.reshape((num_microbatches,

@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import hashlib
 import math
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional
 
 import jax
@@ -23,7 +23,8 @@ from repro.dist.sharding import pspec_for
 class ParamDef:
     shape: tuple
     axes: tuple               # logical axis names, len == len(shape)
-    init: str = "normal"      # normal | zeros | ones | embed | lru_lambda | ssd_alog | dt_bias
+    init: str = "normal"      # normal | zeros | ones | embed
+                              # | lru_lambda | ssd_alog | dt_bias
     scale: Optional[float] = None
 
     def __post_init__(self):

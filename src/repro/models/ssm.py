@@ -101,7 +101,7 @@ def ssd_chunked(x, dt, A_log, B_mat, C_mat, chunk, init_state=None):
     dc_seq = jnp.moveaxis(decay_chunk, 1, 0)             # (nc,B,H)
     s_seq = jnp.moveaxis(S_c, 1, 0)                      # (nc,B,H,P,N)
     h_final, h_prevs = jax.lax.scan(step, h0, (dc_seq, s_seq))
-    h_prevs = jnp.moveaxis(h_prevs, 0, 1)                # (B,nc,H,P,N) state before chunk
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)        # (B,nc,H,P,N) pre-chunk state
 
     # inter-chunk contribution: C_t · (h_prev * exp(cum[t]))
     y_inter = jnp.einsum("bcqn,bchpn,bcqh->bcqhp", Cr, h_prevs, jnp.exp(cum))

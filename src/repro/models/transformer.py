@@ -16,9 +16,6 @@ linear adapter.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Optional
-
 import jax
 import jax.numpy as jnp
 

@@ -6,7 +6,6 @@ exactly 2x parameter bytes, FSDP/TP-sharded identically to the params.
 """
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass
 
 import jax

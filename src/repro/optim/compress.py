@@ -61,7 +61,7 @@ def cross_pod_mean(grad, residual, axis_name: str = "pod"):
 def tree_compress_stats(grads):
     """Wire bytes with and without compression (reporting)."""
     leaves = jax.tree_util.tree_leaves(grads)
-    raw = sum(l.size * 4 for l in leaves)
-    compressed = sum(l.size * 1 + 4 for l in leaves)
+    raw = sum(leaf.size * 4 for leaf in leaves)
+    compressed = sum(leaf.size * 1 + 4 for leaf in leaves)
     return {"raw_bytes": raw, "int8_bytes": compressed,
             "ratio": raw / max(compressed, 1)}

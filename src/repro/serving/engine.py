@@ -30,7 +30,7 @@ import numpy as np
 
 from repro.core.prewarm import CompileCache
 from repro.models import model as M
-from repro.models.transformer import cache_defs, SpecDef, _is_spec
+from repro.models.transformer import cache_defs, _is_spec
 
 
 def _axis_trees(cfg):
@@ -137,9 +137,9 @@ class ServingEngine:
             if self.slot_caches is None:
                 # materialize the slot-batched cache pytree lazily
                 self.slot_caches = jax.tree_util.tree_map(
-                    lambda l, ax: jnp.zeros(
-                        l.shape[:ax] + (self.max_batch,) + l.shape[ax + 1:],
-                        l.dtype),
+                    lambda leaf, ax: jnp.zeros(
+                        leaf.shape[:ax] + (self.max_batch,)
+                        + leaf.shape[ax + 1:], leaf.dtype),
                     caches, self._baxis)
             self.slot_caches = jax.tree_util.tree_map(
                 lambda sc, c, ax: jax.lax.dynamic_update_slice_in_dim(

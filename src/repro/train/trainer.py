@@ -26,7 +26,6 @@ from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import NamedSharding
 
 from repro.checkpoint import CheckpointManager

@@ -6,6 +6,13 @@ import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    # Offline fallback: the dev container cannot pip install; vendor/ holds a
+    # minimal shim (see its docstring). CI installs the real hypothesis.
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "vendor"))
+
 import jax  # noqa: E402
 
 jax.config.update("jax_platform_name", "cpu")

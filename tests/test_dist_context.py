@@ -1,0 +1,110 @@
+"""use_sharding / current_sharding context semantics: nesting, thread
+isolation (each simulated platform executor carries its own context), and
+shard() as an exact no-op outside any mesh context (the single-device path
+the simulator and edge platforms rely on)."""
+import threading
+
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.dist import sharding as shd
+
+
+class FakeMesh:
+    def __init__(self, shape):
+        self.shape = shape
+
+
+MESH_A = FakeMesh({"data": 4, "model": 2})
+MESH_B = FakeMesh({"data": 2, "model": 4})
+
+
+def test_default_is_empty():
+    assert shd.current_sharding() == (None, None)
+
+
+def test_nesting_restores_outer():
+    ra, rb = shd.train_rules(), shd.decode_rules()
+    with shd.use_sharding(MESH_A, ra):
+        assert shd.current_sharding() == (MESH_A, ra)
+        with shd.use_sharding(MESH_B, rb):
+            assert shd.current_sharding() == (MESH_B, rb)
+        assert shd.current_sharding() == (MESH_A, ra)
+    assert shd.current_sharding() == (None, None)
+
+
+def test_context_instance_is_reusable():
+    ctx = shd.use_sharding(MESH_A, shd.train_rules())
+    for _ in range(2):
+        with ctx:
+            assert shd.current_sharding()[0] is MESH_A
+        assert shd.current_sharding() == (None, None)
+
+
+def test_exception_unwinds_context():
+    try:
+        with shd.use_sharding(MESH_A, shd.train_rules()):
+            raise RuntimeError("boom")
+    except RuntimeError:
+        pass
+    assert shd.current_sharding() == (None, None)
+
+
+def test_thread_isolation():
+    """A context bound on one thread must be invisible to another — the
+    platform registry runs every platform on its own executor threads."""
+    seen = {}
+    ready = threading.Event()
+    release = threading.Event()
+
+    def worker():
+        seen["before"] = shd.current_sharding()
+        with shd.use_sharding(MESH_B, shd.decode_rules()):
+            seen["inside"] = shd.current_sharding()[0]
+            ready.set()
+            release.wait(5)
+        seen["after"] = shd.current_sharding()
+
+    with shd.use_sharding(MESH_A, shd.train_rules()):
+        t = threading.Thread(target=worker)
+        t.start()
+        assert ready.wait(5)
+        # main thread still sees its own context while the worker holds B
+        assert shd.current_sharding()[0] is MESH_A
+        release.set()
+        t.join(5)
+    assert seen["before"] == (None, None)   # nothing leaked INTO the thread
+    assert seen["inside"] is MESH_B
+    assert seen["after"] == (None, None)
+
+
+def test_shard_noop_outside_context():
+    x = jnp.ones((4, 8))
+    assert shd.shard(x, "batch", "seq") is x        # identity, not a copy
+    assert shd.shard(x, "batch", None) is x
+
+
+def test_shard_noop_with_partial_context():
+    # a context with no mesh (edge platform wrapper) is also a no-op
+    x = jnp.ones((2, 2))
+    with shd.use_sharding(None, shd.replicated_rules()):
+        assert shd.shard(x, "batch", None) is x
+
+
+def test_platform_rules_heterogeneous():
+    """Edge platforms replicate everything; cloud platforms run the mesh
+    rules — the heterogeneous federation config (ISSUE tentpole)."""
+    edge = shd.rules_for_platform("edge")
+    cloud = shd.rules_for_platform("cloud", "train")
+    assert edge.lookup("batch") is None
+    assert cloud.lookup("batch") == "data"
+    assert shd.pspec_for((8, 16), ("batch", "seq"), edge, MESH_A) == P(None,
+                                                                       None)
+    assert shd.pspec_for((8, 16), ("batch", "seq"), cloud, MESH_A) == \
+        P("data", None)
+
+
+def test_rules_replace_lever():
+    rules = shd.train_rules().replace(embed=None)
+    assert rules.lookup("embed") is None
+    assert rules.lookup("ff") == "model"

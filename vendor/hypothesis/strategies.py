@@ -1,0 +1,166 @@
+"""Strategy subset for the shim — see package docstring for scope/caveats.
+
+Each strategy implements ``example(rng)``. Numeric strategies bias early
+draws toward their bounds (the cheap half of hypothesis's edge-case search:
+boundary values find divisibility/off-by-one bugs far more often than the
+interior). The draw counter behind that is epoch-scoped: ``@given`` bumps
+``new_epoch()`` per test run, so module-level strategies shared by several
+tests re-emit their boundary examples in EVERY test and a test's draws
+never depend on which tests ran before it (per-test determinism).
+"""
+from __future__ import annotations
+
+_EPOCH = 0
+
+
+def new_epoch():
+    global _EPOCH
+    _EPOCH += 1
+
+
+class SearchStrategy:
+    def example(self, rng):
+        raise NotImplementedError
+
+    def map(self, f):
+        return _Mapped(self, f)
+
+    def filter(self, pred):
+        return _Filtered(self, pred)
+
+
+class _Mapped(SearchStrategy):
+    def __init__(self, base, f):
+        self.base, self.f = base, f
+
+    def example(self, rng):
+        return self.f(self.base.example(rng))
+
+
+class _Filtered(SearchStrategy):
+    def __init__(self, base, pred):
+        self.base, self.pred = base, pred
+
+    def example(self, rng):
+        from . import _UnsatisfiedAssumption
+        for _ in range(100):
+            v = self.base.example(rng)
+            if self.pred(v):
+                return v
+        raise _UnsatisfiedAssumption()
+
+
+class _Bounded(SearchStrategy):
+    """Numeric base: first two draws of each epoch are the bounds."""
+
+    def __init__(self, lo, hi):
+        self.lo, self.hi = lo, hi
+        self._n = 0
+        self._epoch = -1
+
+    def _draw_index(self):
+        if self._epoch != _EPOCH:
+            self._epoch, self._n = _EPOCH, 0
+        self._n += 1
+        return self._n
+
+    def example(self, rng):
+        n = self._draw_index()
+        if n == 1:
+            return self.lo
+        if n == 2:
+            return self.hi
+        return self._interior(rng)
+
+
+class _Integers(_Bounded):
+    def _interior(self, rng):
+        return rng.randint(self.lo, self.hi)
+
+
+class _Floats(_Bounded):
+    def _interior(self, rng):
+        return rng.uniform(self.lo, self.hi)
+
+
+class _Lists(SearchStrategy):
+    def __init__(self, elem, min_size, max_size):
+        self.elem, self.min_size, self.max_size = elem, min_size, max_size
+
+    def example(self, rng):
+        n = rng.randint(self.min_size, self.max_size)
+        return [self.elem.example(rng) for _ in range(n)]
+
+
+class _Tuples(SearchStrategy):
+    def __init__(self, elems):
+        self.elems = elems
+
+    def example(self, rng):
+        return tuple(e.example(rng) for e in self.elems)
+
+
+class _SampledFrom(SearchStrategy):
+    def __init__(self, options):
+        self.options = list(options)
+
+    def example(self, rng):
+        return rng.choice(self.options)
+
+
+class _Characters(SearchStrategy):
+    def __init__(self, min_codepoint, max_codepoint):
+        self.lo, self.hi = min_codepoint, max_codepoint
+
+    def example(self, rng):
+        return chr(rng.randint(self.lo, self.hi))
+
+
+class _Text(SearchStrategy):
+    def __init__(self, alphabet, min_size, max_size):
+        self.alphabet = alphabet
+        self.min_size, self.max_size = min_size, max_size
+
+    def example(self, rng):
+        n = rng.randint(self.min_size, self.max_size)
+        return "".join(self.alphabet.example(rng) for _ in range(n))
+
+
+def integers(min_value, max_value):
+    return _Integers(min_value, max_value)
+
+
+def floats(min_value, max_value):
+    return _Floats(min_value, max_value)
+
+
+def lists(elements, *, min_size=0, max_size=None):
+    return _Lists(elements, min_size, max_size if max_size is not None
+                  else min_size + 10)
+
+
+def tuples(*elements):
+    return _Tuples(elements)
+
+
+def sampled_from(options):
+    return _SampledFrom(options)
+
+
+def characters(*, min_codepoint=97, max_codepoint=122, **_ignored):
+    return _Characters(min_codepoint, max_codepoint)
+
+
+def text(alphabet=None, *, min_size=0, max_size=None):
+    if alphabet is None:
+        alphabet = characters()
+    return _Text(alphabet, min_size, max_size if max_size is not None
+                 else min_size + 10)
+
+
+def booleans():
+    return _SampledFrom([False, True])
+
+
+def just(value):
+    return _SampledFrom([value])
