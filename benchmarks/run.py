@@ -1,6 +1,7 @@
 """Benchmark entry point: one bench per paper table/figure + system benches.
 
   paper_figs        Figs 4/6/8 medians + CDFs (calibrated simulator)
+  dag_overlap       chain vs DAG medians, +-prefetch (sim + real engine)
   wrapper_overhead  §4.1 wrapper < 1 ms (real wall-clock)
   real_overlap      real-JAX latency hiding on this host (not simulated)
   pipeline_overlap  data-pipeline DoubleBuffer vs sync input
@@ -9,6 +10,7 @@
 
 Output: CSV-ish ``name,us_per_call,derived`` blocks per bench.
 """
+
 from __future__ import annotations
 
 import argparse
@@ -19,25 +21,43 @@ import traceback
 
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--quick", action="store_true",
-                    help="reduced sample counts — the CI smoke gate that "
-                         "keeps the perf scripts importable and running")
+    ap.add_argument(
+        "--quick",
+        action="store_true",
+        help="reduced sample counts — the CI smoke gate that "
+        "keeps the perf scripts importable and running",
+    )
     args = ap.parse_args(argv)
 
     root = os.path.join(os.path.dirname(__file__), "..")
     sys.path.insert(0, os.path.join(root, "src"))
-    sys.path.insert(0, root)   # `benchmarks` as a package from anywhere
-    from benchmarks import (paper_figs, pipeline_overlap, real_overlap,
-                            roofline, timing_bench, wrapper_overhead)
+    sys.path.insert(0, root)  # `benchmarks` as a package from anywhere
+    from benchmarks import (
+        dag_overlap,
+        paper_figs,
+        pipeline_overlap,
+        real_overlap,
+        roofline,
+        timing_bench,
+        wrapper_overhead,
+    )
 
     n_fig = 80 if args.quick else 1800
     benches = [
         ("paper_figs", lambda: paper_figs.main(n=n_fig, write=not args.quick)),
-        ("wrapper_overhead",
-         lambda: wrapper_overhead.main(n_calls=100 if args.quick else 2000)),
+        (
+            "dag_overlap",
+            lambda: dag_overlap.main(n=n_fig, runs_real=3 if args.quick else 7),
+        ),
+        (
+            "wrapper_overhead",
+            lambda: wrapper_overhead.main(n_calls=100 if args.quick else 2000),
+        ),
         ("real_overlap", real_overlap.main),
-        ("pipeline_overlap",
-         lambda: pipeline_overlap.main(steps=4 if args.quick else 8)),
+        (
+            "pipeline_overlap",
+            lambda: pipeline_overlap.main(steps=4 if args.quick else 8),
+        ),
         ("timing", timing_bench.main),
         ("roofline", roofline.main),
     ]

@@ -17,7 +17,11 @@ central orchestrator. A step's middleware:
 ``Deployment`` is the deployer: it packages (handler, wrapper, middleware)
 per (function, platform) from a deployment specification, so one function
 definition runs anywhere (federated deployment, §3.1).
+
+Chains only: fan-out/fan-in workflows run on the dataflow engine
+(repro.dag.engine), which reuses the same pieces.
 """
+
 from __future__ import annotations
 
 import threading
@@ -38,7 +42,7 @@ from repro.core.workflow import Invocation, WorkflowSpec
 class StepResult:
     request_id: str
     outputs: object
-    timeline: dict          # step -> {phase: seconds}
+    timeline: dict  # step -> {phase: seconds}
     total_s: float
 
 
@@ -47,29 +51,35 @@ class _DeployedFn:
     name: str
     platform: Platform
     wrapper: PlatformWrapper
-    handler: Callable                    # handler(payload, data: dict) -> out
+    handler: Callable  # handler(payload, data: dict) -> out
     abstract_args: Optional[object] = None  # for pre-warm (compile) keys
-    compile_fn: Optional[Callable] = None   # jit-able step body (optional)
+    compile_fn: Optional[Callable] = None  # jit-able step body (optional)
 
 
 class Middleware:
     """The per-function choreography middleware."""
 
-    def __init__(self, deployed: _DeployedFn, registry: PlatformRegistry,
-                 store: ObjectStore, cache: CompileCache,
-                 prefetcher: Prefetcher, timing: PokeTimingController,
-                 resolve: Callable):
+    def __init__(
+        self,
+        deployed: _DeployedFn,
+        registry: PlatformRegistry,
+        store: ObjectStore,
+        cache: CompileCache,
+        prefetcher: Prefetcher,
+        timing: PokeTimingController,
+        resolve: Callable,
+    ):
         self.fn = deployed
         self.registry = registry
         self.store = store
         self.cache = cache
         self.prefetcher = prefetcher
         self.timing = timing
-        self._resolve = resolve          # (name, platform) -> Middleware
-        self._poked: dict = {}           # request_id -> (warm_fut, fetch_futs, t)
+        self._resolve = resolve  # (name, platform) -> Middleware
+        self._poked: dict = {}  # request_id -> (warm_fut, fetch_futs, t)
         self._lock = threading.Lock()
 
-    # -- phase 1: poke -----------------------------------------------------------
+    # -- phase 1: poke ---------------------------------------------------------
     def poke(self, request_id: str, wf: WorkflowSpec, step_index: int):
         """Argument-less pre-warm + pre-fetch trigger. Non-blocking.
 
@@ -83,22 +93,25 @@ class Middleware:
         spec = wf.steps[step_index]
         warm_fut = None
         if self.fn.compile_fn is not None and self.fn.abstract_args is not None:
-            warm_fut = self.cache.warm(self.fn.name, self.fn.platform.name,
-                                       self.fn.compile_fn,
-                                       self.fn.abstract_args)
+            warm_fut = self.cache.warm(
+                self.fn.name,
+                self.fn.platform.name,
+                self.fn.compile_fn,
+                self.fn.abstract_args,
+            )
         fetch_futs = {}
         if spec.data_deps:
-            fetch_futs = self.prefetcher.start(
-                spec.data_deps, self.fn.platform.region)
+            fetch_futs = self.prefetcher.start(spec.data_deps, self.fn.platform.region)
         with self._lock:
             self._poked[request_id] = (warm_fut, fetch_futs, t0)
         succ = wf.successor(step_index)
         if succ is not None and succ.prefetch:
             succ_mw = self._resolve(succ.name, succ.platform)
             self.registry.executor(self.fn.platform.name).submit(
-                succ_mw.poke, request_id, wf, step_index + 1)
+                succ_mw.poke, request_id, wf, step_index + 1
+            )
 
-    # -- phase 2: payload --------------------------------------------------------
+    # -- phase 2: payload ------------------------------------------------------
     def invoke(self, inv: Invocation) -> object:
         """Run this step, then hand off to the successor. Returns the final
         workflow output (chains propagate the return value backwards)."""
@@ -126,25 +139,29 @@ class Middleware:
         with self._lock:
             poked = self._poked.pop(rid, None)
         if self.fn.compile_fn is not None and self.fn.abstract_args is not None:
-            self.cache.get(self.fn.name, self.fn.platform.name,
-                           self.fn.compile_fn, self.fn.abstract_args)
+            self.cache.get(
+                self.fn.name,
+                self.fn.platform.name,
+                self.fn.compile_fn,
+                self.fn.abstract_args,
+            )
         timeline["warm_s"] = time.perf_counter() - t0
 
         # data: join prefetch futures, or fetch cold (baseline path)
         t0 = time.perf_counter()
         if poked is not None and poked[1]:
             data, exposed, modeled = self.prefetcher.join(poked[1])
-            self.timing.record_slack(spec.name,
-                                     (time.perf_counter() - poked[2])
-                                     - modeled)
+            self.timing.record_slack(
+                spec.name, (time.perf_counter() - poked[2]) - modeled
+            )
         elif spec.data_deps:
             data, _ = self.prefetcher.fetch_blocking(
-                spec.data_deps, self.fn.platform.region)
+                spec.data_deps, self.fn.platform.region
+            )
         else:
             data = {}
         timeline["fetch_s"] = time.perf_counter() - t0
-        self.timing.record_prepare(spec.name,
-                                   timeline["warm_s"] + timeline["fetch_s"])
+        self.timing.record_prepare(spec.name, timeline["warm_s"] + timeline["fetch_s"])
 
         # handler
         t0 = time.perf_counter()
@@ -157,16 +174,17 @@ class Middleware:
         if succ is None:
             return out, {spec.name: timeline}
         succ_mw = self._resolve(succ.name, succ.platform)
-        succ_inv = Invocation(inv.spec, inv.step_index + 1, out, rid,
-                              inv.t_start)
+        succ_inv = Invocation(inv.spec, inv.step_index + 1, out, rid, inv.t_start)
         src, dst = self.fn.platform, succ_mw.fn.platform
         if not (dst.allows_sync and dst.native_prefetch):
-            # public-cloud path: buffer the payload via the object store
+            # public-cloud path: buffer the payload via the object store;
+            # the key is a one-shot buffer — delete after the GET so
+            # __payload__ keys never accumulate across requests
             key = f"__payload__/{rid}/{succ.name}"
             self.store.put(key, out, dst.region, from_region=src.region)
             value, _ = self.store.get(key, dst.region)
-            succ_inv = Invocation(inv.spec, inv.step_index + 1, value, rid,
-                                  inv.t_start)
+            self.store.delete(key)
+            succ_inv = Invocation(inv.spec, inv.step_index + 1, value, rid, inv.t_start)
         result, sub_timeline = succ_mw.invoke(succ_inv)
         sub_timeline[spec.name] = timeline
         return result, sub_timeline
@@ -175,28 +193,42 @@ class Middleware:
 class Deployment:
     """The GeoFF deployer + client entry point."""
 
-    def __init__(self, registry: Optional[PlatformRegistry] = None,
-                 store: Optional[ObjectStore] = None,
-                 timing_mode: str = "eager"):
+    def __init__(
+        self,
+        registry: Optional[PlatformRegistry] = None,
+        store: Optional[ObjectStore] = None,
+        timing_mode: str = "eager",
+    ):
         self.registry = registry or PlatformRegistry()
         self.store = store or ObjectStore(self.registry.network)
         self.cache = CompileCache()
         self.prefetcher = Prefetcher(self.store)
         self.timing = PokeTimingController(timing_mode)
-        self._functions: dict = {}       # (name, platform) -> Middleware
+        self._functions: dict = {}  # (name, platform) -> Middleware
 
-    # -- deployer (§3.1) ---------------------------------------------------------
-    def deploy(self, name: str, handler: Callable, platforms,
-               abstract_args=None, compile_fn=None):
+    # -- deployer (§3.1) -------------------------------------------------------
+    def deploy(
+        self,
+        name: str,
+        handler: Callable,
+        platforms,
+        abstract_args=None,
+        compile_fn=None,
+    ):
         """Deploy one platform-independent handler to N platforms."""
         for pname in platforms:
             plat = self.registry.get(pname)
             wrapper = PlatformWrapper(plat, handler, name)
-            fn = _DeployedFn(name, plat, wrapper, handler, abstract_args,
-                             compile_fn)
+            fn = _DeployedFn(name, plat, wrapper, handler, abstract_args, compile_fn)
             self._functions[(name, pname)] = Middleware(
-                fn, self.registry, self.store, self.cache, self.prefetcher,
-                self.timing, self._resolve)
+                fn,
+                self.registry,
+                self.store,
+                self.cache,
+                self.prefetcher,
+                self.timing,
+                self._resolve,
+            )
         return self
 
     def _resolve(self, name: str, platform: str) -> Middleware:
@@ -205,9 +237,10 @@ class Deployment:
         except KeyError:
             raise KeyError(
                 f"function {name!r} is not deployed on {platform!r}; "
-                f"deployed: {sorted(self._functions)}") from None
+                f"deployed: {sorted(self._functions)}"
+            ) from None
 
-    # -- client ------------------------------------------------------------------
+    # -- client ----------------------------------------------------------------
     def run(self, spec: WorkflowSpec, payload) -> StepResult:
         """Invoke the first step with the input and the workflow spec —
         exactly what a GeoFF client sends."""

@@ -10,6 +10,7 @@ GeoFF uses the store in two roles (paper §4.1):
   - the inter-step payload buffer for public-cloud platforms that don't
     allow direct function-to-function traffic (non-native pre-fetching).
 """
+
 from __future__ import annotations
 
 import threading
@@ -42,14 +43,21 @@ def _sizeof(value) -> int:
 
 
 class ObjectStore:
-    def __init__(self, network: Optional[NetworkModel] = None,
-                 enforce_latency: bool = False):
+    def __init__(
+        self, network: Optional[NetworkModel] = None, enforce_latency: bool = False
+    ):
         self.network = network or NetworkModel()
         self.enforce_latency = enforce_latency
         self._objects: dict = {}
         self._lock = threading.Lock()
-        self.stats = {"puts": 0, "gets": 0, "bytes_in": 0, "bytes_out": 0,
-                      "modeled_get_s": 0.0, "modeled_put_s": 0.0}
+        self.stats = {
+            "puts": 0,
+            "gets": 0,
+            "bytes_in": 0,
+            "bytes_out": 0,
+            "modeled_get_s": 0.0,
+            "modeled_put_s": 0.0,
+        }
 
     # -- api -------------------------------------------------------------------
     def put(self, key: str, value, region: str, from_region: str = "") -> float:
@@ -88,6 +96,10 @@ class ObjectStore:
     def delete(self, key: str):
         with self._lock:
             self._objects.pop(key, None)
+
+    def keys(self, prefix: str = "") -> list:
+        with self._lock:
+            return [k for k in self._objects if k.startswith(prefix)]
 
     def __contains__(self, key: str):
         with self._lock:

@@ -12,6 +12,7 @@ just as the payload arrives. ``margin`` trades duration risk against
 double-billing; the controller also reports both costs so the trade-off is
 measurable (benchmarks/timing_bench.py).
 """
+
 from __future__ import annotations
 
 import threading
@@ -25,8 +26,9 @@ class EWMA:
         self.n = 0
 
     def update(self, x: float) -> float:
-        self.value = x if self.n == 0 else \
-            (1 - self.alpha) * self.value + self.alpha * x
+        self.value = (
+            x if self.n == 0 else (1 - self.alpha) * self.value + self.alpha * x
+        )
         self.n += 1
         return self.value
 
@@ -34,18 +36,19 @@ class EWMA:
 @dataclass
 class StepTimings:
     compute: EWMA = field(default_factory=EWMA)
-    prepare: EWMA = field(default_factory=EWMA)   # warm + prefetch duration
-    slack: EWMA = field(default_factory=EWMA)     # payload_arrival - prepare_done
-    double_billed: float = 0.0                     # accumulated idle seconds
-    exposed_wait: float = 0.0                      # accumulated late seconds
+    prepare: EWMA = field(default_factory=EWMA)  # warm + prefetch duration
+    slack: EWMA = field(default_factory=EWMA)  # payload_arrival - prepare_done
+    double_billed: float = 0.0  # accumulated idle seconds
+    exposed_wait: float = 0.0  # accumulated late seconds
 
 
 class PokeTimingController:
     """mode='eager'  — paper-faithful: poke at invocation (delay 0).
-       mode='learned' — §5.5: delay the poke to minimize double-billing."""
+    mode='learned' — §5.5: delay the poke to minimize double-billing."""
 
-    def __init__(self, mode: str = "eager", margin_s: float = 0.05,
-                 alpha: float = 0.25):
+    def __init__(
+        self, mode: str = "eager", margin_s: float = 0.05, alpha: float = 0.25
+    ):
         assert mode in ("eager", "learned")
         self.mode = mode
         self.margin_s = margin_s
@@ -56,8 +59,11 @@ class PokeTimingController:
     def _entry(self, step_name: str) -> StepTimings:
         with self._lock:
             if step_name not in self._timings:
+                # every EWMA — compute, prepare AND slack — must see the
+                # configured alpha (slack silently fell back to the default)
                 self._timings[step_name] = StepTimings(
-                    EWMA(self.alpha), EWMA(self.alpha))
+                    EWMA(self.alpha), EWMA(self.alpha), EWMA(self.alpha)
+                )
             return self._timings[step_name]
 
     def poke_delay(self, pred_name: str, succ_name: str) -> float:
@@ -70,9 +76,8 @@ class PokeTimingController:
             return max(0.0, succ.slack.value - self.margin_s)
         pred = self._entry(pred_name)
         if pred.compute.n == 0 or succ.prepare.n == 0:
-            return 0.0   # no data yet -> eager
-        return max(0.0, pred.compute.value - succ.prepare.value
-                   - self.margin_s)
+            return 0.0  # no data yet -> eager
+        return max(0.0, pred.compute.value - succ.prepare.value - self.margin_s)
 
     def record_compute(self, step_name: str, seconds: float):
         self._entry(step_name).compute.update(seconds)
@@ -92,8 +97,12 @@ class PokeTimingController:
 
     def report(self) -> dict:
         with self._lock:
-            return {k: {"compute_s": v.compute.value,
-                        "prepare_s": v.prepare.value,
-                        "double_billed_s": v.double_billed,
-                        "exposed_wait_s": v.exposed_wait}
-                    for k, v in self._timings.items()}
+            out = {}
+            for k, v in self._timings.items():
+                out[k] = {
+                    "compute_s": v.compute.value,
+                    "prepare_s": v.prepare.value,
+                    "double_billed_s": v.double_billed,
+                    "exposed_wait_s": v.exposed_wait,
+                }
+            return out

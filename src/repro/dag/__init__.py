@@ -1,0 +1,21 @@
+"""repro.dag — dataflow DAG engine for fan-out/fan-in federated workflows.
+
+Generalizes the chain-only GeoFF core to directed acyclic graphs:
+
+  spec     DagSpec / DagStep — per-request DAG routing (JSON round-trip,
+           topological validation, from_chain lift, place_dag wiring)
+  engine   DagDeployment — dataflow executor: pokes cascade along edges,
+           nodes fire when their last predecessor payload lands, branches
+           run concurrently on the platform executors
+  sim      DagWorkflowSimulator — the DAG timeline recurrence over the
+           calibrated latency distributions (chain-vs-DAG medians)
+"""
+
+from repro.dag.spec import DagSpec, DagStep, place_dag_spec  # noqa: F401
+from repro.dag.engine import DagDeployment, DagResult  # noqa: F401
+from repro.dag.sim import (  # noqa: F401
+    DagTrace,
+    DagWorkflowSimulator,
+    document_dag_fig4,
+    serialize_chain,
+)

@@ -1,0 +1,303 @@
+"""Dataflow executor for DAG workflows (fan-out/fan-in choreography).
+
+The chain ``Middleware`` recurses down a single successor; this engine
+generalizes the same two-phase protocol to a DAG, reusing the existing
+pieces unchanged (CompileCache, Prefetcher, ObjectStore,
+PokeTimingController, per-platform executors):
+
+  - pokes cascade along EDGES: poking a node immediately pokes all of its
+    successors, so a fan-out warms and pre-fetches every branch at once
+    (poking is deduplicated per request — a diamond's join is poked once);
+  - each node FIRES the moment its last predecessor payload lands
+    (dataflow firing rule). Per-predecessor payloads are buffered — through
+    the object store on platforms that disallow direct function-to-function
+    traffic (the chain's ``__payload__`` path, one key per edge, deleted
+    after the GET so fan-in buffers never leak) and in memory on sync
+    platforms;
+  - independent branches run concurrently on their platforms' executors:
+    the latency win over the chain serialization is real wall-clock
+    parallelism plus the usual pre-fetch overlap.
+
+Handlers keep the chain signature ``handler(payload, data)``. A fan-in node
+receives ``{pred_name: payload}``; source nodes receive the client payload;
+everything else receives its single predecessor's output unwrapped — so
+functions written for chains deploy onto DAGs without change.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+import uuid
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+from repro.core.choreographer import _DeployedFn
+from repro.core.platform import PlatformRegistry, PlatformWrapper
+from repro.core.prefetch import Prefetcher
+from repro.core.prewarm import CompileCache
+from repro.core.store import ObjectStore
+from repro.core.timing import PokeTimingController
+from repro.dag.spec import DagSpec
+
+
+@dataclass
+class DagResult:
+    request_id: str
+    outputs: object  # sink output; {sink_name: output} when several sinks
+    timeline: dict  # node -> {phase: seconds}
+    total_s: float
+
+
+class _RunState:
+    """All per-request mutable state (one instance per ``run``)."""
+
+    def __init__(self, spec: DagSpec, payload):
+        self.spec = spec
+        self.payload = payload
+        self.rid = uuid.uuid4().hex[:12]
+        self.lock = threading.Lock()
+        self.poke_seen: set = set()  # nodes whose poke already ran (dedup)
+        self.poked: dict = {}  # node -> (warm_fut, fetch_futs, t0)
+        self.buffers: dict = {n.name: {} for n in spec.steps}  # fan-in joins
+        self.fired: set = set()
+        self.timeline: dict = {}
+        self.outputs: dict = {}
+        self.pending_sinks = set(spec.sinks())
+        self.error: Optional[BaseException] = None
+        self.done = threading.Event()
+
+    def fail(self, exc: BaseException):
+        with self.lock:
+            if self.error is None:
+                self.error = exc
+        self.done.set()
+
+
+class DagDeployment:
+    """Deployer + client entry point for DAG workflows.
+
+    Same deployment surface as the chain ``Deployment`` — one
+    platform-independent handler deployed to N platforms — but ``run``
+    takes a ``DagSpec`` and drives the dataflow schedule.
+    """
+
+    def __init__(
+        self,
+        registry: Optional[PlatformRegistry] = None,
+        store: Optional[ObjectStore] = None,
+        timing_mode: str = "eager",
+    ):
+        self.registry = registry or PlatformRegistry()
+        self.store = store or ObjectStore(self.registry.network)
+        self.cache = CompileCache()
+        self.prefetcher = Prefetcher(self.store)
+        self.timing = PokeTimingController(timing_mode)
+        self._functions: dict = {}  # (name, platform) -> _DeployedFn
+        self._stats_lock = threading.Lock()
+        self.stats = {"pokes": {}, "joins": 0, "buffered_edges": 0}
+
+    # -- deployer --------------------------------------------------------------
+    def deploy(
+        self,
+        name: str,
+        handler: Callable,
+        platforms,
+        abstract_args=None,
+        compile_fn=None,
+    ):
+        for pname in platforms:
+            plat = self.registry.get(pname)
+            wrapper = PlatformWrapper(plat, handler, name)
+            self._functions[(name, pname)] = _DeployedFn(
+                name, plat, wrapper, handler, abstract_args, compile_fn
+            )
+        return self
+
+    def _resolve(self, name: str, platform: str) -> _DeployedFn:
+        try:
+            return self._functions[(name, platform)]
+        except KeyError:
+            raise KeyError(
+                f"function {name!r} is not deployed on {platform!r}; "
+                f"deployed: {sorted(self._functions)}"
+            ) from None
+
+    # -- client ----------------------------------------------------------------
+    def run(self, spec: DagSpec, payload, timeout_s: float = 120.0) -> DagResult:
+        """Invoke the DAG: deliver the client payload to every source node
+        and wait for all sinks. Raises whatever a node's handler raised."""
+        for s in spec.steps:  # fail fast on missing deployments
+            self._resolve(s.name, s.platform)
+        state = _RunState(spec, payload)
+        t0 = time.perf_counter()
+        for source in spec.sources():
+            self._deliver(state, None, source, payload)
+        if not state.done.wait(timeout_s):
+            raise TimeoutError(
+                f"request {state.rid} stalled; fired={sorted(state.fired)}"
+            )
+        if state.error is not None:
+            raise state.error
+        outs = state.outputs
+        outputs = outs[next(iter(outs))] if len(outs) == 1 else dict(outs)
+        return DagResult(
+            state.rid, outputs, dict(state.timeline), time.perf_counter() - t0
+        )
+
+    def shutdown(self):
+        self.registry.shutdown()
+        self.cache.shutdown()
+        self.prefetcher.shutdown()
+
+    # -- phase 1: poke (cascades along edges) ----------------------------------
+    def _poke(self, state: _RunState, node: str):
+        try:
+            with state.lock:
+                if node in state.poke_seen or node in state.fired:
+                    return
+                state.poke_seen.add(node)
+            t0 = time.perf_counter()
+            step = state.spec.node(node)
+            fn = self._resolve(step.name, step.platform)
+            warm_fut = None
+            if fn.compile_fn is not None and fn.abstract_args is not None:
+                warm_fut = self.cache.warm(
+                    fn.name, fn.platform.name, fn.compile_fn, fn.abstract_args
+                )
+            fetch_futs = {}
+            if step.data_deps:
+                fetch_futs = self.prefetcher.start(step.data_deps, fn.platform.region)
+            with state.lock:
+                state.poked[node] = (warm_fut, fetch_futs, t0)
+            with self._stats_lock:
+                self.stats["pokes"][node] = self.stats["pokes"].get(node, 0) + 1
+            # cascade: a fan-out pokes ALL successors at once
+            for succ in state.spec.successors(node):
+                if state.spec.node(succ).prefetch:
+                    self.registry.executor(step.platform).submit(
+                        self._poke, state, succ
+                    )
+        except BaseException as exc:  # surface poke-path bugs to the client
+            state.fail(exc)
+
+    # -- phase 2: payload (dataflow firing) ------------------------------------
+    def _deliver(self, state: _RunState, pred: Optional[str], node: str, value):
+        """Record one predecessor payload; fire when the LAST one lands."""
+        n_preds = len(state.spec.predecessors(node))
+        with state.lock:
+            if pred is not None:
+                state.buffers[node][pred] = value
+            fire = len(state.buffers[node]) == n_preds and node not in state.fired
+            if fire:
+                state.fired.add(node)
+        if fire:
+            step = state.spec.node(node)
+            self.registry.executor(step.platform).submit(self._fire, state, node)
+
+    def _fire(self, state: _RunState, node: str):
+        try:
+            self._run_node(state, node)
+        except BaseException as exc:
+            state.fail(exc)
+
+    def _transfer(self, state: _RunState, src: str, dst: str, value):
+        """Move one edge payload, then deliver it to the join buffer."""
+        try:
+            dst_plat = self.registry.get(state.spec.node(dst).platform)
+            src_plat = self.registry.get(state.spec.node(src).platform)
+            if not (dst_plat.allows_sync and dst_plat.native_prefetch):
+                # public-cloud path: buffer through the object store, one
+                # key per edge; delete after the GET (no fan-in leak)
+                key = f"__payload__/{state.rid}/{src}->{dst}"
+                self.store.put(
+                    key, value, dst_plat.region, from_region=src_plat.region
+                )
+                value, _ = self.store.get(key, dst_plat.region)
+                self.store.delete(key)
+                with self._stats_lock:
+                    self.stats["buffered_edges"] += 1
+            self._deliver(state, src, dst, value)
+        except BaseException as exc:
+            state.fail(exc)
+
+    def _run_node(self, state: _RunState, node: str):
+        spec = state.spec
+        step = spec.node(node)
+        fn = self._resolve(step.name, step.platform)
+        preds = spec.predecessors(node)
+        timeline = {}
+
+        # poke successors NOW (as early as possible; the learned controller
+        # may delay). The cascade usually got there first — _poke dedups.
+        for succ in spec.successors(node):
+            if not spec.node(succ).prefetch:
+                continue
+            delay = self.timing.poke_delay(step.name, succ)
+
+            def do_poke(succ=succ, delay=delay):
+                if delay > 0:
+                    time.sleep(delay)
+                self._poke(state, succ)
+
+            self.registry.executor(step.platform).submit(do_poke)
+
+        # cold start (compile) — hidden iff this node was poked
+        t0 = time.perf_counter()
+        with state.lock:
+            poked = state.poked.pop(node, None)
+        if fn.compile_fn is not None and fn.abstract_args is not None:
+            self.cache.get(fn.name, fn.platform.name, fn.compile_fn, fn.abstract_args)
+        timeline["warm_s"] = time.perf_counter() - t0
+
+        # data deps: join prefetch futures, or fetch cold
+        t0 = time.perf_counter()
+        if poked is not None and poked[1]:
+            data, exposed, modeled = self.prefetcher.join(poked[1])
+            self.timing.record_slack(
+                step.name, (time.perf_counter() - poked[2]) - modeled
+            )
+        elif step.data_deps:
+            data, _ = self.prefetcher.fetch_blocking(step.data_deps, fn.platform.region)
+        else:
+            data = {}
+        timeline["fetch_s"] = time.perf_counter() - t0
+        self.timing.record_prepare(step.name, timeline["warm_s"] + timeline["fetch_s"])
+
+        # assemble the input: client payload / unwrapped single pred /
+        # fan-in dict keyed by predecessor name
+        with state.lock:
+            buf = state.buffers.pop(node, {})
+        if not preds:
+            payload = state.payload
+        elif len(preds) == 1:
+            payload = buf[preds[0]]
+        else:
+            payload = {p: buf[p] for p in preds}
+            with self._stats_lock:
+                self.stats["joins"] += 1
+
+        # handler
+        t0 = time.perf_counter()
+        out = fn.wrapper(payload, data)
+        dt = time.perf_counter() - t0
+        timeline["compute_s"] = dt
+        self.timing.record_compute(step.name, dt)
+        with state.lock:
+            state.timeline[node] = timeline
+
+        # hand off along every out-edge (concurrently: each transfer runs
+        # on the DESTINATION platform's executor so branches stay parallel)
+        succs = spec.successors(node)
+        if not succs:
+            with state.lock:
+                state.outputs[node] = out
+                state.pending_sinks.discard(node)
+                finished = not state.pending_sinks
+            if finished:
+                state.done.set()
+            return
+        for succ in succs:
+            self.registry.executor(spec.node(succ).platform).submit(
+                self._transfer, state, node, succ, out
+            )

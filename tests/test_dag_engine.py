@@ -1,0 +1,293 @@
+"""The dataflow DAG engine: fan-out parallelism, fan-in joins, poke
+cascades along edges, payload-buffer hygiene, chain interop."""
+
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    DataRef,
+    Deployment,
+    Platform,
+    PlatformRegistry,
+    StepSpec,
+    WorkflowSpec,
+)
+from repro.dag import DagDeployment, DagSpec, DagStep
+
+
+def make_registry():
+    reg = PlatformRegistry()
+    reg.register(Platform("edge-eu", "eu", kind="edge", native_prefetch=True))
+    reg.register(Platform("cloud-us", "us", kind="cloud"))
+    return reg
+
+
+def make_dep(enforce=True):
+    dep = DagDeployment(make_registry())
+    dep.store.enforce_latency = enforce
+    dep.store.network.set_link("eu", "us", 0.04, 8e6)
+    return dep
+
+
+def sleep_handler(duration, factor=1):
+    def h(payload, data):
+        time.sleep(duration)
+        return payload * factor
+
+    return h
+
+
+def deploy_diamond(dep, branch_s=0.15):
+    dep.deploy("head", sleep_handler(0.02), ["edge-eu"])
+    dep.deploy("left", sleep_handler(branch_s, 2), ["cloud-us"])
+    dep.deploy("right", sleep_handler(branch_s, 3), ["cloud-us"])
+    dep.deploy("join", lambda p, d: (p["left"], p["right"]), ["cloud-us"])
+    return DagSpec(
+        (
+            DagStep("head", "edge-eu"),
+            DagStep("left", "cloud-us"),
+            DagStep("right", "cloud-us"),
+            DagStep("join", "cloud-us"),
+        ),
+        (
+            ("head", "left"),
+            ("head", "right"),
+            ("left", "join"),
+            ("right", "join"),
+        ),
+        "diamond",
+    )
+
+
+def test_diamond_executes_with_fan_in_join():
+    dep = make_dep(enforce=False)
+    spec = deploy_diamond(dep)
+    r = dep.run(spec, 1)
+    assert r.outputs == (2, 3)
+    assert set(r.timeline) == {"head", "left", "right", "join"}
+    assert dep.stats["joins"] == 1
+    dep.shutdown()
+
+
+def test_pokes_cascade_along_both_branches():
+    """One run pokes left, right AND the join — each exactly once (the
+    diamond's join is reachable via two paths but deduplicated)."""
+    dep = make_dep(enforce=False)
+    spec = deploy_diamond(dep)
+    dep.run(spec, 1)
+    assert dep.stats["pokes"] == {"left": 1, "right": 1, "join": 1}
+    dep.shutdown()
+
+
+def test_branches_run_in_parallel():
+    """Two 0.15 s branches finish in ~max, not ~sum: the DAG end-to-end
+    stays well under the chain serialization of the same handlers."""
+    dep = make_dep(enforce=False)
+    spec = deploy_diamond(dep, branch_s=0.15)
+    dep.run(spec, 1)  # warm pools
+    t_dag = min(dep.run(spec, 1).total_s for _ in range(3))
+    dep.shutdown()
+    assert t_dag < 0.15 * 2, t_dag  # sum would be >= 0.3
+
+
+def test_dag_beats_chain_serialization_real_engine():
+    """Acceptance: prefetch-on DAG median < chain serialization median of
+    the SAME steps on the real middlewares (enforced latencies)."""
+    deps = (DataRef("ref", "eu"),)
+
+    def seed(dep):
+        dep.store.put("ref", np.ones(int(4e5 // 8)), region="eu")
+        return dep
+
+    dag = seed(make_dep())
+    spec = deploy_diamond(dag, branch_s=0.12)
+    spec = DagSpec(
+        tuple(
+            DagStep(s.name, s.platform, deps if s.name in ("left", "right") else ())
+            for s in spec.steps
+        ),
+        spec.edges,
+        spec.workflow_id,
+    )
+    dag.run(spec, 1)
+    t_dag = float(np.median([dag.run(spec, 1).total_s for _ in range(3)]))
+    dag.shutdown()
+
+    chain = seed(Deployment(make_registry()))
+    chain.store.enforce_latency = True
+    chain.store.network.set_link("eu", "us", 0.04, 8e6)
+    chain.deploy("head", sleep_handler(0.02), ["edge-eu"])
+    chain.deploy("left", sleep_handler(0.12, 2), ["cloud-us"])
+    chain.deploy("right", sleep_handler(0.12, 3), ["cloud-us"])
+    chain.deploy("join", lambda p, d: p, ["cloud-us"])
+    cspec = WorkflowSpec(
+        (
+            StepSpec("head", "edge-eu"),
+            StepSpec("left", "cloud-us", data_deps=deps),
+            StepSpec("right", "cloud-us", data_deps=deps),
+            StepSpec("join", "cloud-us"),
+        ),
+        "diamond-chain",
+    )
+    chain.run(cspec, 1)
+    t_chain = float(np.median([chain.run(cspec, 1).total_s for _ in range(3)]))
+    chain.shutdown()
+    assert t_dag < t_chain, (t_dag, t_chain)
+
+
+def test_fan_in_payload_buffers_do_not_leak():
+    """Satellite: every __payload__ store key is deleted after its GET —
+    in the DAG engine AND the chain middleware."""
+    dep = make_dep(enforce=False)
+    spec = deploy_diamond(dep)
+    for _ in range(3):
+        dep.run(spec, 1)
+    assert dep.stats["buffered_edges"] > 0  # the store path was taken
+    assert dep.store.keys("__payload__") == []
+    dep.shutdown()
+
+    chain = Deployment(make_registry())
+    chain.deploy("a", lambda p, d: p, ["edge-eu"])
+    chain.deploy("b", lambda p, d: p, ["cloud-us"])
+    wf = WorkflowSpec((StepSpec("a", "edge-eu"), StepSpec("b", "cloud-us")))
+    for _ in range(3):
+        chain.run(wf, 1)
+    assert chain.store.stats["puts"] >= 3  # buffering did happen
+    assert chain.store.keys("__payload__") == []
+    chain.shutdown()
+
+
+def test_results_identical_with_and_without_prefetch():
+    dep = make_dep(enforce=False)
+    rng = np.random.default_rng(0)
+    dep.store.put("w", rng.normal(size=64), region="eu")
+
+    def scale(p, d):
+        return float(np.sum(d["w"])) * p
+
+    dep.deploy("head", lambda p, d: p + 1, ["edge-eu"])
+    dep.deploy("left", scale, ["cloud-us"])
+    dep.deploy("right", lambda p, d: p * 10, ["cloud-us"])
+    dep.deploy("join", lambda p, d: p["left"] + p["right"], ["cloud-us"])
+
+    def spec(prefetch):
+        return DagSpec(
+            (
+                DagStep("head", "edge-eu", prefetch=prefetch),
+                DagStep(
+                    "left",
+                    "cloud-us",
+                    data_deps=(DataRef("w", "eu"),),
+                    prefetch=prefetch,
+                ),
+                DagStep("right", "cloud-us", prefetch=prefetch),
+                DagStep("join", "cloud-us", prefetch=prefetch),
+            ),
+            (
+                ("head", "left"),
+                ("head", "right"),
+                ("left", "join"),
+                ("right", "join"),
+            ),
+        )
+
+    r1 = dep.run(spec(True), 2.0).outputs
+    r2 = dep.run(spec(False), 2.0).outputs
+    assert r1 == pytest.approx(r2)
+    dep.shutdown()
+
+
+def test_multi_source_multi_sink():
+    dep = make_dep(enforce=False)
+    dep.deploy("src_a", lambda p, d: p + 1, ["edge-eu"])
+    dep.deploy("src_b", lambda p, d: p + 2, ["edge-eu"])
+    dep.deploy("mid", lambda p, d: p["src_a"] * p["src_b"], ["cloud-us"])
+    dep.deploy("sink_x", lambda p, d: ("x", p), ["cloud-us"])
+    dep.deploy("sink_y", lambda p, d: ("y", p), ["edge-eu"])
+    spec = DagSpec(
+        (
+            DagStep("src_a", "edge-eu"),
+            DagStep("src_b", "edge-eu"),
+            DagStep("mid", "cloud-us"),
+            DagStep("sink_x", "cloud-us"),
+            DagStep("sink_y", "edge-eu"),
+        ),
+        (
+            ("src_a", "mid"),
+            ("src_b", "mid"),
+            ("mid", "sink_x"),
+            ("mid", "sink_y"),
+        ),
+    )
+    r = dep.run(spec, 10)  # both sources get the client input
+    assert r.outputs == {"sink_x": ("x", 132), "sink_y": ("y", 132)}
+    dep.shutdown()
+
+
+def test_chain_lifted_to_dag_matches_chain_engine():
+    """from_chain specs run on the DAG engine with identical results."""
+    wf = WorkflowSpec((StepSpec("a", "edge-eu"), StepSpec("b", "cloud-us")))
+
+    chain = Deployment(make_registry())
+    chain.deploy("a", lambda p, d: p + 1, ["edge-eu"])
+    chain.deploy("b", lambda p, d: p * 10, ["cloud-us"])
+    expected = chain.run(wf, 1).outputs
+    chain.shutdown()
+
+    dag = make_dep(enforce=False)
+    dag.deploy("a", lambda p, d: p + 1, ["edge-eu"])
+    dag.deploy("b", lambda p, d: p * 10, ["cloud-us"])
+    assert dag.run(DagSpec.from_chain(wf), 1).outputs == expected
+    dag.shutdown()
+
+
+def test_handler_error_propagates():
+    dep = make_dep(enforce=False)
+    dep.deploy("a", lambda p, d: p, ["edge-eu"])
+    dep.deploy("boom", lambda p, d: 1 / 0, ["cloud-us"])
+    spec = DagSpec(
+        (DagStep("a", "edge-eu"), DagStep("boom", "cloud-us")), (("a", "boom"),)
+    )
+    with pytest.raises(ZeroDivisionError):
+        dep.run(spec, 1)
+    dep.shutdown()
+
+
+def test_missing_deployment_raises():
+    dep = make_dep(enforce=False)
+    dep.deploy("a", lambda p, d: p, ["edge-eu"])
+    spec = DagSpec((DagStep("a", "cloud-us"),), ())
+    with pytest.raises(KeyError):
+        dep.run(spec, 0)
+    dep.shutdown()
+
+
+def test_prewarm_hides_compile_in_dag():
+    """A poked branch node compiles in the background (never a cold miss)."""
+    import jax
+    import jax.numpy as jnp
+
+    dep = make_dep(enforce=False)
+
+    def stepfn(x):
+        return jnp.tanh(x @ x.T).sum()
+
+    abstract = (jax.ShapeDtypeStruct((32, 32), jnp.float32),)
+    dep.deploy("head", sleep_handler(0.25), ["edge-eu"])
+    dep.deploy(
+        "b",
+        lambda p, d: float(stepfn(jnp.asarray(p))),
+        ["cloud-us"],
+        abstract_args=abstract,
+        compile_fn=stepfn,
+    )
+    spec = DagSpec(
+        (DagStep("head", "edge-eu"), DagStep("b", "cloud-us")), (("head", "b"),)
+    )
+    x = np.random.default_rng(0).normal(size=(32, 32)).astype(np.float32)
+    dep.run(spec, x)
+    assert dep.cache.stats["prewarms"] >= 1
+    assert dep.cache.stats["misses"] == 0
+    dep.shutdown()

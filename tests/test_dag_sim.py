@@ -1,0 +1,161 @@
+"""DAG discrete-event recurrence: chain degeneration, fan-out overlap,
+protocol properties, and the chain-vs-DAG acceptance medians."""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import simulator as S
+from repro.dag.sim import DagWorkflowSimulator, document_dag_fig4, serialize_chain
+
+
+def chain_edges(steps):
+    return [(steps[i].name, steps[i + 1].name) for i in range(len(steps) - 1)]
+
+
+def flat_platform():
+    return S.SimPlatform(
+        "p", "r", native_prefetch=True, allows_sync=True, cold_start=S.Dist(0.0)
+    )
+
+
+def test_degenerate_chain_matches_linear_recurrence():
+    """A from_chain-shaped DAG reproduces the chain simulator draw for
+    draw (same rng stream, same recurrence)."""
+    steps = S.document_workflow_fig4()
+    for prefetch in (True, False):
+        dag_sim = DagWorkflowSimulator(S.paper_platforms(), seed=11)
+        lin_sim = S.WorkflowSimulator(S.paper_platforms(), seed=11)
+        tr_dag = dag_sim.run_dag_request(steps, chain_edges(steps), 0.0, prefetch)
+        tr_lin = lin_sim.run_request(steps, 0.0, prefetch)
+        assert tr_dag.total_s == pytest.approx(tr_lin.total_s, abs=1e-12)
+        for i, s in enumerate(steps):
+            assert tr_dag.end[s.name] == pytest.approx(tr_lin.end[i])
+        assert tr_dag.double_billed_s == pytest.approx(tr_lin.double_billed_s)
+
+
+def test_fan_out_branches_overlap():
+    """Deterministic diamond: total = head + max(branches) + join (plus
+    transfers), NOT the chain's sum of branches."""
+
+    def mk(name, c):
+        return S.SimStep(name, "p", compute=S.Dist(c, 0.0))
+
+    steps = [mk("head", 0.1), mk("left", 1.0), mk("right", 2.0), mk("join", 0.1)]
+    edges = [("head", "left"), ("head", "right"), ("left", "join"), ("right", "join")]
+    sim = DagWorkflowSimulator([flat_platform()], msg_latency_s=0.0, seed=0)
+    tr = sim.run_dag_request(steps, edges, 0.0, prefetch=True)
+    assert tr.total_s == pytest.approx(0.1 + 2.0 + 0.1, abs=1e-6)
+    # the join waited for the SLOWER branch
+    assert tr.payload["join"] == pytest.approx(tr.end["right"], abs=1e-9)
+
+
+def test_join_payload_is_max_over_predecessors():
+    steps, edges = document_dag_fig4()
+    sim = DagWorkflowSimulator(S.paper_platforms(), seed=5)
+    tr = sim.run_dag_request(steps, edges, 0.0, prefetch=True)
+    pl = sim.platforms
+    by = {s.name: s for s in steps}
+    expected = max(
+        tr.end[u] + sim._transfer_s(pl[by[u].platform], pl[by["e_mail"].platform])
+        for u in ("virus", "ocr")
+    )
+    assert tr.payload["e_mail"] == pytest.approx(expected)
+
+
+def test_acceptance_dag_prefetch_beats_chain_serialization():
+    """Acceptance: calibrated diamond, prefetch-on DAG median below the
+    chain serialization of the same steps (and below DAG baseline)."""
+    steps, edges = document_dag_fig4()
+    chain = serialize_chain(steps, edges)
+    assert [s.name for s in chain] == ["check", "virus", "ocr", "e_mail"]
+
+    def fresh():
+        return DagWorkflowSimulator(S.paper_platforms(), seed=42)
+
+    dag_pf = S.median(fresh().run_dag_experiment(steps, edges, 400, prefetch=True))
+    dag_base = S.median(fresh().run_dag_experiment(steps, edges, 400, prefetch=False))
+    chain_pf = S.median(fresh().run_experiment(chain, 400, prefetch=True))
+    chain_base = S.median(fresh().run_experiment(chain, 400, prefetch=False))
+    assert dag_pf < chain_pf, (dag_pf, chain_pf)
+    assert dag_base < chain_base, (dag_base, chain_base)
+    assert dag_pf < dag_base, (dag_pf, dag_base)
+
+
+compute_st = st.floats(0.05, 3.0)
+fetch_st = st.floats(0.0, 3.0)
+
+
+def fan_out_fan_in(steps_raw):
+    """s0 fans out to every middle step; all middle steps join at the last."""
+    plats = S.paper_platforms()
+    steps = [
+        S.SimStep(
+            f"s{i}",
+            plats[i % len(plats)].name,
+            compute=S.Dist(c, 0.0),
+            fetch=S.Dist(f, 0.0),
+        )
+        for i, (c, f) in enumerate(steps_raw)
+    ]
+    last = steps[-1].name
+    edges = [("s0", s.name) for s in steps[1:-1]]
+    edges += [(s.name, last) for s in steps[1:-1]]
+    return plats, steps, edges
+
+
+@given(
+    st.lists(st.tuples(compute_st, fetch_st), min_size=3, max_size=6),
+    st.integers(0, 3),
+)
+@settings(max_examples=30, deadline=None)
+def test_dag_prefetch_never_slower(steps_raw, seed):
+    """Protocol property, DAG edition: with identical sampled durations the
+    dataflow schedule with pre-fetching is never slower than without."""
+    plats, steps, edges = fan_out_fan_in(steps_raw)
+    sim = DagWorkflowSimulator(plats, seed=seed)
+    base = sim.run_dag_request(steps, edges, 1e6, prefetch=False).total_s
+    sim = DagWorkflowSimulator(plats, seed=seed)
+    geo = sim.run_dag_request(steps, edges, 1e6, prefetch=True).total_s
+    assert geo <= base + 1e-9
+
+
+@given(
+    st.lists(st.tuples(compute_st, fetch_st), min_size=3, max_size=6),
+    st.integers(0, 3),
+)
+@settings(max_examples=30, deadline=None)
+def test_dag_never_slower_than_chain_serialization(steps_raw, seed):
+    """With identical sampled durations, the dataflow schedule is never
+    slower than the serialized chain of the same steps."""
+    plats, steps, edges = fan_out_fan_in(steps_raw)
+    for prefetch in (True, False):
+        dag_sim = DagWorkflowSimulator(plats, seed=seed)
+        dag = dag_sim.run_dag_request(steps, edges, 1e6, prefetch).total_s
+        lin_sim = S.WorkflowSimulator(plats, seed=seed)
+        lin = lin_sim.run_request(serialize_chain(steps, edges), 1e6, prefetch).total_s
+        assert dag <= lin + 1e-9
+
+
+def test_cycle_rejected():
+    steps = [
+        S.SimStep("a", "tinyfaas-edge", compute=S.Dist(0.1)),
+        S.SimStep("b", "tinyfaas-edge", compute=S.Dist(0.1)),
+    ]
+    sim = DagWorkflowSimulator(S.paper_platforms(), seed=0)
+    with pytest.raises(ValueError, match="cycle"):
+        sim.run_dag_request(steps, [("a", "b"), ("b", "a")], 0.0, True)
+
+
+def test_unpoked_node_pays_cold_path():
+    """prefetch=False on a node: its branch pays cold+fetch serially even
+    when the rest of the DAG is poked."""
+    steps = [
+        S.SimStep("a", "p", compute=S.Dist(1.0, 0.0)),
+        S.SimStep(
+            "b", "p", compute=S.Dist(0.1, 0.0), fetch=S.Dist(0.5, 0.0), prefetch=False
+        ),
+    ]
+    sim = DagWorkflowSimulator([flat_platform()], msg_latency_s=0.0, seed=0)
+    tr = sim.run_dag_request(steps, [("a", "b")], 0.0, prefetch=True)
+    # b's 0.5 fetch was NOT hidden behind a's 1.0 compute
+    assert tr.total_s == pytest.approx(1.0 + 0.5 + 0.1, abs=1e-6)

@@ -1,0 +1,129 @@
+"""DagSpec: validation, topological order, JSON round-trip, recomposition."""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.workflow import DataRef, StepSpec, WorkflowSpec
+from repro.dag import DagSpec, DagStep
+
+
+def diamond(prefetch=True):
+    return DagSpec(
+        (
+            DagStep("a", "p1", prefetch=prefetch),
+            DagStep(
+                "b",
+                "p1",
+                data_deps=(DataRef("k", "eu", 10),),
+                prefetch=prefetch,
+                params={"x": 1},
+            ),
+            DagStep("c", "p2", prefetch=prefetch),
+            DagStep("d", "p2", prefetch=prefetch),
+        ),
+        (("a", "b"), ("a", "c"), ("b", "d"), ("c", "d")),
+        "diamond",
+    )
+
+
+def test_graph_accessors():
+    spec = diamond()
+    assert spec.sources() == ("a",)
+    assert spec.sinks() == ("d",)
+    assert spec.successors("a") == ("b", "c")
+    assert spec.predecessors("d") == ("b", "c")
+    assert spec.topo_order() == ("a", "b", "c", "d")
+
+
+def test_topo_order_ignores_step_declaration_order():
+    spec = DagSpec(
+        (DagStep("d", "p"), DagStep("c", "p"), DagStep("b", "p"), DagStep("a", "p")),
+        (("a", "b"), ("a", "c"), ("b", "d"), ("c", "d")),
+    )
+    order = spec.topo_order()
+    for a, b in spec.edges:
+        assert order.index(a) < order.index(b)
+
+
+def test_validation_rejects_bad_graphs():
+    with pytest.raises(ValueError, match="empty"):
+        DagSpec((), ())
+    with pytest.raises(ValueError, match="duplicate step"):
+        DagSpec((DagStep("a", "p"), DagStep("a", "p")), ())
+    with pytest.raises(ValueError, match="unknown step"):
+        DagSpec((DagStep("a", "p"),), (("a", "z"),))
+    with pytest.raises(ValueError, match="self-edge"):
+        DagSpec((DagStep("a", "p"),), (("a", "a"),))
+    with pytest.raises(ValueError, match="duplicate edge"):
+        DagSpec((DagStep("a", "p"), DagStep("b", "p")), (("a", "b"), ("a", "b")))
+    with pytest.raises(ValueError, match="cycle"):
+        DagSpec(
+            (DagStep("a", "p"), DagStep("b", "p"), DagStep("c", "p")),
+            (("a", "b"), ("b", "c"), ("c", "a")),
+        )
+
+
+def test_json_roundtrip_diamond():
+    spec = diamond()
+    again = DagSpec.from_json(spec.to_json())
+    assert again == spec
+    assert again.node("b").data_deps == spec.node("b").data_deps
+    assert again.node("b").params == {"x": 1}
+
+
+names = st.text(
+    st.characters(min_codepoint=97, max_codepoint=122), min_size=1, max_size=6
+)
+
+
+@given(st.lists(names, min_size=1, max_size=7), st.integers(0, 10_000))
+@settings(max_examples=40, deadline=None)
+def test_json_roundtrip_random_dags(raw_nodes, seed):
+    """Random DAGs (edges only forward in a random order) survive JSON."""
+    import random
+
+    nodes = list(dict.fromkeys(raw_nodes))  # unique, order-preserving
+    rnd = random.Random(seed)
+    edges = tuple(
+        (nodes[i], nodes[j])
+        for i in range(len(nodes))
+        for j in range(i + 1, len(nodes))
+        if rnd.random() < 0.5
+    )
+    spec = DagSpec(
+        tuple(DagStep(n, f"p{rnd.randint(0, 2)}") for n in nodes), edges, "wf"
+    )
+    assert DagSpec.from_json(spec.to_json()) == spec
+
+
+def test_reroute_is_pure_recomposition():
+    spec = diamond()
+    moved = spec.reroute("c", "p9")
+    assert moved.node("c").platform == "p9"
+    assert spec.node("c").platform == "p2"  # original untouched
+    assert moved.edges == spec.edges
+    assert moved.node("b").data_deps == spec.node("b").data_deps
+
+
+def test_apply_placement_moves_many():
+    placed = diamond().apply_placement({"a": "px", "d": "py"})
+    assert placed.node("a").platform == "px"
+    assert placed.node("d").platform == "py"
+    assert placed.node("b").platform == "p1"
+
+
+def test_from_chain_degenerate_dag():
+    wf = WorkflowSpec(
+        (
+            StepSpec("s0", "p0"),
+            StepSpec("s1", "p1", data_deps=(DataRef("k", "eu"),)),
+            StepSpec("s2", "p0"),
+        ),
+        "chain",
+    )
+    dag = DagSpec.from_chain(wf)
+    assert dag.topo_order() == ("s0", "s1", "s2")
+    assert dag.edges == (("s0", "s1"), ("s1", "s2"))
+    assert dag.sources() == ("s0",) and dag.sinks() == ("s2",)
+    assert dag.node("s1").data_deps == wf.steps[1].data_deps
+    assert dag.workflow_id == "chain"

@@ -1,0 +1,124 @@
+"""shipping.place_dag: topological scoring, fan-in transfer sums, fallback."""
+
+from repro.core.shipping import PlacementCosts, place_dag
+from repro.core.workflow import DataRef, StepSpec
+from repro.dag import DagSpec, DagStep, place_dag_spec
+
+
+def costs_from_tables(fetch=None, compute=None, transfer=None):
+    fetch = fetch or {}
+    compute = compute or {}
+    transfer = transfer or {}
+    return PlacementCosts(
+        fetch_s=lambda name, p, deps: fetch.get((name, p), 0.0),
+        compute_s=lambda name, p: compute.get((name, p), 0.1),
+        transfer_s=lambda a, b, size: transfer.get((a, b), 0.0),
+        payload_size=1.0,
+    )
+
+
+def diamond_nodes():
+    return {
+        "a": StepSpec("a", "p1"),
+        "b": StepSpec("b", "p1"),
+        "c": StepSpec("c", "p1"),
+        "d": StepSpec("d", "p1"),
+    }
+
+
+DIAMOND = [("a", "b"), ("a", "c"), ("b", "d"), ("c", "d")]
+
+
+def test_respects_topological_order():
+    """Every node is placed, and placement decisions see all predecessor
+    placements even when the edge list is shuffled out of topo order."""
+    nodes = diamond_nodes()
+    transfer = {
+        ("p1", "p1"): 0.0,
+        ("p1", "p2"): 5.0,
+        ("p2", "p2"): 0.0,
+        ("p2", "p1"): 5.0,
+    }
+    for edges in (DIAMOND, list(reversed(DIAMOND))):
+        placement = place_dag(
+            nodes,
+            edges,
+            {n: ["p1", "p2"] for n in nodes},
+            costs_from_tables(transfer=transfer),
+        )
+        assert set(placement) == set(nodes)
+        # everything colocates: any cross-platform hop costs 5s
+        assert len(set(placement.values())) == 1
+
+
+def test_fan_in_sums_transfers_from_all_predecessors():
+    """The join 'd' must pay transfer from BOTH b (on pb) and c (on pc):
+    the platform minimizing the SUM wins, not the one closest to a single
+    predecessor."""
+    nodes = diamond_nodes()
+    # pin the branches apart; d chooses among px (cheap sum) and py (cheap
+    # from b only — a single-predecessor scorer would wrongly pick it)
+    candidates = {"a": ["p1"], "b": ["pb"], "c": ["pc"], "d": ["px", "py"]}
+    transfer = {
+        ("pb", "px"): 1.0,
+        ("pc", "px"): 1.0,  # sum 2.0
+        ("pb", "py"): 0.0,
+        ("pc", "py"): 3.0,  # sum 3.0
+    }
+    placement = place_dag(
+        nodes, DIAMOND, candidates, costs_from_tables(transfer=transfer)
+    )
+    assert placement["b"] == "pb" and placement["c"] == "pc"
+    assert placement["d"] == "px"
+
+
+def test_fallback_to_own_platform_without_candidates():
+    nodes = {"a": StepSpec("a", "p-own"), "b": StepSpec("b", "p-other")}
+    placement = place_dag(nodes, [("a", "b")], {}, costs_from_tables())
+    assert placement == {"a": "p-own", "b": "p-other"}
+
+
+def test_fetch_vs_transfer_tradeoff():
+    """A data-heavy node ships to the platform where its data is cheap even
+    when that platform is farther from the predecessor (§4.3 generalized)."""
+    nodes = {
+        "a": StepSpec("a", "p1"),
+        "b": StepSpec("b", "p1", data_deps=(DataRef("blob", "us", int(30e6)),)),
+    }
+    fetch = {("b", "p1"): 4.0, ("b", "us"): 0.4}
+    transfer = {("p1", "p1"): 0.0, ("p1", "us"): 0.8}
+    placement = place_dag(
+        nodes,
+        [("a", "b")],
+        {"b": ["p1", "us"]},
+        costs_from_tables(fetch=fetch, transfer=transfer),
+        prefetch=False,
+    )
+    assert placement["b"] == "us"
+
+
+def test_place_dag_spec_wires_routes():
+    """place_dag output lands back in DagSpec routes (apply_placement)."""
+    spec = DagSpec(
+        (
+            DagStep("a", "p1"),
+            DagStep("b", "p1"),
+            DagStep("c", "p1"),
+            DagStep("d", "p1"),
+        ),
+        tuple(DIAMOND),
+    )
+    transfer = {
+        ("pb", "px"): 1.0,
+        ("pc", "px"): 1.0,
+        ("pb", "py"): 0.0,
+        ("pc", "py"): 3.0,
+    }
+    placed = place_dag_spec(
+        spec,
+        {"a": ["p1"], "b": ["pb"], "c": ["pc"], "d": ["px", "py"]},
+        costs_from_tables(transfer=transfer),
+    )
+    assert placed.node("d").platform == "px"
+    assert placed.edges == spec.edges
+    assert placed.node("a").platform == "p1"

@@ -1,5 +1,6 @@
 """Learned poke-delay controller (paper §5.5): less double-billing at ~equal
 workflow duration."""
+
 import math
 
 import numpy as np
@@ -14,6 +15,16 @@ def test_ewma_converges():
     for _ in range(60):
         e.update(2.0)
     assert e.value == pytest.approx(2.0, abs=1e-3)
+
+
+def test_configured_alpha_reaches_all_ewmas():
+    """Regression: the slack EWMA must use the configured alpha too (it
+    silently fell back to the default 0.25)."""
+    c = PokeTimingController("learned", alpha=0.5)
+    e = c._entry("s")
+    assert e.compute.alpha == 0.5
+    assert e.prepare.alpha == 0.5
+    assert e.slack.alpha == 0.5
 
 
 def test_eager_mode_zero_delay():
@@ -41,8 +52,9 @@ def test_learned_timing_cuts_double_billing_in_sim():
     """Fig-4 workflow replayed with the learned delay: duration ~unchanged,
     double-billing cut hard (the §5.5 trade-off, measured)."""
     from benchmarks.timing_bench import run
+
     t_e, d_e = run("eager", n=400)
     t_l, d_l = run("learned", n=400)
-    assert d_e > 0.5                      # eager really does double-bill
-    assert t_l <= t_e * 1.07              # duration kept (within noise+margin)
-    assert d_l < d_e * 0.35, (d_l, d_e)   # idle cut by >65%
+    assert d_e > 0.5  # eager really does double-bill
+    assert t_l <= t_e * 1.07  # duration kept (within noise+margin)
+    assert d_l < d_e * 0.35, (d_l, d_e)  # idle cut by >65%
