@@ -89,49 +89,47 @@ def run_real(runs: int = 5) -> dict:
 
     head, branch, join = _handlers()
 
-    dag = seed(DagDeployment(_register(PlatformRegistry())))
-    dag.deploy("head", head, ["edge-eu"])
-    dag.deploy("left", branch, ["cloud-us"])
-    dag.deploy("right", branch, ["cloud-us"])
-    dag.deploy("join", join, ["cloud-us"])
-    spec = DagSpec(
-        (
-            DagStep("head", "edge-eu"),
-            DagStep("left", "cloud-us", data_deps=deps),
-            DagStep("right", "cloud-us", data_deps=deps),
-            DagStep("join", "cloud-us"),
-        ),
-        (
-            ("head", "left"),
-            ("head", "right"),
-            ("left", "join"),
-            ("right", "join"),
-        ),
-        "diamond",
-    )
-    dag.run(spec, 1.0)  # warm pools
-    ts = [dag.run(spec, 1.0).total_s for _ in range(runs)]
-    rows["real_dag_prefetch"] = float(np.median(ts))
-    dag.shutdown()
+    with seed(DagDeployment(_register(PlatformRegistry()))) as dag:
+        dag.deploy("head", head, ["edge-eu"])
+        dag.deploy("left", branch, ["cloud-us"])
+        dag.deploy("right", branch, ["cloud-us"])
+        dag.deploy("join", join, ["cloud-us"])
+        spec = DagSpec(
+            (
+                DagStep("head", "edge-eu"),
+                DagStep("left", "cloud-us", data_deps=deps),
+                DagStep("right", "cloud-us", data_deps=deps),
+                DagStep("join", "cloud-us"),
+            ),
+            (
+                ("head", "left"),
+                ("head", "right"),
+                ("left", "join"),
+                ("right", "join"),
+            ),
+            "diamond",
+        )
+        dag.run(spec, 1.0)  # warm pools
+        ts = [dag.run(spec, 1.0).total_s for _ in range(runs)]
+        rows["real_dag_prefetch"] = float(np.median(ts))
 
-    chain = seed(Deployment(_register(PlatformRegistry())))
-    chain.deploy("head", head, ["edge-eu"])
-    chain.deploy("left", branch, ["cloud-us"])
-    chain.deploy("right", branch, ["cloud-us"])
-    chain.deploy("join", join, ["cloud-us"])
-    cspec = WorkflowSpec(
-        (
-            StepSpec("head", "edge-eu"),
-            StepSpec("left", "cloud-us", data_deps=deps),
-            StepSpec("right", "cloud-us", data_deps=deps),
-            StepSpec("join", "cloud-us"),
-        ),
-        "diamond-chain",
-    )
-    chain.run(cspec, 1.0)
-    ts = [chain.run(cspec, 1.0).total_s for _ in range(runs)]
-    rows["real_chain_prefetch"] = float(np.median(ts))
-    chain.shutdown()
+    with seed(Deployment(_register(PlatformRegistry()))) as chain:
+        chain.deploy("head", head, ["edge-eu"])
+        chain.deploy("left", branch, ["cloud-us"])
+        chain.deploy("right", branch, ["cloud-us"])
+        chain.deploy("join", join, ["cloud-us"])
+        cspec = WorkflowSpec(
+            (
+                StepSpec("head", "edge-eu"),
+                StepSpec("left", "cloud-us", data_deps=deps),
+                StepSpec("right", "cloud-us", data_deps=deps),
+                StepSpec("join", "cloud-us"),
+            ),
+            "diamond-chain",
+        )
+        chain.run(cspec, 1.0)
+        ts = [chain.run(cspec, 1.0).total_s for _ in range(runs)]
+        rows["real_chain_prefetch"] = float(np.median(ts))
     return rows
 
 

@@ -5,20 +5,26 @@ matmul compute on this host.
 This is the CPU-scale ground truth that the simulator's protocol semantics
 are implemented by the SAME code path a TPU deployment would use.
 """
+
 from __future__ import annotations
 
 import time
 
 import numpy as np
 
-from repro.core import (DataRef, Deployment, Platform, PlatformRegistry,
-                        StepSpec, WorkflowSpec)
+from repro.core import (
+    DataRef,
+    Deployment,
+    Platform,
+    PlatformRegistry,
+    StepSpec,
+    WorkflowSpec,
+)
 
 
 def build(compute_s=0.4, fetch_bytes=int(4e6), bw=10e6):
     reg = PlatformRegistry()
-    reg.register(Platform("edge-eu", "eu", kind="edge",
-                          native_prefetch=True))
+    reg.register(Platform("edge-eu", "eu", kind="edge", native_prefetch=True))
     reg.register(Platform("cloud-us", "us"))
     dep = Deployment(reg)
     dep.store.enforce_latency = True
@@ -27,10 +33,10 @@ def build(compute_s=0.4, fetch_bytes=int(4e6), bw=10e6):
     dep.store.put("dep/big", rng.normal(size=fetch_bytes // 8), region="eu")
 
     def step_a(payload, data):
-        t_end = time.perf_counter() + compute_s   # deterministic busy work
+        t_end = time.perf_counter() + compute_s  # deterministic busy work
         x = payload
         while time.perf_counter() < t_end:
-            x = np.tanh(x @ x.T)[:payload.shape[0], :payload.shape[1]]
+            x = np.tanh(x @ x.T)[: payload.shape[0], : payload.shape[1]]
         return x
 
     def step_b(payload, data):
@@ -42,26 +48,34 @@ def build(compute_s=0.4, fetch_bytes=int(4e6), bw=10e6):
 
 
 def run(dep, prefetch, n=5):
-    wf = WorkflowSpec((
-        StepSpec("a", "edge-eu", prefetch=prefetch),
-        StepSpec("b", "cloud-us", data_deps=(DataRef("dep/big", "eu"),),
-                 prefetch=prefetch)))
+    wf = WorkflowSpec(
+        (
+            StepSpec("a", "edge-eu", prefetch=prefetch),
+            StepSpec(
+                "b",
+                "cloud-us",
+                data_deps=(DataRef("dep/big", "eu"),),
+                prefetch=prefetch,
+            ),
+        )
+    )
     x = np.random.default_rng(1).normal(size=(128, 128)).astype(np.float32)
     dep.run(wf, x)  # warm pools/compiles
     return [dep.run(wf, x).total_s for _ in range(n)]
 
 
 def main():
-    dep = build()
-    geo = np.median(run(dep, True))
-    base = np.median(run(dep, False))
-    hidden = dep.prefetcher.stats["hidden_s"]
+    with build() as dep:
+        geo = np.median(run(dep, True))
+        base = np.median(run(dep, False))
+        hidden = dep.prefetcher.stats["hidden_s"]
     print("name,us_per_call,derived")
-    print(f"real_overlap_baseline,{base*1e6:.0f},fetch_serial")
-    print(f"real_overlap_geoff,{geo*1e6:.0f},"
-          f"improvement_pct={(base-geo)/base*100:.1f} "
-          f"hidden_fetch_s={hidden:.2f}")
-    dep.shutdown()
+    print(f"real_overlap_baseline,{base * 1e6:.0f},fetch_serial")
+    print(
+        f"real_overlap_geoff,{geo * 1e6:.0f},"
+        f"improvement_pct={(base - geo) / base * 100:.1f} "
+        f"hidden_fetch_s={hidden:.2f}"
+    )
     return base, geo
 
 

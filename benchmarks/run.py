@@ -2,6 +2,7 @@
 
   paper_figs        Figs 4/6/8 medians + CDFs (calibrated simulator)
   dag_overlap       chain vs DAG medians, +-prefetch (sim + real engine)
+  placement         exact place_dag DP vs greedy baseline (asserts DP wins)
   wrapper_overhead  §4.1 wrapper < 1 ms (real wall-clock)
   real_overlap      real-JAX latency hiding on this host (not simulated)
   pipeline_overlap  data-pipeline DoubleBuffer vs sync input
@@ -36,6 +37,7 @@ def main(argv=None) -> None:
         dag_overlap,
         paper_figs,
         pipeline_overlap,
+        placement_bench,
         real_overlap,
         roofline,
         timing_bench,
@@ -49,6 +51,7 @@ def main(argv=None) -> None:
             "dag_overlap",
             lambda: dag_overlap.main(n=n_fig, runs_real=3 if args.quick else 7),
         ),
+        ("placement", placement_bench.main),
         (
             "wrapper_overhead",
             lambda: wrapper_overhead.main(n_calls=100 if args.quick else 2000),

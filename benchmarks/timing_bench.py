@@ -1,5 +1,12 @@
 """Beyond-paper §5.5: eager vs learned poke timing — the duration /
-double-billing trade-off, measured in the calibrated simulator."""
+double-billing trade-off, measured in the calibrated simulator.
+
+The controller now plugs straight into the unified simulator (``timing=``):
+each edge's poke is delayed by the learned per-(pred -> succ) slack, and the
+controller is fed per-edge slack observations relative to the undelayed
+poke, so the EWMA converges to the true idle gap instead of chasing its own
+feedback."""
+
 from __future__ import annotations
 
 import numpy as np
@@ -12,26 +19,12 @@ def run(mode: str, n=600, margin=0.2):
     plats = S.paper_platforms()
     steps = S.document_workflow_fig4()
     ctrl = PokeTimingController(mode, margin_s=margin)
-    sim = S.WorkflowSimulator(plats, seed=5)
+    sim = S.WorkflowSimulator(plats, seed=5, timing=ctrl)
     totals, dbs = [], []
     for k in range(n):
         tr = sim.run_request(steps, k * 1.0, prefetch=True)
-        # apply learned delays post-hoc per successor (the sim recurrence is
-        # linear in the poke time, so shifting prepare[i] is exact as long
-        # as downstream steps were payload-bound — asserted via start[i])
-        total_shift = 0.0
-        db = 0.0
-        for i in range(1, len(steps)):
-            delay = ctrl.poke_delay(steps[i - 1].name, steps[i].name)
-            prep = tr.prepare[i] + delay
-            start = max(tr.payload[i], prep)
-            db += max(0.0, start - prep)
-            total_shift = max(total_shift, start - tr.start[i])
-            # absolute slack vs the UNDELAYED poke -> the EWMA converges to
-            # the true idle gap and the delay tracks it
-            ctrl.record_slack(steps[i].name, tr.payload[i] - tr.prepare[i])
-        totals.append(tr.total_s + total_shift)
-        dbs.append(db if mode == "learned" else tr.double_billed_s)
+        totals.append(tr.total_s)
+        dbs.append(tr.double_billed_s)
     return float(np.median(totals)), float(np.median(dbs))
 
 
@@ -39,10 +32,12 @@ def main():
     print("name,us_per_call,derived")
     t_e, d_e = run("eager")
     t_l, d_l = run("learned")
-    print(f"poke_eager,{t_e*1e6:.0f},double_billed_s={d_e:.2f}")
-    print(f"poke_learned,{t_l*1e6:.0f},double_billed_s={d_l:.2f} "
-          f"duration_cost_pct={(t_l-t_e)/t_e*100:.1f} "
-          f"billing_saved_pct={(d_e-d_l)/max(d_e,1e-9)*100:.1f}")
+    print(f"poke_eager,{t_e * 1e6:.0f},double_billed_s={d_e:.2f}")
+    print(
+        f"poke_learned,{t_l * 1e6:.0f},double_billed_s={d_l:.2f} "
+        f"duration_cost_pct={(t_l - t_e) / t_e * 100:.1f} "
+        f"billing_saved_pct={(d_e - d_l) / max(d_e, 1e-9) * 100:.1f}"
+    )
     return (t_e, d_e), (t_l, d_l)
 
 

@@ -132,65 +132,71 @@ def main():
     pdf = b"%PDF-1.7 " + rng.bytes(int(1.2e6))
 
     # --- the DAG on the dataflow engine --------------------------------------
-    dag = deploy_all(DagDeployment(build_platforms()))
-    seed_store(dag.store, np.random.default_rng(11))
-    for spec, label in [
-        (dag_spec(True), "dag geoff (pre-fetching)"),
-        (dag_spec(False), "dag baseline (no poke)"),
-    ]:
-        dag.run(spec, pdf)  # warm
-        ts = [dag.run(spec, pdf).total_s for _ in range(3)]
-        print(f"{label:28s} median {np.median(ts) * 1e3:7.1f} ms")
-    print(
-        "fan-in joins:",
-        dag.stats["joins"],
-        " pokes:",
-        dict(sorted(dag.stats["pokes"].items())),
-    )
+    with deploy_all(DagDeployment(build_platforms())) as dag:
+        seed_store(dag.store, np.random.default_rng(11))
+        for spec, label in [
+            (dag_spec(True), "dag geoff (pre-fetching)"),
+            (dag_spec(False), "dag baseline (no poke)"),
+        ]:
+            dag.run(spec, pdf)  # warm
+            ts = [dag.run(spec, pdf).total_s for _ in range(3)]
+            print(f"{label:28s} median {np.median(ts) * 1e3:7.1f} ms")
+        print(
+            "fan-in joins:",
+            dag.stats["joins"],
+            " pokes:",
+            dict(sorted(dag.stats["pokes"].items())),
+        )
+        # per-edge slack (the timing controller's learning signal): each of
+        # e_mail's two in-edges carries its own gap — virus finishes early,
+        # ocr late — which is exactly what per-edge poke delays exploit
+        edges = dag.timing.report()["edges"]
+        for name in sorted(edges):
+            print(f"  edge {name:18s} slack={edges[name]['slack_s'] * 1e3:7.1f} ms")
 
-    # automated placement: ship OCR next to its data (§4.3 via place_dag)
-    ocr_fetch = {("ocr", "lambda-eu"): 1.9, ("ocr", "lambda-us"): 0.25}
-    costs = PlacementCosts(
-        fetch_s=lambda name, p, deps: ocr_fetch.get((name, p), 0.0),
-        compute_s=lambda name, p: 0.15,
-        transfer_s=lambda a, b, size: 0.05 if a == b else 0.4,
-    )
-    placed = place_dag_spec(
-        dag_spec(True, "lambda-eu"), {"ocr": ["lambda-eu", "lambda-us"]}, costs
-    )
-    print("place_dag ships ocr to:", placed.node("ocr").platform)
-    ts = [dag.run(placed, pdf).total_s for _ in range(3)]
-    print(f"{'dag auto-placed':28s} median {np.median(ts) * 1e3:7.1f} ms")
-    dag.shutdown()
+        # automated placement: ship OCR next to its data (§4.3, exact DP)
+        ocr_fetch = {("ocr", "lambda-eu"): 1.9, ("ocr", "lambda-us"): 0.25}
+        costs = PlacementCosts(
+            fetch_s=lambda name, p, deps: ocr_fetch.get((name, p), 0.0),
+            compute_s=lambda name, p: 0.15,
+            transfer_s=lambda a, b, size: 0.05 if a == b else 0.4,
+        )
+        placed = place_dag_spec(
+            dag_spec(True, "lambda-eu"), {"ocr": ["lambda-eu", "lambda-us"]}, costs
+        )
+        print("place_dag ships ocr to:", placed.node("ocr").platform)
+        ts = [dag.run(placed, pdf).total_s for _ in range(3)]
+        print(f"{'dag auto-placed':28s} median {np.median(ts) * 1e3:7.1f} ms")
 
-    # --- the chain serialization on the chain middleware ---------------------
-    chain = deploy_all(Deployment(build_platforms()))
-    seed_store(chain.store, np.random.default_rng(11))
+    # --- the chain serialization (a facade over the same dataflow core) ------
+    with deploy_all(Deployment(build_platforms())) as chain:
+        seed_store(chain.store, np.random.default_rng(11))
 
-    def chain_email(payload, data):  # chain has no fan-in: adapt the join
-        return e_mail({"virus": {"clean": True}, "ocr": payload}, data)
+        def chain_email(payload, data):  # chain has no fan-in: adapt the join
+            return e_mail({"virus": {"clean": True}, "ocr": payload}, data)
 
-    def chain_virus(payload, data):  # chain threads the pdf through virus
-        virus(payload, data)
-        return payload
+        def chain_virus(payload, data):  # chain threads the pdf through virus
+            virus(payload, data)
+            return payload
 
-    chain.deploy("e_mail", chain_email, ["lambda-us"])
-    chain.deploy("virus", chain_virus, ["gcf"])
-    spec = WorkflowSpec(
-        (
-            StepSpec("check", "tinyfaas-edge"),
-            StepSpec("virus", "gcf", data_deps=(DataRef("signatures/db", "us"),)),
-            StepSpec("ocr", "lambda-us", data_deps=(DataRef("ocr/weights", "us"),)),
-            StepSpec(
-                "e_mail", "lambda-us", data_deps=(DataRef("mail/template", "us"),)
+        chain.deploy("e_mail", chain_email, ["lambda-us"])
+        chain.deploy("virus", chain_virus, ["gcf"])
+        spec = WorkflowSpec(
+            (
+                StepSpec("check", "tinyfaas-edge"),
+                StepSpec("virus", "gcf", data_deps=(DataRef("signatures/db", "us"),)),
+                StepSpec(
+                    "ocr", "lambda-us", data_deps=(DataRef("ocr/weights", "us"),)
+                ),
+                StepSpec(
+                    "e_mail", "lambda-us", data_deps=(DataRef("mail/template", "us"),)
+                ),
             ),
-        ),
-        "docflow",
-    )
-    chain.run(spec, pdf)
-    ts = [chain.run(spec, pdf).total_s for _ in range(3)]
-    print(f"{'chain serialization':28s} median {np.median(ts) * 1e3:7.1f} ms")
-    chain.shutdown()
+            "docflow",
+        )
+        chain.run(spec, pdf)
+        ts = [chain.run(spec, pdf).total_s for _ in range(3)]
+        print(f"{'chain serialization':28s} median {np.median(ts) * 1e3:7.1f} ms")
 
 
 if __name__ == "__main__":

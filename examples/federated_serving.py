@@ -8,6 +8,7 @@ pod holding the cache (function shipping, §4.3/§5.3).
 
     PYTHONPATH=src python examples/federated_serving.py
 """
+
 import os
 import sys
 import time
@@ -18,8 +19,15 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import (Deployment, Platform, PlatformRegistry,
-                        PlacementCosts, StepSpec, WorkflowSpec, place_chain)
+from repro.core import (
+    Deployment,
+    Platform,
+    PlatformRegistry,
+    PlacementCosts,
+    StepSpec,
+    WorkflowSpec,
+    place_chain,
+)
 from repro.configs.registry import smoke_config
 from repro.models import model as M
 from repro.serving import Request, ServingEngine, pad_cache
@@ -33,73 +41,90 @@ def main():
     reg = PlatformRegistry()
     reg.register(Platform("prefill-pod", "us-east", native_prefetch=True))
     reg.register(Platform("decode-pod", "us-west", native_prefetch=True))
-    dep = Deployment(reg)
-    dep.store.network.set_link("us-east", "us-west", 0.02, 200e6)
+    with Deployment(reg) as dep:
+        dep.store.network.set_link("us-east", "us-west", 0.02, 200e6)
 
-    _prefill = jax.jit(lambda p, b: M.prefill(cfg, p, b))
-    _decode = jax.jit(lambda p, t, c, i: M.decode_step(cfg, p, t, c, i))
+        _prefill = jax.jit(lambda p, b: M.prefill(cfg, p, b))
+        _decode = jax.jit(lambda p, t, c, i: M.decode_step(cfg, p, t, c, i))
 
-    def prefill_fn(payload, data):
-        prompt = payload
-        logits, caches = _prefill(params, {"tokens": jnp.asarray(prompt)[None]})
-        caches = pad_cache(caches, MAXLEN, len(prompt), cfg=cfg)
-        key = f"kv/{hash(prompt.tobytes()) & 0xffff}"
-        dep.store.put(key, jax.tree_util.tree_map(np.asarray, caches),
-                      region="us-east")
-        return {"first_tok": int(jnp.argmax(logits[0])),
-                "kv_key": key, "pos": len(prompt)}
+        def prefill_fn(payload, data):
+            prompt = payload
+            logits, caches = _prefill(params, {"tokens": jnp.asarray(prompt)[None]})
+            caches = pad_cache(caches, MAXLEN, len(prompt), cfg=cfg)
+            key = f"kv/{hash(prompt.tobytes()) & 0xFFFF}"
+            dep.store.put(
+                key, jax.tree_util.tree_map(np.asarray, caches), region="us-east"
+            )
+            return {
+                "first_tok": int(jnp.argmax(logits[0])),
+                "kv_key": key,
+                "pos": len(prompt),
+            }
 
-    def decode_fn(payload, data):
-        host_caches, _ = dep.store.get(payload["kv_key"], "us-west")
-        caches = jax.tree_util.tree_map(jnp.asarray, host_caches)
-        tok, cur = payload["first_tok"], payload["pos"]
-        toks = [tok]
-        for _ in range(7):
-            logits, caches = _decode(params,
-                                     jnp.asarray([[tok]], jnp.int32), caches,
-                                     jnp.asarray(cur, jnp.int32))
-            tok = int(jnp.argmax(logits[0]))
-            toks.append(tok)
-            cur += 1
-        return toks
+        def decode_fn(payload, data):
+            host_caches, _ = dep.store.get(payload["kv_key"], "us-west")
+            caches = jax.tree_util.tree_map(jnp.asarray, host_caches)
+            tok, cur = payload["first_tok"], payload["pos"]
+            toks = [tok]
+            for _ in range(7):
+                logits, caches = _decode(
+                    params,
+                    jnp.asarray([[tok]], jnp.int32),
+                    caches,
+                    jnp.asarray(cur, jnp.int32),
+                )
+                tok = int(jnp.argmax(logits[0]))
+                toks.append(tok)
+                cur += 1
+            return toks
 
-    dep.deploy("prefill", prefill_fn, ["prefill-pod"])
-    dep.deploy("decode", decode_fn, ["prefill-pod", "decode-pod"])
+        dep.deploy("prefill", prefill_fn, ["prefill-pod"])
+        dep.deploy("decode", decode_fn, ["prefill-pod", "decode-pod"])
 
-    # --- placement: should decode run where the KV cache lives? -------------
-    spec = WorkflowSpec((StepSpec("prefill", "prefill-pod"),
-                         StepSpec("decode", "decode-pod")), "serve")
-    costs = PlacementCosts(
-        fetch_s=lambda n, p, d: 0.15 if (n, p) == ("decode", "decode-pod")
-        else 0.01,                      # cache ships over DCN if remote
-        compute_s=lambda n, p: 0.2,
-        transfer_s=lambda a, b, s: 0.0 if a == b else 0.02)
-    placed = place_chain(spec, {"decode": ["prefill-pod", "decode-pod"]},
-                         costs)
-    print(f"placement optimizer: decode -> {placed.steps[1].platform} "
-          "(ships the function to the cache)")
+        # --- placement: should decode run where the KV cache lives? ---------
+        spec = WorkflowSpec(
+            (StepSpec("prefill", "prefill-pod"), StepSpec("decode", "decode-pod")),
+            "serve",
+        )
+        costs = PlacementCosts(
+            # cache ships over DCN if decode runs remote from the cache
+            fetch_s=lambda n, p, d: (
+                0.15 if (n, p) == ("decode", "decode-pod") else 0.01
+            ),
+            compute_s=lambda n, p: 0.2,
+            transfer_s=lambda a, b, s: 0.0 if a == b else 0.02,
+        )
+        placed = place_chain(spec, {"decode": ["prefill-pod", "decode-pod"]}, costs)
+        print(
+            f"placement optimizer: decode -> {placed.steps[1].platform} "
+            "(ships the function to the cache)"
+        )
 
-    # --- run a few requests through the disaggregated workflow --------------
-    rng = np.random.default_rng(0)
-    for i in range(3):
-        prompt = rng.integers(1, 200, size=8).astype(np.int32)
-        r = dep.run(placed, prompt)
-        print(f"req {i}: {r.total_s*1e3:7.1f} ms tokens={r.outputs}")
+        # --- run a few requests through the disaggregated workflow ----------
+        rng = np.random.default_rng(0)
+        for i in range(3):
+            prompt = rng.integers(1, 200, size=8).astype(np.int32)
+            r = dep.run(placed, prompt)
+            print(f"req {i}: {r.total_s * 1e3:7.1f} ms tokens={r.outputs}")
 
-    # --- same model under the continuous-batching engine ---------------------
-    print("\ncontinuous batching on one pod:")
-    eng = ServingEngine(cfg, params, max_batch=3, max_len=MAXLEN)
-    for i in range(6):
-        eng.submit(Request(i, rng.integers(1, 200, size=6).astype(np.int32),
-                           max_new_tokens=6))
-    t0 = time.perf_counter()
-    stats = eng.run()
-    dt = time.perf_counter() - t0
-    print(f"  {stats['done']} requests in {dt*1e3:.0f} ms "
-          f"({stats['decode_steps']} decode steps, "
-          f"{stats['prefills']} prefills, mean TTFT "
-          f"{np.mean(stats['ttft_s'])*1e3:.0f} ms)")
-    dep.shutdown()
+        # --- same model under the continuous-batching engine -----------------
+        print("\ncontinuous batching on one pod:")
+        eng = ServingEngine(cfg, params, max_batch=3, max_len=MAXLEN)
+        for i in range(6):
+            eng.submit(
+                Request(
+                    i, rng.integers(1, 200, size=6).astype(np.int32), max_new_tokens=6
+                )
+            )
+        t0 = time.perf_counter()
+        stats = eng.run()
+        dt = time.perf_counter() - t0
+        print(
+            f"  {stats['done']} requests in {dt * 1e3:.0f} ms "
+            f"({stats['decode_steps']} decode steps, "
+            f"{stats['prefills']} prefills, mean TTFT "
+            f"{np.mean(stats['ttft_s']) * 1e3:.0f} ms)"
+        )
 
 
 if __name__ == "__main__":

@@ -7,22 +7,41 @@ The paper's contribution as a composable library:
   platform        Platform registry + PlatformWrapper (write once, deploy
                   to any mesh/host/edge device) + NetworkModel
   store           region-homed ObjectStore (S3 stand-in, real payloads)
-  choreographer   the decentralized middleware: two-phase poke/payload
-                  protocol, cascading pre-warm + pre-fetch
+  choreographer   chain facade over the dataflow core (repro.dag.engine):
+                  a chain is the degenerate DAG, lifted via from_chain
   prewarm         AOT CompileCache — XLA compilation as the TPU cold start
   prefetch        future-based data pre-fetching + DoubleBuffer pipeline
-  shipping        function-shipping placement optimizer (chain DP / DAG)
-  timing          learned poke-delay controller (paper §5.5 future work)
-  simulator       calibrated discrete-event sim reproducing Figs 4/6/8
+  shipping        placement optimizer: exact DAG DP (series-parallel /
+                  exhaustive) + greedy baseline; place_chain delegates
+  timing          learned poke-delay controller, keyed per (pred -> succ)
+                  edge (paper §5.5 future work)
+  simulator       unified discrete-event sim: one dataflow recurrence for
+                  chains and DAGs, reproducing Figs 4/6/8
 """
-from repro.core.workflow import (DataRef, Invocation, StepSpec,  # noqa: F401
-                                 WorkflowSpec)
-from repro.core.platform import (NetworkModel, Platform, PlatformRegistry,  # noqa: F401
-                                 PlatformWrapper, bind_sharding)
+
+from repro.core.workflow import (  # noqa: F401
+    DataRef,
+    Invocation,
+    StepSpec,
+    WorkflowSpec,
+)
+from repro.core.platform import (  # noqa: F401
+    NetworkModel,
+    Platform,
+    PlatformRegistry,
+    PlatformWrapper,
+    bind_sharding,
+)
 from repro.core.store import ObjectStore  # noqa: F401
-from repro.core.choreographer import Deployment, Middleware, StepResult  # noqa: F401
+from repro.core.choreographer import Deployment, StepResult  # noqa: F401
 from repro.core.prewarm import CompileCache  # noqa: F401
 from repro.core.prefetch import DoubleBuffer, Prefetcher  # noqa: F401
-from repro.core.shipping import (PlacementCosts, chain_cost,  # noqa: F401
-                                 place_chain, place_dag)
+from repro.core.shipping import (  # noqa: F401
+    PlacementCosts,
+    chain_cost,
+    dag_cost,
+    place_chain,
+    place_dag,
+    place_dag_greedy,
+)
 from repro.core.timing import PokeTimingController  # noqa: F401

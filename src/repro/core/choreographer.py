@@ -1,41 +1,37 @@
-"""The GeoFF choreography middleware (paper §3.2–§3.3).
+"""The GeoFF chain deployer — a thin facade over the dataflow core.
 
-One ``Middleware`` instance is co-deployed with every function; there is NO
-central orchestrator. A step's middleware:
+This repo carries exactly ONE implementation of the choreography protocol
+(poke -> prepare off the critical path -> payload): the dataflow engine in
+``repro.dag.engine``. The paper's workflows are chains (§3.2), and a chain
+is the degenerate DAG — each step's single successor is one edge — so
+``Deployment`` keeps the paper-shaped client API (``run(WorkflowSpec)`` ->
+``StepResult`` with a per-step timeline) and lifts every request through
+``DagSpec.from_chain`` onto ``DagDeployment``'s dataflow loop.
 
-  1. receives an ``Invocation`` (payload + per-request WorkflowSpec),
-  2. immediately POKES its successor (two-phase protocol, phase 1): an
-     argument-less signal that triggers the successor's pre-warm (AOT
-     compile) and data pre-fetch, both OFF the critical path,
-  3. fetches this step's own data deps (already in flight if this step was
-     itself poked), runs the handler,
-  4. sends the PAYLOAD (phase 2) to the successor — directly when the
-     platform allows synchronous calls (native platforms, e.g. our
-     tinyFaaS-analogue edge node), or buffered through the object store
-     (public-cloud platforms, paper §4.1).
+Everything the chain middleware used to do itself happens in the engine,
+semantics unchanged:
 
-``Deployment`` is the deployer: it packages (handler, wrapper, middleware)
-per (function, platform) from a deployment specification, so one function
-definition runs anywhere (federated deployment, §3.1).
-
-Chains only: fan-out/fan-in workflows run on the dataflow engine
-(repro.dag.engine), which reuses the same pieces.
+  1. invoking a step POKES its successor (two-phase protocol, phase 1),
+     triggering pre-warm (AOT compile) and data pre-fetch OFF the critical
+     path; pokes cascade so every step prepares as soon as the workflow is
+     invoked (§5.5 eager default; the learned controller delays per edge);
+  2. the step joins its own prepared futures, runs the handler, and sends
+     the PAYLOAD (phase 2) — directly on native platforms, buffered through
+     the object store on public-cloud platforms (§4.1), one one-shot
+     ``__payload__`` key per edge, deleted after the GET;
+  3. the deployer packages (handler, wrapper, middleware) per
+     (function, platform), so one function definition runs anywhere
+     (federated deployment, §3.1) — ``deploy`` is inherited unchanged.
 """
 
 from __future__ import annotations
 
-import threading
-import time
-import uuid
 from dataclasses import dataclass
-from typing import Callable, Optional
+from typing import Optional
 
-from repro.core.platform import Platform, PlatformRegistry, PlatformWrapper
-from repro.core.prefetch import Prefetcher
-from repro.core.prewarm import CompileCache
-from repro.core.store import ObjectStore
-from repro.core.timing import PokeTimingController
-from repro.core.workflow import Invocation, WorkflowSpec
+from repro.dag.engine import DagDeployment, DeployedFn  # noqa: F401 (compat)
+from repro.dag.spec import DagSpec
+from repro.core.workflow import WorkflowSpec
 
 
 @dataclass
@@ -46,212 +42,23 @@ class StepResult:
     total_s: float
 
 
-@dataclass
-class _DeployedFn:
-    name: str
-    platform: Platform
-    wrapper: PlatformWrapper
-    handler: Callable  # handler(payload, data: dict) -> out
-    abstract_args: Optional[object] = None  # for pre-warm (compile) keys
-    compile_fn: Optional[Callable] = None  # jit-able step body (optional)
+class Deployment(DagDeployment):
+    """The GeoFF deployer + client entry point for chain workflows.
 
+    Inherits the deployment surface (``deploy``, ``shutdown``, context
+    manager) from the dataflow engine; only ``run`` differs, translating
+    the chain ``WorkflowSpec`` request/response shapes.
+    """
 
-class Middleware:
-    """The per-function choreography middleware."""
-
-    def __init__(
-        self,
-        deployed: _DeployedFn,
-        registry: PlatformRegistry,
-        store: ObjectStore,
-        cache: CompileCache,
-        prefetcher: Prefetcher,
-        timing: PokeTimingController,
-        resolve: Callable,
-    ):
-        self.fn = deployed
-        self.registry = registry
-        self.store = store
-        self.cache = cache
-        self.prefetcher = prefetcher
-        self.timing = timing
-        self._resolve = resolve  # (name, platform) -> Middleware
-        self._poked: dict = {}  # request_id -> (warm_fut, fetch_futs, t)
-        self._lock = threading.Lock()
-
-    # -- phase 1: poke ---------------------------------------------------------
-    def poke(self, request_id: str, wf: WorkflowSpec, step_index: int):
-        """Argument-less pre-warm + pre-fetch trigger. Non-blocking.
-
-        Pokes CASCADE: a poked middleware immediately pokes its own
-        successor, so every step in the chain starts preparing as soon as
-        the workflow is invoked (paper §5.5 — minimum duration, accepting
-        the double-billing upper bound; the learned timing controller is
-        the knob that trades this back).
-        """
-        t0 = time.perf_counter()
-        spec = wf.steps[step_index]
-        warm_fut = None
-        if self.fn.compile_fn is not None and self.fn.abstract_args is not None:
-            warm_fut = self.cache.warm(
-                self.fn.name,
-                self.fn.platform.name,
-                self.fn.compile_fn,
-                self.fn.abstract_args,
-            )
-        fetch_futs = {}
-        if spec.data_deps:
-            fetch_futs = self.prefetcher.start(spec.data_deps, self.fn.platform.region)
-        with self._lock:
-            self._poked[request_id] = (warm_fut, fetch_futs, t0)
-        succ = wf.successor(step_index)
-        if succ is not None and succ.prefetch:
-            succ_mw = self._resolve(succ.name, succ.platform)
-            self.registry.executor(self.fn.platform.name).submit(
-                succ_mw.poke, request_id, wf, step_index + 1
-            )
-
-    # -- phase 2: payload ------------------------------------------------------
-    def invoke(self, inv: Invocation) -> object:
-        """Run this step, then hand off to the successor. Returns the final
-        workflow output (chains propagate the return value backwards)."""
-        spec = inv.spec.steps[inv.step_index]
-        succ = inv.spec.successor(inv.step_index)
-        rid = inv.request_id
-        timeline = {}
-
-        # poke the successor NOW (GeoFF: as early as possible; the learned
-        # controller may delay it, §5.5). If this step was itself poked the
-        # cascade already covered the successor — poking again is idempotent.
-        if succ is not None and succ.prefetch:
-            succ_mw = self._resolve(succ.name, succ.platform)
-            delay = self.timing.poke_delay(spec.name, succ.name)
-
-            def do_poke():
-                if delay > 0:
-                    time.sleep(delay)
-                succ_mw.poke(rid, inv.spec, inv.step_index + 1)
-
-            self.registry.executor(self.fn.platform.name).submit(do_poke)
-
-        # cold start (compile) — hidden iff this step was poked
-        t0 = time.perf_counter()
-        with self._lock:
-            poked = self._poked.pop(rid, None)
-        if self.fn.compile_fn is not None and self.fn.abstract_args is not None:
-            self.cache.get(
-                self.fn.name,
-                self.fn.platform.name,
-                self.fn.compile_fn,
-                self.fn.abstract_args,
-            )
-        timeline["warm_s"] = time.perf_counter() - t0
-
-        # data: join prefetch futures, or fetch cold (baseline path)
-        t0 = time.perf_counter()
-        if poked is not None and poked[1]:
-            data, exposed, modeled = self.prefetcher.join(poked[1])
-            self.timing.record_slack(
-                spec.name, (time.perf_counter() - poked[2]) - modeled
-            )
-        elif spec.data_deps:
-            data, _ = self.prefetcher.fetch_blocking(
-                spec.data_deps, self.fn.platform.region
-            )
-        else:
-            data = {}
-        timeline["fetch_s"] = time.perf_counter() - t0
-        self.timing.record_prepare(spec.name, timeline["warm_s"] + timeline["fetch_s"])
-
-        # handler
-        t0 = time.perf_counter()
-        out = self.fn.wrapper(inv.payload, data)
-        dt = time.perf_counter() - t0
-        timeline["compute_s"] = dt
-        self.timing.record_compute(spec.name, dt)
-
-        # hand off
-        if succ is None:
-            return out, {spec.name: timeline}
-        succ_mw = self._resolve(succ.name, succ.platform)
-        succ_inv = Invocation(inv.spec, inv.step_index + 1, out, rid, inv.t_start)
-        src, dst = self.fn.platform, succ_mw.fn.platform
-        if not (dst.allows_sync and dst.native_prefetch):
-            # public-cloud path: buffer the payload via the object store;
-            # the key is a one-shot buffer — delete after the GET so
-            # __payload__ keys never accumulate across requests
-            key = f"__payload__/{rid}/{succ.name}"
-            self.store.put(key, out, dst.region, from_region=src.region)
-            value, _ = self.store.get(key, dst.region)
-            self.store.delete(key)
-            succ_inv = Invocation(inv.spec, inv.step_index + 1, value, rid, inv.t_start)
-        result, sub_timeline = succ_mw.invoke(succ_inv)
-        sub_timeline[spec.name] = timeline
-        return result, sub_timeline
-
-
-class Deployment:
-    """The GeoFF deployer + client entry point."""
-
-    def __init__(
-        self,
-        registry: Optional[PlatformRegistry] = None,
-        store: Optional[ObjectStore] = None,
-        timing_mode: str = "eager",
-    ):
-        self.registry = registry or PlatformRegistry()
-        self.store = store or ObjectStore(self.registry.network)
-        self.cache = CompileCache()
-        self.prefetcher = Prefetcher(self.store)
-        self.timing = PokeTimingController(timing_mode)
-        self._functions: dict = {}  # (name, platform) -> Middleware
-
-    # -- deployer (§3.1) -------------------------------------------------------
-    def deploy(
-        self,
-        name: str,
-        handler: Callable,
-        platforms,
-        abstract_args=None,
-        compile_fn=None,
-    ):
-        """Deploy one platform-independent handler to N platforms."""
-        for pname in platforms:
-            plat = self.registry.get(pname)
-            wrapper = PlatformWrapper(plat, handler, name)
-            fn = _DeployedFn(name, plat, wrapper, handler, abstract_args, compile_fn)
-            self._functions[(name, pname)] = Middleware(
-                fn,
-                self.registry,
-                self.store,
-                self.cache,
-                self.prefetcher,
-                self.timing,
-                self._resolve,
-            )
-        return self
-
-    def _resolve(self, name: str, platform: str) -> Middleware:
-        try:
-            return self._functions[(name, platform)]
-        except KeyError:
-            raise KeyError(
-                f"function {name!r} is not deployed on {platform!r}; "
-                f"deployed: {sorted(self._functions)}"
-            ) from None
-
-    # -- client ----------------------------------------------------------------
-    def run(self, spec: WorkflowSpec, payload) -> StepResult:
+    def run(
+        self, spec: WorkflowSpec, payload, timeout_s: Optional[float] = None
+    ) -> StepResult:
         """Invoke the first step with the input and the workflow spec —
-        exactly what a GeoFF client sends."""
-        rid = uuid.uuid4().hex[:12]
-        first = spec.steps[0]
-        mw = self._resolve(first.name, first.platform)
-        t0 = time.perf_counter()
-        out, timeline = mw.invoke(Invocation(spec, 0, payload, rid, t0))
-        return StepResult(rid, out, timeline, time.perf_counter() - t0)
-
-    def shutdown(self):
-        self.registry.shutdown()
-        self.cache.shutdown()
-        self.prefetcher.shutdown()
+        exactly what a GeoFF client sends. Executes on the dataflow core
+        (chain = degenerate DAG); the result keeps the chain-era shape,
+        including the old synchronous semantics of waiting as long as the
+        steps take (pass ``timeout_s`` to bound it)."""
+        result = super().run(DagSpec.from_chain(spec), payload, timeout_s)
+        return StepResult(
+            result.request_id, result.outputs, result.timeline, result.total_s
+        )

@@ -1,4 +1,4 @@
-"""Discrete-event simulator for the paper's experiments (§4.2–§4.4).
+"""Unified discrete-event simulator for the paper's experiments (§4.2–§4.4).
 
 Public-cloud latencies cannot be measured in this container, so the three
 paper experiments are reproduced here: per-component latency distributions
@@ -8,18 +8,30 @@ shipping deltas then EMERGE from the same two-phase protocol the real
 middleware executes (poke cascade -> prepare || predecessor compute ->
 payload -> handler). Nothing about the improvement is hard-coded.
 
-Timeline recurrence per request (chain workflows):
-    poke[i+1]    = poke[i] + msg_latency            (cascade)
-    prepare[i]   = poke[i] + cold_i + fetch_i       (prefetch on)
-    payload[i]   = end[i-1] + transfer_{i-1 -> i}
-    start[i]     = max(payload[i], prepare[i])      (prefetch on)
-                 = payload[i] + cold_i + fetch_i    (baseline)
-    end[i]       = start[i] + compute_i
+ONE recurrence serves chains and DAGs (mirroring the runtime, where the
+chain deployer is a facade over the dataflow engine). Per request, with
+``u`` ranging over the predecessors of node ``v``:
 
-Double-billing per step (prefetch on): start[i] - prepare[i] clipped at 0 —
-the instance is up and idle (paper §5.5); the learned timing controller
-(core/timing.py) shrinks it by delaying the poke.
+    poke[v]    = min over u of poke[u] + msg_latency + delay(u->v)
+                 (cascade; sources are poked at t0; delay(u->v) is the
+                 per-edge learned poke delay, 0 when no controller is set)
+    prepare[v] = poke[v] + cold_v + fetch_v              (prefetch on)
+    payload[v] = max over u of end[u] + transfer(u -> v) (fan-in join)
+    start[v]   = max(payload[v], prepare[v])             (prefetch on)
+               = payload[v] + cold_v + fetch_v           (baseline)
+    end[v]     = start[v] + compute_v
+    total      = max over sinks of end[sink] - t0
+
+``run_request`` executes this on the degenerate chain graph — positionally,
+so the sampled trace is draw-for-draw what the pre-unification chain
+simulator produced. ``run_dag_request`` executes it on an explicit edge
+list. Double-billing per node (prefetch on) is start - prepare clipped at 0
+— the instance is up and idle (paper §5.5); pass a ``PokeTimingController``
+as ``timing=`` to shrink it: each edge's poke is delayed by the learned
+slack, and the controller is fed per-edge slack observations (relative to
+the undelayed poke) plus per-step compute/prepare EWMAs.
 """
+
 from __future__ import annotations
 
 import math
@@ -28,6 +40,8 @@ from typing import Optional
 
 import numpy as np
 
+from repro.core.graph import graph_views
+
 
 # ---------------------------------------------------------------------------
 # latency model pieces
@@ -35,6 +49,7 @@ import numpy as np
 @dataclass(frozen=True)
 class Dist:
     """Lognormal around a median with multiplicative spread sigma."""
+
     median: float
     sigma: float = 0.12
 
@@ -59,7 +74,7 @@ class SimStep:
     name: str
     platform: str
     compute: Dist
-    fetch: Dist = Dist(0.0)      # external data download at the step's region
+    fetch: Dist = Dist(0.0)  # external data download at the step's region
     prefetch: bool = True
 
 
@@ -74,13 +89,25 @@ class RequestTrace:
     exposed_fetch_s: float
 
 
+@dataclass
+class DagTrace:
+    total_s: float
+    start: dict
+    end: dict
+    prepare: dict
+    payload: dict
+    double_billed_s: float
+    exposed_fetch_s: float
+
+
 class ObjectLatency:
     """Object-store GET/PUT between regions: fixed per-op overhead + size/bw.
     Captures the paper's §4.4 observation that even a 256 KB cross-provider
     S3 GET costs ~0.8 s (TLS + cross-region + S3 service latency)."""
 
-    def __init__(self, overhead_same=0.03, overhead_cross=0.35,
-                 bw_same=50e6, bw_cross=8e6):
+    def __init__(
+        self, overhead_same=0.03, overhead_cross=0.35, bw_same=50e6, bw_cross=8e6
+    ):
         self.overhead_same = overhead_same
         self.overhead_cross = overhead_cross
         self.bw_same = bw_same
@@ -93,25 +120,49 @@ class ObjectLatency:
         return oh + size_bytes / bw
 
 
+def _graph(steps, edges):
+    """Predecessors, successors, and a deterministic topo order (ties broken
+    by ``steps`` order) for an edge-list DAG over named steps."""
+    return graph_views([s.name for s in steps], edges)
+
+
+def serialize_chain(steps, edges):
+    """The chain serialization of a DAG: its steps in topological order,
+    executed as a linear workflow (the baseline a DAG schedule beats)."""
+    _, _, order = _graph(steps, edges)
+    by_name = {s.name: s for s in steps}
+    return [by_name[n] for n in order]
+
+
 class WorkflowSimulator:
-    def __init__(self, platforms, msg_latency_s: float = 0.045,
-                 object_latency: Optional[ObjectLatency] = None,
-                 payload_size_bytes: float = 1.5e6, seed: int = 0):
+    """One simulator for chains and DAGs: same platforms, latencies,
+    cold-start bookkeeping and rng, so results are directly comparable."""
+
+    def __init__(
+        self,
+        platforms,
+        msg_latency_s: float = 0.045,
+        object_latency: Optional[ObjectLatency] = None,
+        payload_size_bytes: float = 1.5e6,
+        seed: int = 0,
+        timing=None,
+    ):
         self.platforms = {p.name: p for p in platforms}
         self.msg = msg_latency_s
         self.obj = object_latency or ObjectLatency()
         self.payload_size = payload_size_bytes
         self.rng = np.random.default_rng(seed)
+        self.timing = timing  # optional PokeTimingController (per-edge)
         self._last_use: dict = {}
 
     # -- transfer of the inter-step payload ------------------------------------
     def _transfer_s(self, src: SimPlatform, dst: SimPlatform) -> float:
-        if dst.native_prefetch and dst.allows_sync \
-                and src.region == dst.region:
-            return self.msg * 0.1        # direct local call (tinyFaaS)
+        if dst.native_prefetch and dst.allows_sync and src.region == dst.region:
+            return self.msg * 0.1  # direct local call (tinyFaaS)
         # public-cloud path: buffer via object store (PUT at src + GET at dst)
-        return (self.obj.op_s(src.region, dst.region, self.payload_size)
-                + self.obj.op_s(dst.region, dst.region, self.payload_size))
+        return self.obj.op_s(src.region, dst.region, self.payload_size) + self.obj.op_s(
+            dst.region, dst.region, self.payload_size
+        )
 
     def _cold(self, step: SimStep, t: float) -> float:
         plat = self.platforms[step.platform]
@@ -120,53 +171,130 @@ class WorkflowSimulator:
         cold = (t - last) > plat.keep_warm_s
         return plat.cold_start.sample(self.rng) if cold else 0.0
 
-    # -- one request -------------------------------------------------------------
-    def run_request(self, steps, t0: float, prefetch: bool) -> RequestTrace:
-        n = len(steps)
-        poke = [math.inf] * n
-        prepare = [0.0] * n
-        payload = [0.0] * n
-        start = [0.0] * n
-        end = [0.0] * n
+    # -- the one dataflow recurrence -------------------------------------------
+    def _run_graph(self, order, steps, preds, succs, t0: float, prefetch: bool):
+        """``order``: topo-sorted node ids; ``steps``: {id: SimStep};
+        ``preds``/``succs``: {id: [ids]}. Ids are arbitrary hashables so the
+        chain path can key positionally (duplicate step names allowed)."""
+        poke = {v: math.inf for v in order}
+        poke0 = {v: math.inf for v in order}  # the undelayed (eager) cascade
+        if prefetch:
+            for v in order:
+                if not preds[v]:
+                    poke[v] = poke0[v] = t0
+                elif steps[v].prefetch:
+                    poke0[v] = min(poke0[u] for u in preds[v]) + self.msg
+                    best = math.inf
+                    for u in preds[v]:
+                        d = 0.0
+                        if self.timing is not None:
+                            d = self.timing.poke_delay(steps[u].name, steps[v].name)
+                        best = min(best, poke[u] + self.msg + d)
+                    poke[v] = best
+
+        prepare = {v: 0.0 for v in order}
+        payload, start, end = {}, {}, {}
         double_billed = 0.0
         exposed_fetch = 0.0
-
-        if prefetch:
-            poke[0] = t0
-            for i in range(1, n):
-                poke[i] = poke[i - 1] + self.msg if steps[i].prefetch \
-                    else math.inf
-
-        payload[0] = t0 + self.msg / 2
-        for i, step in enumerate(steps):
+        for v in order:
+            step = steps[v]
             cold = self._cold(step, t0)
             fetch = step.fetch.sample(self.rng)
-            if prefetch and poke[i] < math.inf:
-                prepare[i] = poke[i] + cold + fetch
-                start[i] = max(payload[i], prepare[i])
-                double_billed += max(0.0, start[i] - prepare[i])
-                exposed_fetch += max(0.0, prepare[i] - payload[i])
+            if not preds[v]:
+                payload[v] = t0 + self.msg / 2
             else:
-                start[i] = payload[i] + cold + fetch
+                dst = self.platforms[step.platform]
+                payload[v] = max(
+                    end[u] + self._transfer_s(self.platforms[steps[u].platform], dst)
+                    for u in preds[v]
+                )
+            if prefetch and poke[v] < math.inf:
+                prepare[v] = poke[v] + cold + fetch
+                start[v] = max(payload[v], prepare[v])
+                double_billed += max(0.0, start[v] - prepare[v])
+                exposed_fetch += max(0.0, prepare[v] - payload[v])
+            else:
+                start[v] = payload[v] + cold + fetch
                 exposed_fetch += fetch
-            end[i] = start[i] + step.compute.sample(self.rng)
-            self._last_use[(step.name, step.platform)] = end[i]
-            if i + 1 < n:
-                src = self.platforms[step.platform]
-                dst = self.platforms[steps[i + 1].platform]
-                payload[i + 1] = end[i] + self._transfer_s(src, dst)
-        return RequestTrace(end[-1] - t0, start, end, prepare, payload,
-                            double_billed, exposed_fetch)
+            end[v] = start[v] + step.compute.sample(self.rng)
+            self._last_use[(step.name, step.platform)] = end[v]
+            if self.timing is not None and prefetch:
+                self.timing.record_prepare(step.name, cold + fetch)
+                self.timing.record_compute(step.name, end[v] - start[v])
+                if preds[v] and poke[v] < math.inf:
+                    # slack relative to the UNDELAYED cascade (poke0): the
+                    # observation must not depend on the applied delays, or
+                    # the EWMA chases its own feedback (on a fan-in, the
+                    # delay embedded in prepare[v] is the argmin edge's,
+                    # not each recorded edge's)
+                    prepare0 = poke0[v] + cold + fetch
+                    dst = self.platforms[step.platform]
+                    for u in preds[v]:
+                        arrival = end[u] + self._transfer_s(
+                            self.platforms[steps[u].platform], dst
+                        )
+                        self.timing.record_slack(
+                            steps[u].name, steps[v].name, arrival - prepare0
+                        )
+        total = max(end[v] for v in order if not succs[v]) - t0
+        return prepare, payload, start, end, total, double_billed, exposed_fetch
 
-    # -- an experiment (paper: 1 req/s for 30 min) --------------------------------
-    def run_experiment(self, steps, n_requests: int = 1800,
-                       interarrival_s: float = 1.0,
-                       prefetch: bool = True) -> np.ndarray:
+    # -- one chain request (degenerate DAG, positional keys) -------------------
+    def run_request(self, steps, t0: float, prefetch: bool) -> RequestTrace:
+        ids = list(range(len(steps)))
+        smap = dict(enumerate(steps))
+        preds = {i: ([] if i == 0 else [i - 1]) for i in ids}
+        succs = {i: ([i + 1] if i + 1 < len(steps) else []) for i in ids}
+        prepare, payload, start, end, total, db, ef = self._run_graph(
+            ids, smap, preds, succs, t0, prefetch
+        )
+        return RequestTrace(
+            total,
+            [start[i] for i in ids],
+            [end[i] for i in ids],
+            [prepare[i] for i in ids],
+            [payload[i] for i in ids],
+            db,
+            ef,
+        )
+
+    # -- one DAG request (explicit edge list, name keys) -----------------------
+    def run_dag_request(self, steps, edges, t0: float, prefetch: bool) -> DagTrace:
+        smap = {s.name: s for s in steps}
+        preds, succs, order = _graph(steps, edges)
+        prepare, payload, start, end, total, db, ef = self._run_graph(
+            order, smap, preds, succs, t0, prefetch
+        )
+        return DagTrace(total, start, end, prepare, payload, db, ef)
+
+    # -- an experiment (paper: 1 req/s for 30 min) -----------------------------
+    def run_experiment(
+        self,
+        steps,
+        n_requests: int = 1800,
+        interarrival_s: float = 1.0,
+        prefetch: bool = True,
+    ) -> np.ndarray:
         self._last_use = {}
         out = np.empty(n_requests)
         for k in range(n_requests):
-            out[k] = self.run_request(steps, k * interarrival_s,
-                                      prefetch).total_s
+            out[k] = self.run_request(steps, k * interarrival_s, prefetch).total_s
+        return out
+
+    def run_dag_experiment(
+        self,
+        steps,
+        edges,
+        n_requests: int = 1800,
+        interarrival_s: float = 1.0,
+        prefetch: bool = True,
+    ) -> np.ndarray:
+        self._last_use = {}
+        out = np.empty(n_requests)
+        for k in range(n_requests):
+            out[k] = self.run_dag_request(
+                steps, edges, k * interarrival_s, prefetch
+            ).total_s
         return out
 
 
@@ -179,12 +307,16 @@ def median(xs) -> float:
 # ---------------------------------------------------------------------------
 def paper_platforms():
     return [
-        SimPlatform("tinyfaas-edge", "europe-west10", native_prefetch=True,
-                    allows_sync=True, cold_start=Dist(0.35, 0.3)),
+        SimPlatform(
+            "tinyfaas-edge",
+            "europe-west10",
+            native_prefetch=True,
+            allows_sync=True,
+            cold_start=Dist(0.35, 0.3),
+        ),
         SimPlatform("gcf", "europe-west10", cold_start=Dist(2.2, 0.4)),
         SimPlatform("lambda-us-east-1", "us-east-1", cold_start=Dist(1.1, 0.4)),
-        SimPlatform("lambda-eu-central-1", "eu-central-1",
-                    cold_start=Dist(1.1, 0.4)),
+        SimPlatform("lambda-eu-central-1", "eu-central-1", cold_start=Dist(1.1, 0.4)),
     ]
 
 
@@ -195,10 +327,8 @@ def document_workflow_fig4():
     return [
         SimStep("check", "tinyfaas-edge", compute=Dist(0.22)),
         SimStep("virus", "gcf", compute=Dist(0.30), fetch=Dist(0.32)),
-        SimStep("ocr", "lambda-us-east-1", compute=Dist(0.45),
-                fetch=Dist(1.45)),
-        SimStep("e_mail", "lambda-us-east-1", compute=Dist(0.20),
-                fetch=Dist(0.85)),
+        SimStep("ocr", "lambda-us-east-1", compute=Dist(0.45), fetch=Dist(1.45)),
+        SimStep("e_mail", "lambda-us-east-1", compute=Dist(0.20), fetch=Dist(0.85)),
     ]
 
 
@@ -221,6 +351,5 @@ def native_prefetch_workflow_fig8():
     256 KB from cross-provider object storage."""
     return [
         SimStep("func_a", "tinyfaas-edge", compute=Dist(5.0, 0.02)),
-        SimStep("func_b", "tinyfaas-edge", compute=Dist(0.06),
-                fetch=Dist(0.78)),
+        SimStep("func_b", "tinyfaas-edge", compute=Dist(0.06), fetch=Dist(0.78)),
     ]

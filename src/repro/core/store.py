@@ -73,9 +73,27 @@ class ObjectStore:
         return dt
 
     def get(self, key: str, to_region: str) -> tuple:
-        """Returns (value, modeled_transfer_seconds)."""
+        """Returns (value, modeled_transfer_seconds).
+
+        A missing key raises a KeyError that names the key, the requesting
+        region, and the keys living under the same prefix — payload-buffer
+        keys (``__payload__/{rid}/{edge}``) are one-shot, so a stale or
+        mistyped buffer key is otherwise undebuggable."""
         with self._lock:
-            obj = self._objects[key]
+            obj = self._objects.get(key)
+            if obj is None:
+                prefix = key.rsplit("/", 1)[0] + "/" if "/" in key else key[:4]
+                near = sorted(k for k in self._objects if k.startswith(prefix))[:8]
+                hint = (
+                    f"; keys under {prefix!r}: {near}"
+                    if near
+                    else f"; store holds {len(self._objects)} keys "
+                    f"(sample: {sorted(self._objects)[:5]})"
+                )
+                raise KeyError(
+                    f"object {key!r} not in store (GET from region "
+                    f"{to_region!r}){hint}"
+                )
             self.stats["gets"] += 1
             self.stats["bytes_out"] += obj.size_bytes
         dt = self.network.transfer_s(obj.region, to_region, obj.size_bytes)

@@ -1,18 +1,21 @@
-"""repro.dag — dataflow DAG engine for fan-out/fan-in federated workflows.
+"""repro.dag — THE dataflow execution core (chains are degenerate DAGs).
 
-Generalizes the chain-only GeoFF core to directed acyclic graphs:
+Every workflow in this repo executes here; the chain stack
+(``repro.core.choreographer``) is a facade that lifts ``WorkflowSpec``
+through ``DagSpec.from_chain``:
 
   spec     DagSpec / DagStep — per-request DAG routing (JSON round-trip,
            topological validation, from_chain lift, place_dag wiring)
-  engine   DagDeployment — dataflow executor: pokes cascade along edges,
-           nodes fire when their last predecessor payload lands, branches
-           run concurrently on the platform executors
-  sim      DagWorkflowSimulator — the DAG timeline recurrence over the
-           calibrated latency distributions (chain-vs-DAG medians)
+  engine   DagDeployment — the one dataflow executor: pokes cascade along
+           edges, nodes fire when their last predecessor payload lands,
+           branches run concurrently on the platform executors, poke
+           timing learns per (pred -> succ) edge
+  sim      DagWorkflowSimulator — alias of the unified simulator
+           (core.simulator), which runs one recurrence for chains + DAGs
 """
 
 from repro.dag.spec import DagSpec, DagStep, place_dag_spec  # noqa: F401
-from repro.dag.engine import DagDeployment, DagResult  # noqa: F401
+from repro.dag.engine import DagDeployment, DagResult, DeployedFn  # noqa: F401
 from repro.dag.sim import (  # noqa: F401
     DagTrace,
     DagWorkflowSimulator,

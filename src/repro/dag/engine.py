@@ -1,9 +1,11 @@
-"""Dataflow executor for DAG workflows (fan-out/fan-in choreography).
+"""Dataflow executor for DAG workflows — THE execution core of this repo.
 
-The chain ``Middleware`` recurses down a single successor; this engine
-generalizes the same two-phase protocol to a DAG, reusing the existing
-pieces unchanged (CompileCache, Prefetcher, ObjectStore,
-PokeTimingController, per-platform executors):
+Chain workflows (``repro.core.choreographer.Deployment``) are a thin facade
+over this engine: a chain is the degenerate DAG, lifted per request via
+``DagSpec.from_chain``. There is exactly one implementation of the GeoFF
+two-phase protocol, generalized to a DAG over the shared pieces
+(CompileCache, Prefetcher, ObjectStore, PokeTimingController, per-platform
+executors):
 
   - pokes cascade along EDGES: poking a node immediately pokes all of its
     successors, so a fan-out warms and pre-fetches every branch at once
@@ -11,12 +13,14 @@ PokeTimingController, per-platform executors):
   - each node FIRES the moment its last predecessor payload lands
     (dataflow firing rule). Per-predecessor payloads are buffered — through
     the object store on platforms that disallow direct function-to-function
-    traffic (the chain's ``__payload__`` path, one key per edge, deleted
-    after the GET so fan-in buffers never leak) and in memory on sync
-    platforms;
+    traffic (one ``__payload__`` key per edge, deleted after the GET so
+    fan-in buffers never leak) and in memory on sync platforms;
   - independent branches run concurrently on their platforms' executors:
     the latency win over the chain serialization is real wall-clock
-    parallelism plus the usual pre-fetch overlap.
+    parallelism plus the usual pre-fetch overlap;
+  - poke timing is learned PER EDGE: payload arrival is timestamped per
+    predecessor, so a fan-in node feeds a distinct slack observation to the
+    ``PokeTimingController`` for each in-edge (§5.5, generalized).
 
 Handlers keep the chain signature ``handler(payload, data)``. A fan-in node
 receives ``{pred_name: payload}``; source nodes receive the client payload;
@@ -32,13 +36,24 @@ import uuid
 from dataclasses import dataclass
 from typing import Callable, Optional
 
-from repro.core.choreographer import _DeployedFn
-from repro.core.platform import PlatformRegistry, PlatformWrapper
+from repro.core.platform import Platform, PlatformRegistry, PlatformWrapper
 from repro.core.prefetch import Prefetcher
 from repro.core.prewarm import CompileCache
 from repro.core.store import ObjectStore
 from repro.core.timing import PokeTimingController
 from repro.dag.spec import DagSpec
+
+
+@dataclass
+class DeployedFn:
+    """One (handler, wrapper, middleware) package on one platform (§3.1)."""
+
+    name: str
+    platform: Platform
+    wrapper: PlatformWrapper
+    handler: Callable  # handler(payload, data: dict) -> out
+    abstract_args: Optional[object] = None  # for pre-warm (compile) keys
+    compile_fn: Optional[Callable] = None  # jit-able step body (optional)
 
 
 @dataclass
@@ -58,8 +73,9 @@ class _RunState:
         self.rid = uuid.uuid4().hex[:12]
         self.lock = threading.Lock()
         self.poke_seen: set = set()  # nodes whose poke already ran (dedup)
-        self.poked: dict = {}  # node -> (warm_fut, fetch_futs, t0)
+        self.poked: dict = {}  # node -> (warm_fut, fetch_futs, t0, delay)
         self.buffers: dict = {n.name: {} for n in spec.steps}  # fan-in joins
+        self.arrivals: dict = {n.name: {} for n in spec.steps}  # edge stamps
         self.fired: set = set()
         self.timeline: dict = {}
         self.outputs: dict = {}
@@ -79,7 +95,9 @@ class DagDeployment:
 
     Same deployment surface as the chain ``Deployment`` — one
     platform-independent handler deployed to N platforms — but ``run``
-    takes a ``DagSpec`` and drives the dataflow schedule.
+    takes a ``DagSpec`` and drives the dataflow schedule. Usable as a
+    context manager; ``shutdown`` is idempotent, so thread pools never
+    leak across runs even when both paths trigger.
     """
 
     def __init__(
@@ -93,8 +111,9 @@ class DagDeployment:
         self.cache = CompileCache()
         self.prefetcher = Prefetcher(self.store)
         self.timing = PokeTimingController(timing_mode)
-        self._functions: dict = {}  # (name, platform) -> _DeployedFn
+        self._functions: dict = {}  # (name, platform) -> DeployedFn
         self._stats_lock = threading.Lock()
+        self._shut = False
         self.stats = {"pokes": {}, "joins": 0, "buffered_edges": 0}
 
     # -- deployer --------------------------------------------------------------
@@ -109,12 +128,12 @@ class DagDeployment:
         for pname in platforms:
             plat = self.registry.get(pname)
             wrapper = PlatformWrapper(plat, handler, name)
-            self._functions[(name, pname)] = _DeployedFn(
+            self._functions[(name, pname)] = DeployedFn(
                 name, plat, wrapper, handler, abstract_args, compile_fn
             )
         return self
 
-    def _resolve(self, name: str, platform: str) -> _DeployedFn:
+    def _resolve(self, name: str, platform: str) -> DeployedFn:
         try:
             return self._functions[(name, platform)]
         except KeyError:
@@ -123,12 +142,21 @@ class DagDeployment:
                 f"deployed: {sorted(self._functions)}"
             ) from None
 
+    def _resolve_step(self, step) -> DeployedFn:
+        """Resolve a spec node to its deployed function: ``step.fn`` names
+        the function when the node name is disambiguated (a chain invoking
+        the same function twice lifts to ``f@i`` nodes with ``fn='f'``)."""
+        return self._resolve(getattr(step, "fn", "") or step.name, step.platform)
+
     # -- client ----------------------------------------------------------------
-    def run(self, spec: DagSpec, payload, timeout_s: float = 120.0) -> DagResult:
+    def run(
+        self, spec: DagSpec, payload, timeout_s: Optional[float] = 120.0
+    ) -> DagResult:
         """Invoke the DAG: deliver the client payload to every source node
-        and wait for all sinks. Raises whatever a node's handler raised."""
+        and wait for all sinks (``timeout_s=None`` waits indefinitely).
+        Raises whatever a node's handler raised."""
         for s in spec.steps:  # fail fast on missing deployments
-            self._resolve(s.name, s.platform)
+            self._resolve_step(s)
         state = _RunState(spec, payload)
         t0 = time.perf_counter()
         for source in spec.sources():
@@ -146,12 +174,22 @@ class DagDeployment:
         )
 
     def shutdown(self):
+        if self._shut:
+            return
+        self._shut = True
         self.registry.shutdown()
         self.cache.shutdown()
         self.prefetcher.shutdown()
 
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.shutdown()
+        return False
+
     # -- phase 1: poke (cascades along edges) ----------------------------------
-    def _poke(self, state: _RunState, node: str):
+    def _poke(self, state: _RunState, node: str, delay_applied: float = 0.0):
         try:
             with state.lock:
                 if node in state.poke_seen or node in state.fired:
@@ -159,7 +197,7 @@ class DagDeployment:
                 state.poke_seen.add(node)
             t0 = time.perf_counter()
             step = state.spec.node(node)
-            fn = self._resolve(step.name, step.platform)
+            fn = self._resolve_step(step)
             warm_fut = None
             if fn.compile_fn is not None and fn.abstract_args is not None:
                 warm_fut = self.cache.warm(
@@ -169,15 +207,23 @@ class DagDeployment:
             if step.data_deps:
                 fetch_futs = self.prefetcher.start(step.data_deps, fn.platform.region)
             with state.lock:
-                state.poked[node] = (warm_fut, fetch_futs, t0)
+                state.poked[node] = (warm_fut, fetch_futs, t0, delay_applied)
             with self._stats_lock:
                 self.stats["pokes"][node] = self.stats["pokes"].get(node, 0) + 1
-            # cascade: a fan-out pokes ALL successors at once
+            # cascade: a fan-out pokes ALL successors at once, each edge
+            # shifted by its learned delay (eager mode: 0) — matching the
+            # simulator's poke[v] = min over u of poke[u] + msg + delay(u,v)
             for succ in state.spec.successors(node):
-                if state.spec.node(succ).prefetch:
-                    self.registry.executor(step.platform).submit(
-                        self._poke, state, succ
-                    )
+                if not state.spec.node(succ).prefetch:
+                    continue
+                delay = self.timing.poke_delay(step.name, succ)
+
+                def cascade(succ=succ, delay=delay):
+                    if delay > 0:
+                        time.sleep(delay)
+                    self._poke(state, succ, delay_applied=delay)
+
+                self.registry.executor(step.platform).submit(cascade)
         except BaseException as exc:  # surface poke-path bugs to the client
             state.fail(exc)
 
@@ -188,6 +234,7 @@ class DagDeployment:
         with state.lock:
             if pred is not None:
                 state.buffers[node][pred] = value
+                state.arrivals[node][pred] = time.perf_counter()
             fire = len(state.buffers[node]) == n_preds and node not in state.fired
             if fire:
                 state.fired.add(node)
@@ -210,9 +257,7 @@ class DagDeployment:
                 # public-cloud path: buffer through the object store, one
                 # key per edge; delete after the GET (no fan-in leak)
                 key = f"__payload__/{state.rid}/{src}->{dst}"
-                self.store.put(
-                    key, value, dst_plat.region, from_region=src_plat.region
-                )
+                self.store.put(key, value, dst_plat.region, from_region=src_plat.region)
                 value, _ = self.store.get(key, dst_plat.region)
                 self.store.delete(key)
                 with self._stats_lock:
@@ -224,12 +269,13 @@ class DagDeployment:
     def _run_node(self, state: _RunState, node: str):
         spec = state.spec
         step = spec.node(node)
-        fn = self._resolve(step.name, step.platform)
+        fn = self._resolve_step(step)
         preds = spec.predecessors(node)
         timeline = {}
 
         # poke successors NOW (as early as possible; the learned controller
-        # may delay). The cascade usually got there first — _poke dedups.
+        # may delay, per edge). The cascade usually got there first — _poke
+        # dedups.
         for succ in spec.successors(node):
             if not spec.node(succ).prefetch:
                 continue
@@ -238,7 +284,7 @@ class DagDeployment:
             def do_poke(succ=succ, delay=delay):
                 if delay > 0:
                     time.sleep(delay)
-                self._poke(state, succ)
+                self._poke(state, succ, delay_applied=delay)
 
             self.registry.executor(step.platform).submit(do_poke)
 
@@ -254,9 +300,18 @@ class DagDeployment:
         t0 = time.perf_counter()
         if poked is not None and poked[1]:
             data, exposed, modeled = self.prefetcher.join(poked[1])
-            self.timing.record_slack(
-                step.name, (time.perf_counter() - poked[2]) - modeled
-            )
+            # per-edge slack: each predecessor's payload arrival stamp vs
+            # this node's prepare, shifted back by the applied poke delay so
+            # the controller sees the gap relative to the undelayed poke
+            now = time.perf_counter()
+            with state.lock:
+                arrivals = dict(state.arrivals.get(node, {}))
+            for u in preds:
+                self.timing.record_slack(
+                    u,
+                    node,
+                    (arrivals.get(u, now) - poked[2]) - modeled + poked[3],
+                )
         elif step.data_deps:
             data, _ = self.prefetcher.fetch_blocking(step.data_deps, fn.platform.region)
         else:
@@ -268,6 +323,7 @@ class DagDeployment:
         # fan-in dict keyed by predecessor name
         with state.lock:
             buf = state.buffers.pop(node, {})
+            state.arrivals.pop(node, None)
         if not preds:
             payload = state.payload
         elif len(preds) == 1:

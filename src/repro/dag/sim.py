@@ -1,144 +1,26 @@
-"""Discrete-event model for DAG workflows (the dataflow recurrence).
+"""DAG simulation facade — the recurrence lives in the unified simulator.
 
-Extends the chain simulator (core/simulator.py) with the DAG timeline. Per
-request, with ``u`` ranging over the predecessors of node ``v``:
-
-    poke[v]      = min over u of poke[u] + msg_latency     (cascade;
-                   sources are poked at t0, like the chain's step 0)
-    prepare[v]   = poke[v] + cold_v + fetch_v              (prefetch on)
-    payload[v]   = max over u of end[u] + transfer(u -> v) (fan-in join)
-    start[v]     = max(payload[v], prepare[v])             (prefetch on)
-                 = payload[v] + cold_v + fetch_v           (baseline)
-    end[v]       = start[v] + compute_v
-    total        = max over sinks of end[sink] - t0
-
-The same calibrated latency distributions as the chain experiments apply,
-so chain-vs-DAG comparisons isolate the scheduling effect: a fan-out's
-branches overlap (the max replaces the chain's sum) and pre-fetch hides
-each branch's cold start + fetch exactly as in the linear recurrence. For
-a degenerate DAG (``DagSpec.from_chain`` shapes) the recurrence — and the
-sampled trace, draw for draw — reduces to the chain one.
+``repro.core.simulator.WorkflowSimulator`` executes one dataflow recurrence
+for chains and DAGs (``payload[v] = max over preds of end[u] + transfer``),
+mirroring the runtime where the chain deployer is a facade over the
+dataflow engine. This module keeps the historical DAG-side names importable
+(``DagWorkflowSimulator`` IS the unified simulator) and hosts the
+calibrated DAG shapes used by the chain-vs-DAG experiments.
 """
 
 from __future__ import annotations
 
-import math
-from dataclasses import dataclass
+from repro.core.simulator import (  # noqa: F401
+    DagTrace,
+    Dist,
+    SimStep,
+    WorkflowSimulator,
+    serialize_chain,
+)
 
-import numpy as np
-
-from repro.core.simulator import Dist, SimStep, WorkflowSimulator
-
-
-@dataclass
-class DagTrace:
-    total_s: float
-    start: dict
-    end: dict
-    prepare: dict
-    payload: dict
-    double_billed_s: float
-    exposed_fetch_s: float
-
-
-def _graph(steps, edges):
-    names = [s.name for s in steps]
-    pred = {n: [] for n in names}
-    succ = {n: [] for n in names}
-    for a, b in edges:
-        succ[a].append(b)
-        pred[b].append(a)
-    pos = {n: i for i, n in enumerate(names)}
-    indeg = {n: len(pred[n]) for n in names}
-    order = []
-    ready = sorted((n for n in names if indeg[n] == 0), key=pos.get)
-    while ready:
-        u = ready.pop(0)
-        order.append(u)
-        for v in succ[u]:
-            indeg[v] -= 1
-            if indeg[v] == 0:
-                ready.append(v)
-        ready.sort(key=pos.get)
-    if len(order) != len(names):
-        raise ValueError("workflow graph has a cycle")
-    return pred, succ, order
-
-
-def serialize_chain(steps, edges):
-    """The chain serialization of a DAG: its steps in topological order,
-    executed as a linear workflow (the baseline a DAG schedule beats)."""
-    _, _, order = _graph(steps, edges)
-    by_name = {s.name: s for s in steps}
-    return [by_name[n] for n in order]
-
-
-class DagWorkflowSimulator(WorkflowSimulator):
-    """Chain simulator + the DAG recurrence (same platforms, latencies,
-    cold-start bookkeeping and rng, so results are comparable)."""
-
-    def run_dag_request(self, steps, edges, t0: float, prefetch: bool) -> DagTrace:
-        nodes = {s.name: s for s in steps}
-        pred, succ, order = _graph(steps, edges)
-
-        poke = {n: math.inf for n in order}
-        prepare = {n: 0.0 for n in order}
-        payload = {}
-        start = {}
-        end = {}
-        double_billed = 0.0
-        exposed_fetch = 0.0
-
-        if prefetch:
-            for v in order:
-                if not pred[v]:
-                    poke[v] = t0
-                elif nodes[v].prefetch:
-                    poke[v] = min(poke[u] for u in pred[v]) + self.msg
-
-        for v in order:
-            step = nodes[v]
-            cold = self._cold(step, t0)
-            fetch = step.fetch.sample(self.rng)
-            if not pred[v]:
-                payload[v] = t0 + self.msg / 2
-            else:
-                dst = self.platforms[step.platform]
-                payload[v] = max(
-                    end[u] + self._transfer_s(self.platforms[nodes[u].platform], dst)
-                    for u in pred[v]
-                )
-            if prefetch and poke[v] < math.inf:
-                prepare[v] = poke[v] + cold + fetch
-                start[v] = max(payload[v], prepare[v])
-                double_billed += max(0.0, start[v] - prepare[v])
-                exposed_fetch += max(0.0, prepare[v] - payload[v])
-            else:
-                start[v] = payload[v] + cold + fetch
-                exposed_fetch += fetch
-            end[v] = start[v] + step.compute.sample(self.rng)
-            self._last_use[(step.name, step.platform)] = end[v]
-
-        total = max(end[n] for n in order if not succ[n]) - t0
-        return DagTrace(
-            total, start, end, prepare, payload, double_billed, exposed_fetch
-        )
-
-    def run_dag_experiment(
-        self,
-        steps,
-        edges,
-        n_requests: int = 1800,
-        interarrival_s: float = 1.0,
-        prefetch: bool = True,
-    ) -> np.ndarray:
-        self._last_use = {}
-        out = np.empty(n_requests)
-        for k in range(n_requests):
-            out[k] = self.run_dag_request(
-                steps, edges, k * interarrival_s, prefetch
-            ).total_s
-        return out
+# A degenerate subclass kept for its established name: every capability —
+# run_request AND run_dag_request — already lives on the unified simulator.
+DagWorkflowSimulator = WorkflowSimulator
 
 
 # ---------------------------------------------------------------------------

@@ -12,7 +12,9 @@ chain spec had:
   - steps are the same (function, platform, data_deps, prefetch) tuples, so
     every deployed function serves chains and DAGs alike;
   - a chain is just a degenerate DAG: ``DagSpec.from_chain`` lifts any
-    existing ``WorkflowSpec`` losslessly.
+    existing ``WorkflowSpec`` losslessly — it is how the chain facade
+    (``core.choreographer.Deployment``) routes every chain request onto
+    the one dataflow engine.
 
 Edges are named pairs of step names. ``__post_init__`` validates the graph
 (unique names, known endpoints, no self-loops or duplicates, acyclic), so a
@@ -36,16 +38,42 @@ class DagStep(StepSpec):
     predecessor's payload and fires the handler once with
     ``{pred_name: payload}``. Single-predecessor nodes receive the payload
     unwrapped, exactly like a chain step, so chain handlers port unchanged.
+
+    ``fn`` optionally names the deployed function when it differs from the
+    node name ("" = same). Node names must be unique per spec, but a
+    workflow may invoke the same function at two nodes — ``from_chain``
+    relies on this to lift chains that repeat a step.
     """
+
+    fn: str = ""  # deployed function name; "" -> the node name
+
+    def resolved_fn(self) -> str:
+        return self.fn or self.name
+
+    def to_json(self):
+        d = StepSpec.to_json(self)
+        if self.fn:
+            d["fn"] = self.fn
+        return d
 
     @staticmethod
     def from_json(d) -> "DagStep":
         s = StepSpec.from_json(d)
-        return DagStep(s.name, s.platform, s.data_deps, s.prefetch, s.sync, s.params)
+        return DagStep(
+            s.name,
+            s.platform,
+            s.data_deps,
+            s.prefetch,
+            s.sync,
+            s.params,
+            d.get("fn", ""),
+        )
 
     @staticmethod
-    def from_step(s: StepSpec) -> "DagStep":
-        return DagStep(s.name, s.platform, s.data_deps, s.prefetch, s.sync, s.params)
+    def from_step(s: StepSpec, name: str = "", fn: str = "") -> "DagStep":
+        return DagStep(
+            name or s.name, s.platform, s.data_deps, s.prefetch, s.sync, s.params, fn
+        )
 
 
 @dataclass(frozen=True)
@@ -133,6 +161,7 @@ class DagSpec:
                 s.prefetch,
                 s.sync,
                 s.params,
+                s.fn,
             )
             for s in self.steps
         )
@@ -160,12 +189,23 @@ class DagSpec:
     # -- chain interop ---------------------------------------------------------
     @staticmethod
     def from_chain(wf: WorkflowSpec) -> "DagSpec":
-        """Lift a chain ``WorkflowSpec`` into the degenerate DAG."""
-        steps = tuple(DagStep.from_step(s) for s in wf.steps)
-        edges = tuple(
-            (wf.steps[i].name, wf.steps[i + 1].name) for i in range(len(wf.steps) - 1)
-        )
-        return DagSpec(steps, edges, wf.workflow_id)
+        """Lift a chain ``WorkflowSpec`` into the degenerate DAG.
+
+        Chains may invoke the same function twice (they are positional);
+        DAG node names must be unique, so repeated names get an ``@index``
+        suffix with ``fn`` pointing back at the deployed function."""
+        counts: dict = {}
+        for s in wf.steps:
+            counts[s.name] = counts.get(s.name, 0) + 1
+        steps = []
+        for i, s in enumerate(wf.steps):
+            if counts[s.name] > 1:
+                steps.append(DagStep.from_step(s, name=f"{s.name}@{i}", fn=s.name))
+            else:
+                steps.append(DagStep.from_step(s))
+        names = [s.name for s in steps]
+        edges = tuple((names[i], names[i + 1]) for i in range(len(names) - 1))
+        return DagSpec(tuple(steps), edges, wf.workflow_id)
 
 
 def place_dag_spec(

@@ -1,20 +1,20 @@
-"""shipping.place_dag: topological scoring, fan-in transfer sums, fallback."""
+"""shipping.place_dag: the exact DP (series-parallel + exhaustive) against
+brute force and the greedy baseline; spec wiring; fallbacks."""
 
-from repro.core.shipping import PlacementCosts, place_dag
+import itertools
+import random
+
+import pytest
+
+from benchmarks.placement_bench import costs_from_tables, diamond_correlated
+from repro.core.shipping import (
+    PlacementCosts,
+    dag_cost,
+    place_dag,
+    place_dag_greedy,
+)
 from repro.core.workflow import DataRef, StepSpec
 from repro.dag import DagSpec, DagStep, place_dag_spec
-
-
-def costs_from_tables(fetch=None, compute=None, transfer=None):
-    fetch = fetch or {}
-    compute = compute or {}
-    transfer = transfer or {}
-    return PlacementCosts(
-        fetch_s=lambda name, p, deps: fetch.get((name, p), 0.0),
-        compute_s=lambda name, p: compute.get((name, p), 0.1),
-        transfer_s=lambda a, b, size: transfer.get((a, b), 0.0),
-        payload_size=1.0,
-    )
 
 
 def diamond_nodes():
@@ -95,6 +95,98 @@ def test_fetch_vs_transfer_tradeoff():
         prefetch=False,
     )
     assert placement["b"] == "us"
+
+
+def _brute_force_cost(nodes, edges, candidates, costs, prefetch=True):
+    names = list(nodes)
+    cand = [candidates.get(n, [nodes[n].platform]) for n in names]
+    return min(
+        dag_cost(nodes, edges, dict(zip(names, combo)), costs, prefetch)
+        for combo in itertools.product(*cand)
+    )
+
+
+def _random_case(rnd, topology):
+    plats = ["p0", "p1", "p2"]
+    if topology == "chain":
+        names = [f"s{i}" for i in range(rnd.randint(2, 4))]
+        edges = [(names[i], names[i + 1]) for i in range(len(names) - 1)]
+    elif topology == "diamond":
+        names = ["a", "b", "c", "d"]
+        edges = [("a", "b"), ("a", "c"), ("b", "d"), ("c", "d")]
+    else:  # non-series-parallel: exercises the exhaustive fallback
+        names = ["a", "b", "c", "d"]
+        edges = [("a", "b"), ("a", "c"), ("b", "c"), ("b", "d"), ("c", "d")]
+    nodes = {n: StepSpec(n, "p0") for n in names}
+    fetch = {(n, p): rnd.uniform(0, 2) for n in names for p in plats}
+    compute = {(n, p): rnd.uniform(0.1, 2) for n in names for p in plats}
+    transfer = {
+        (a, b): 0.0 if a == b else rnd.uniform(0.05, 1.0)
+        for a in plats
+        for b in plats
+    }
+    costs = PlacementCosts(
+        fetch_s=lambda name, p, deps: fetch[(name, p)],
+        compute_s=lambda name, p: compute[(name, p)],
+        transfer_s=lambda a, b, size: transfer[(a, b)],
+        payload_size=1.0,
+    )
+    return nodes, edges, {n: plats for n in names}, costs
+
+
+@pytest.mark.parametrize("topology", ["chain", "diamond", "braid"])
+def test_dp_matches_bruteforce(topology):
+    """The tentpole guarantee: place_dag minimizes dag_cost exactly — on
+    series-parallel shapes via the reduction DP, on the non-SP braid via
+    the exhaustive fallback — for both prefetch modes."""
+    rnd = random.Random(20240801)
+    for trial in range(15):
+        nodes, edges, cand, costs = _random_case(rnd, topology)
+        for prefetch in (True, False):
+            placed = place_dag(nodes, edges, cand, costs, prefetch)
+            got = dag_cost(nodes, edges, placed, costs, prefetch)
+            want = _brute_force_cost(nodes, edges, cand, costs, prefetch)
+            assert got == pytest.approx(want, rel=1e-9), (topology, trial)
+
+
+@pytest.mark.parametrize("topology", ["chain", "diamond", "braid"])
+def test_dp_never_worse_than_greedy(topology):
+    rnd = random.Random(7)
+    for _ in range(15):
+        nodes, edges, cand, costs = _random_case(rnd, topology)
+        exact = dag_cost(nodes, edges, place_dag(nodes, edges, cand, costs), costs)
+        greedy_pl = place_dag_greedy(nodes, edges, cand, costs)
+        greedy = dag_cost(nodes, edges, greedy_pl, costs)
+        assert exact <= greedy + 1e-9
+
+
+def test_dp_beats_greedy_on_correlated_diamond():
+    """Acceptance: branches whose data homes are platform-correlated trap
+    the greedy (each branch ships to its local optimum, the join pays a
+    cross-platform fan-in); the exact DP is strictly better."""
+    nodes, edges, cand, costs = diamond_correlated()
+    exact = dag_cost(nodes, edges, place_dag(nodes, edges, cand, costs), costs)
+    greedy_pl = place_dag_greedy(nodes, edges, cand, costs)
+    greedy = dag_cost(nodes, edges, greedy_pl, costs)
+    assert exact < greedy - 0.5, (exact, greedy)
+
+
+def test_isolated_nodes_placed_independently():
+    nodes = {
+        "a": StepSpec("a", "p1"),
+        "b": StepSpec("b", "p1"),
+        "lonely": StepSpec("lonely", "p1"),
+    }
+    fetch = {("lonely", "p1"): 3.0, ("lonely", "p2"): 0.1}
+    placement = place_dag(
+        nodes,
+        [("a", "b")],
+        {"lonely": ["p1", "p2"]},
+        costs_from_tables(fetch=fetch),
+        prefetch=False,
+    )
+    assert placement["lonely"] == "p2"
+    assert placement["a"] == "p1" and placement["b"] == "p1"
 
 
 def test_place_dag_spec_wires_routes():

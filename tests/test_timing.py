@@ -1,13 +1,9 @@
-"""Learned poke-delay controller (paper §5.5): less double-billing at ~equal
-workflow duration."""
+"""Learned poke-delay controller (paper §5.5): per-edge slack, less
+double-billing at ~equal workflow duration."""
 
-import math
-
-import numpy as np
 import pytest
 
 from repro.core.timing import EWMA, PokeTimingController
-from repro.core import simulator as S
 
 
 def test_ewma_converges():
@@ -18,13 +14,14 @@ def test_ewma_converges():
 
 
 def test_configured_alpha_reaches_all_ewmas():
-    """Regression: the slack EWMA must use the configured alpha too (it
-    silently fell back to the default 0.25)."""
+    """Regression: every EWMA — per-step compute/prepare AND per-edge
+    slack — must use the configured alpha (slack once silently fell back
+    to the default 0.25)."""
     c = PokeTimingController("learned", alpha=0.5)
-    e = c._entry("s")
-    assert e.compute.alpha == 0.5
-    assert e.prepare.alpha == 0.5
-    assert e.slack.alpha == 0.5
+    s = c._step("s")
+    assert s.compute.alpha == 0.5
+    assert s.prepare.alpha == 0.5
+    assert c._edge("a", "b").slack.alpha == 0.5
 
 
 def test_eager_mode_zero_delay():
@@ -42,15 +39,40 @@ def test_learned_delay_formula():
     assert c.poke_delay("a", "b") == pytest.approx(4.4, abs=1e-6)
     # slack observations take precedence once available
     for _ in range(30):
-        c.record_slack("b", 2.0)
+        c.record_slack("a", "b", 2.0)
     assert c.poke_delay("a", "b") == pytest.approx(1.9, abs=0.05)
     # no data -> eager
     assert c.poke_delay("x", "y") == 0.0
 
 
+def test_fan_in_learns_distinct_slack_per_edge():
+    """The tentpole re-key: a join with two predecessors of very different
+    dwell must delay each predecessor's poke by ITS edge's gap, not one
+    blended per-step number."""
+    c = PokeTimingController("learned", margin_s=0.1)
+    for _ in range(30):
+        c.record_slack("fast_branch", "join", 3.0)  # long idle gap
+        c.record_slack("slow_branch", "join", 0.2)  # payload nearly late
+    assert c.poke_delay("fast_branch", "join") == pytest.approx(2.9, abs=0.05)
+    assert c.poke_delay("slow_branch", "join") == pytest.approx(0.1, abs=0.05)
+    # per-edge stats surfaced for both engine and simulator reporting
+    rep = c.report()
+    assert "fast_branch->join" in rep["edges"]
+    assert rep["edges"]["fast_branch->join"]["double_billed_s"] > 0
+
+
+def test_negative_slack_counts_as_exposed_wait():
+    c = PokeTimingController("learned")
+    c.record_slack("a", "b", -0.4)
+    rep = c.report()["edges"]["a->b"]
+    assert rep["exposed_wait_s"] == pytest.approx(0.4)
+    assert rep["double_billed_s"] == 0.0
+
+
 def test_learned_timing_cuts_double_billing_in_sim():
-    """Fig-4 workflow replayed with the learned delay: duration ~unchanged,
-    double-billing cut hard (the §5.5 trade-off, measured)."""
+    """Fig-4 workflow replayed with the learned per-edge delay wired into
+    the unified simulator: duration ~unchanged, double-billing cut hard
+    (the §5.5 trade-off, measured)."""
     from benchmarks.timing_bench import run
 
     t_e, d_e = run("eager", n=400)

@@ -1,0 +1,297 @@
+"""Chain/DAG parity: the chain stack is a facade over the single dataflow
+core. The same spec through the old `Deployment.run` API and through an
+explicit `from_chain` + `DagDeployment.run` must behave identically, and
+the unified simulator must reproduce the pre-refactor chain recurrence
+draw for draw."""
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    DataRef,
+    Deployment,
+    Platform,
+    PlatformRegistry,
+    StepSpec,
+    WorkflowSpec,
+)
+from repro.core import simulator as S
+from repro.dag import DagDeployment, DagSpec
+from repro.dag.engine import DagDeployment as EngineDagDeployment
+
+
+def make_registry():
+    reg = PlatformRegistry()
+    reg.register(Platform("edge-eu", "eu", kind="edge", native_prefetch=True))
+    reg.register(Platform("cloud-us", "us", kind="cloud"))
+    return reg
+
+
+def deploy_handlers(dep):
+    dep.deploy("a", lambda p, d: p + 1, ["edge-eu"])
+    dep.deploy("b", lambda p, d: float(np.sum(d["w"])) * p, ["cloud-us"])
+    dep.deploy("c", lambda p, d: p * 10, ["cloud-us"])
+    rng = np.random.default_rng(3)
+    dep.store.put("w", rng.normal(size=32), region="eu")
+    return dep
+
+
+CHAIN = WorkflowSpec(
+    (
+        StepSpec("a", "edge-eu"),
+        StepSpec("b", "cloud-us", data_deps=(DataRef("w", "eu"),)),
+        StepSpec("c", "cloud-us"),
+    ),
+    "parity",
+)
+
+
+# ---------------------------------------------------------------------------
+# engine parity: facade vs explicit dataflow run
+# ---------------------------------------------------------------------------
+def test_chain_facade_is_the_dataflow_engine():
+    """Structural acceptance: Deployment IS a DagDeployment — the chain
+    stack no longer carries its own poke/payload execution loop."""
+    assert issubclass(Deployment, EngineDagDeployment)
+    assert Deployment.deploy is EngineDagDeployment.deploy
+    assert Deployment.shutdown is EngineDagDeployment.shutdown
+    assert "_run_node" not in Deployment.__dict__  # only the engine executes
+    import repro.core.choreographer as chore
+
+    assert not hasattr(chore, "Middleware")
+
+
+def test_chain_api_matches_explicit_from_chain_run():
+    """Identical outputs and equivalent timelines through both APIs."""
+    with deploy_handlers(Deployment(make_registry())) as chain:
+        r_chain = chain.run(CHAIN, 2.0)
+    with deploy_handlers(DagDeployment(make_registry())) as dag:
+        r_dag = dag.run(DagSpec.from_chain(CHAIN), 2.0)
+    assert r_chain.outputs == pytest.approx(r_dag.outputs)
+    assert set(r_chain.timeline) == set(r_dag.timeline) == {"a", "b", "c"}
+    for step in r_chain.timeline:
+        assert set(r_chain.timeline[step]) == {"warm_s", "fetch_s", "compute_s"}
+        assert set(r_dag.timeline[step]) == {"warm_s", "fetch_s", "compute_s"}
+
+
+def test_chain_facade_records_per_edge_slack():
+    """The facade rides the engine's per-edge timing: a poked chain hop
+    with data deps appears as a (pred -> succ) edge in the report."""
+    import time
+
+    with deploy_handlers(Deployment(make_registry())) as dep:
+        dep.deploy("a", lambda p, d: time.sleep(0.15) or p + 1, ["edge-eu"])
+        for _ in range(3):  # the poke must land before b fires: a dwells
+            dep.run(CHAIN, 1.0)
+        edges = dep.timing.report()["edges"]
+    assert "a->b" in edges
+    assert edges["a->b"]["slack_s"] != 0.0
+
+
+def test_deployment_context_manager_idempotent_shutdown():
+    dep = Deployment(make_registry())
+    with dep as d:
+        assert d is dep
+        d.deploy("a", lambda p, d_: p, ["edge-eu"])
+        assert d.run(WorkflowSpec((StepSpec("a", "edge-eu"),)), 7).outputs == 7
+    dep.shutdown()  # second shutdown after __exit__: must be a no-op
+    with DagDeployment(make_registry()) as dag:
+        dag.shutdown()
+        dag.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# simulator parity: unified recurrence vs the pre-refactor chain recurrence
+# ---------------------------------------------------------------------------
+class _PreRefactorChainSim:
+    """Frozen copy of the chain-only simulator's run_request (the code that
+    lived in core/simulator.py before the unification), kept verbatim as
+    the draw-for-draw reference."""
+
+    def __init__(
+        self, platforms, msg_latency_s=0.045, payload_size_bytes=1.5e6, seed=0
+    ):
+        self.platforms = {p.name: p for p in platforms}
+        self.msg = msg_latency_s
+        self.obj = S.ObjectLatency()
+        self.payload_size = payload_size_bytes
+        self.rng = np.random.default_rng(seed)
+        self._last_use = {}
+
+    def _transfer_s(self, src, dst):
+        if dst.native_prefetch and dst.allows_sync and src.region == dst.region:
+            return self.msg * 0.1
+        return self.obj.op_s(
+            src.region, dst.region, self.payload_size
+        ) + self.obj.op_s(dst.region, dst.region, self.payload_size)
+
+    def _cold(self, step, t):
+        plat = self.platforms[step.platform]
+        last = self._last_use.get((step.name, step.platform), -math.inf)
+        cold = (t - last) > plat.keep_warm_s
+        return plat.cold_start.sample(self.rng) if cold else 0.0
+
+    def run_request(self, steps, t0, prefetch):
+        n = len(steps)
+        poke = [math.inf] * n
+        prepare = [0.0] * n
+        payload = [0.0] * n
+        start = [0.0] * n
+        end = [0.0] * n
+        double_billed = 0.0
+        if prefetch:
+            poke[0] = t0
+            for i in range(1, n):
+                poke[i] = poke[i - 1] + self.msg if steps[i].prefetch else math.inf
+        payload[0] = t0 + self.msg / 2
+        for i, step in enumerate(steps):
+            cold = self._cold(step, t0)
+            fetch = step.fetch.sample(self.rng)
+            if prefetch and poke[i] < math.inf:
+                prepare[i] = poke[i] + cold + fetch
+                start[i] = max(payload[i], prepare[i])
+                double_billed += max(0.0, start[i] - prepare[i])
+            else:
+                start[i] = payload[i] + cold + fetch
+            end[i] = start[i] + step.compute.sample(self.rng)
+            self._last_use[(step.name, step.platform)] = end[i]
+            if i + 1 < n:
+                src = self.platforms[step.platform]
+                dst = self.platforms[steps[i + 1].platform]
+                payload[i + 1] = end[i] + self._transfer_s(src, dst)
+        return end[-1] - t0, start, end, prepare, payload, double_billed
+
+
+@pytest.mark.parametrize("prefetch", [True, False])
+@pytest.mark.parametrize("seed", [0, 7, 23])
+def test_unified_sim_matches_prerefactor_chain_recurrence(prefetch, seed):
+    """Same seed, same steps: every sampled draw lands in the same place."""
+    steps = S.document_workflow_fig4()
+    ref = _PreRefactorChainSim(S.paper_platforms(), seed=seed)
+    uni = S.WorkflowSimulator(S.paper_platforms(), seed=seed)
+    for k in range(20):  # warm/cold transitions included
+        t0 = k * 1.0
+        want_total, w_start, w_end, w_prep, w_pay, w_db = ref.run_request(
+            steps, t0, prefetch
+        )
+        tr = uni.run_request(steps, t0, prefetch)
+        assert tr.total_s == pytest.approx(want_total, abs=1e-12)
+        assert tr.start == pytest.approx(w_start)
+        assert tr.end == pytest.approx(w_end)
+        assert tr.prepare == pytest.approx(w_prep)
+        assert tr.payload == pytest.approx(w_pay)
+        assert tr.double_billed_s == pytest.approx(w_db)
+
+
+def test_unified_sim_chain_equals_dag_on_degenerate_graph():
+    """run_request and run_dag_request are the SAME recurrence: a chain
+    expressed as an edge list reproduces the positional chain trace."""
+    steps = S.document_workflow_fig4()
+    edges = [(steps[i].name, steps[i + 1].name) for i in range(len(steps) - 1)]
+    for prefetch in (True, False):
+        a = S.WorkflowSimulator(S.paper_platforms(), seed=13)
+        b = S.WorkflowSimulator(S.paper_platforms(), seed=13)
+        tr_chain = a.run_request(steps, 0.0, prefetch)
+        tr_dag = b.run_dag_request(steps, edges, 0.0, prefetch)
+        assert tr_dag.total_s == pytest.approx(tr_chain.total_s, abs=1e-12)
+        for i, s in enumerate(steps):
+            assert tr_dag.end[s.name] == pytest.approx(tr_chain.end[i])
+
+
+def test_unified_sim_supports_duplicate_chain_step_names():
+    """Chains may invoke the same function twice; positional keying keeps
+    that working after the unification."""
+    plat = S.SimPlatform("p", "r", native_prefetch=True, cold_start=S.Dist(0.0))
+    steps = [
+        S.SimStep("f", "p", compute=S.Dist(0.2, 0.0)),
+        S.SimStep("f", "p", compute=S.Dist(0.2, 0.0)),
+        S.SimStep("f", "p", compute=S.Dist(0.2, 0.0)),
+    ]
+    sim = S.WorkflowSimulator([plat], msg_latency_s=0.0, seed=0)
+    tr = sim.run_request(steps, 0.0, prefetch=True)
+    assert tr.total_s == pytest.approx(0.6, abs=1e-6)
+
+
+def test_engine_cascade_consults_per_edge_delay():
+    """Regression: the poke cascade must consult the learned delay for
+    EVERY edge it crosses (it used to poke successors eagerly, so learned
+    delays only ever applied to the first hop)."""
+    calls = []
+    with deploy_handlers(Deployment(make_registry())) as dep:
+        dep.timing.poke_delay = lambda p, s: calls.append((p, s)) or 0.0
+        dep.run(CHAIN, 1.0)
+    assert ("a", "b") in calls and ("b", "c") in calls
+
+
+def test_chain_invoking_same_function_twice_still_runs():
+    """Chains are positional and may repeat a function; the facade lifts
+    repeated names to unique ``f@i`` nodes with ``fn`` pointing back at the
+    deployed function (regression: from_chain used to reject these)."""
+    with Deployment(make_registry()) as dep:
+        dep.deploy("inc", lambda p, d: p + 1, ["edge-eu", "cloud-us"])
+        dep.deploy("dbl", lambda p, d: p * 2, ["cloud-us"])
+        wf = WorkflowSpec(
+            (
+                StepSpec("inc", "edge-eu"),
+                StepSpec("dbl", "cloud-us"),
+                StepSpec("inc", "cloud-us"),
+            )
+        )
+        r = dep.run(wf, 1)
+    assert r.outputs == 5  # ((1 + 1) * 2) + 1
+    assert set(r.timeline) == {"inc@0", "dbl", "inc@2"}
+
+
+def test_from_chain_duplicate_names_json_roundtrip():
+    wf = WorkflowSpec((StepSpec("f", "p"), StepSpec("g", "p"), StepSpec("f", "p")))
+    dag = DagSpec.from_chain(wf)
+    assert [s.name for s in dag.steps] == ["f@0", "g", "f@2"]
+    assert [s.fn for s in dag.steps] == ["f", "", "f"]
+    assert DagSpec.from_json(dag.to_json()) == dag
+
+
+def test_dag_sim_per_edge_slack_does_not_chase_feedback():
+    """Fan-in regression: slack is recorded against the undelayed cascade,
+    so learned per-edge delays converge instead of inflating each other
+    (the delay embedded in a join's prepare is the argmin edge's, not each
+    recorded edge's)."""
+    from repro.core.timing import PokeTimingController
+    from repro.dag import document_dag_fig4
+
+    steps, edges = document_dag_fig4()
+    ctrl = PokeTimingController("learned", margin_s=0.1)
+    sim = S.WorkflowSimulator(S.paper_platforms(), seed=3, timing=ctrl)
+    for k in range(200):
+        sim.run_dag_request(steps, edges, k * 1.0, prefetch=True)
+    slacks = {k: v["slack_s"] for k, v in ctrl.report()["edges"].items()}
+    # e_mail's two in-edges learn distinct, finite gaps (ocr arrives later
+    # than virus); a feedback loop would have inflated them past any bound
+    assert 0.0 < slacks["virus->e_mail"] < slacks["ocr->e_mail"] < 3.0
+
+
+# ---------------------------------------------------------------------------
+# satellite: descriptive object-store errors
+# ---------------------------------------------------------------------------
+def test_store_missing_key_error_is_descriptive():
+    from repro.core import ObjectStore
+
+    store = ObjectStore()
+    store.put("__payload__/req1/a->b", b"x", region="eu")
+    store.put("__payload__/req1/a->c", b"x", region="eu")
+    with pytest.raises(KeyError) as exc:
+        store.get("__payload__/req1/a->d", "us")
+    msg = str(exc.value)
+    assert "__payload__/req1/a->d" in msg  # the missing key
+    assert "'us'" in msg  # the requesting region
+    assert "a->b" in msg and "a->c" in msg  # nearby keys under the prefix
+
+
+def test_store_missing_key_error_without_prefix_match():
+    from repro.core import ObjectStore
+
+    store = ObjectStore()
+    store.put("other/key", b"x", region="eu")
+    with pytest.raises(KeyError, match="store holds 1 keys"):
+        store.get("nothing/here", "eu")
