@@ -1,0 +1,276 @@
+"""Adaptive recomposition vs static placement under mid-run drift.
+
+The GeoFF recomposition claim, measured end to end. Two parts:
+
+  - SIMULATED: a 3-step chain (ingest on the edge, a heavy ``work`` step
+    placeable on pA or pB, deliver on the edge). pA is the modeled optimum
+    (1.0 s vs pB's 1.3 s) — until a ``DriftSchedule`` degrades pA's compute
+    5x at the midpoint (the integer-factor drift public clouds exhibit,
+    Kulkarni et al. 2025). The ADAPTIVE run feeds a ``TelemetryHub`` from
+    the simulator and ticks a ``RecompositionController`` after every
+    request: the drift trigger fires within a few requests, the exact
+    placement DP re-places ``work`` onto pB under observed costs, and the
+    post-drift steady state recovers most of the lost latency. The STATIC
+    run keeps the original placement. Asserts the adaptive post-drift
+    steady-state median beats the static one by >= 25%, and that a
+    no-drift adaptive run costs <= 2% over static (the controller never
+    swaps, so the draw stream is untouched; control-plane seconds are
+    reported separately).
+
+  - REAL: the same chain with sleeping handlers on the actual dataflow
+    engine, ``work`` deployed to BOTH platforms, an ``AdaptiveDeployment``
+    wrapping the engine. Mid-run the pA handler's sleep is scaled 6x; the
+    hub (fed by the engine's instrumentation hooks) sees compute drift,
+    the controller hot-swaps the route table, in-flight requests finish on
+    their captured routes, and post-drift wall-clock latency drops back.
+
+Output: CSV-ish ``name,value`` rows.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+
+import numpy as np
+
+from repro.adapt import AdaptiveDeployment, RecompositionController, TelemetryHub
+from repro.core import Platform, PlatformRegistry
+from repro.core.shipping import PlacementCosts
+from repro.core.simulator import (
+    Dist,
+    DriftEvent,
+    DriftSchedule,
+    SimPlatform,
+    SimStep,
+    WorkflowSimulator,
+)
+from repro.dag import DagDeployment, DagSpec, DagStep
+
+# ---------------------------------------------------------------------------
+# simulated: drift injection + controller-in-the-loop
+# ---------------------------------------------------------------------------
+SIM_PLATFORMS = [
+    SimPlatform(
+        "client",
+        "edge",
+        native_prefetch=True,
+        allows_sync=True,
+        cold_start=Dist(0.2, 0.2),
+    ),
+    SimPlatform("pA", "region-a", cold_start=Dist(0.8, 0.3)),
+    SimPlatform("pB", "region-b", cold_start=Dist(0.8, 0.3)),
+]
+SIM_REGIONS = {"client": "edge", "pA": "region-a", "pB": "region-b"}
+WORK_COMPUTE = {"pA": Dist(1.0, 0.05), "pB": Dist(1.3, 0.05)}
+SPEC = DagSpec(
+    (
+        DagStep("ingest", "client"),
+        DagStep("work", "pA"),
+        DagStep("deliver", "client"),
+    ),
+    (("ingest", "work"), ("work", "deliver")),
+    "adapt-bench",
+)
+CANDIDATES = {"work": ["pA", "pB"]}
+
+
+def modeled_costs() -> PlacementCosts:
+    """The static (fallback) cost model: matches the simulator's medians at
+    calibration time — i.e. BEFORE any drift, which is the point."""
+    compute = {
+        ("ingest", "client"): 0.04,
+        ("deliver", "client"): 0.04,
+        ("work", "pA"): 1.0,
+        ("work", "pB"): 1.3,
+    }
+    return PlacementCosts(
+        fetch_s=lambda name, p, deps: 0.0,
+        compute_s=lambda name, p: compute.get((name, p), 0.05),
+        transfer_s=lambda a, b, size: 0.001 if a == b else 0.6,
+        payload_size=1.5e6,
+    )
+
+
+def steps_for(placement: dict) -> list:
+    wp = placement["work"]
+    return [
+        SimStep("ingest", "client", compute=Dist(0.04, 0.05)),
+        SimStep("work", wp, compute=WORK_COMPUTE[wp]),
+        SimStep("deliver", "client", compute=Dist(0.04, 0.05)),
+    ]
+
+
+def run_sim(n: int, drift, adaptive: bool, seed: int = 11):
+    """One simulated request stream. Returns (totals, swaps, ctrl_wall_s)."""
+    hub = TelemetryHub(alpha=0.4)
+    sim = WorkflowSimulator(
+        SIM_PLATFORMS, seed=seed, telemetry=hub if adaptive else None, drift=drift
+    )
+    ctrl = RecompositionController(
+        hub,
+        modeled_costs(),
+        CANDIDATES,
+        regions=SIM_REGIONS,
+        every_n=8,
+        drift_ratio=1.4,
+        min_samples=2,
+    )
+    spec = SPEC
+    totals = np.empty(n)
+    swaps, ctrl_s = [], 0.0
+    for k in range(n):
+        steps = steps_for({s.name: s.platform for s in spec.steps})
+        totals[k] = sim.run_request(steps, k * 1.0, prefetch=True).total_s
+        if adaptive:
+            t0 = time.perf_counter()
+            placement = ctrl.tick(spec)
+            ctrl_s += time.perf_counter() - t0
+            if placement is not None:
+                spec = spec.apply_placement(placement)
+                swaps.append((k, placement))
+    return totals, swaps, ctrl_s
+
+
+def steady_state(totals: np.ndarray) -> float:
+    """Median of the last quarter of the stream (post-drift, post-swap)."""
+    return float(np.median(totals[-(len(totals) // 4) :]))
+
+
+# ---------------------------------------------------------------------------
+# real engine: AdaptiveDeployment hot-swap under a degrading handler
+# ---------------------------------------------------------------------------
+def _registry():
+    reg = PlatformRegistry()
+    reg.register(Platform("edge", "edge", kind="edge", native_prefetch=True))
+    reg.register(Platform("pA", "region-a", kind="cloud"))
+    reg.register(Platform("pB", "region-b", kind="cloud"))
+    return reg
+
+
+def _handlers(slow: dict):
+    def ingest(p, d):
+        return p
+
+    def work(p, d):
+        # the pA deployment degrades when slow["scale"] rises; pB is the
+        # steady alternative (thread names carry the platform)
+        if "plat-pA" in threading.current_thread().name:
+            time.sleep(0.03 * slow["scale"])
+        else:
+            time.sleep(0.045)
+        return p
+
+    def deliver(p, d):
+        return p
+
+    return ingest, work, deliver
+
+
+def real_fallback() -> PlacementCosts:
+    compute = {("work", "pA"): 0.03, ("work", "pB"): 0.045}
+    return PlacementCosts(
+        fetch_s=lambda name, p, deps: 0.0,
+        compute_s=lambda name, p: compute.get((name, p), 0.001),
+        transfer_s=lambda a, b, size: 0.0005 if a == b else 0.05,
+        payload_size=1.5e6,
+    )
+
+
+def _deploy(engine, slow):
+    ingest, work, deliver = _handlers(slow)
+    engine.deploy("ingest", ingest, ["edge"])
+    engine.deploy("work", work, ["pA", "pB"])
+    engine.deploy("deliver", deliver, ["edge"])
+    return engine
+
+
+def run_real(requests: int = 48, every_n: int = 6):
+    spec = DagSpec(
+        (
+            DagStep("ingest", "edge"),
+            DagStep("work", "pA"),
+            DagStep("deliver", "edge"),
+        ),
+        (("ingest", "work"), ("work", "deliver")),
+        "adapt-real",
+    )
+    rows = {}
+
+    slow = {"scale": 1.0}
+    with _deploy(DagDeployment(_registry()), slow) as engine:
+        adapt = AdaptiveDeployment(
+            engine,
+            spec,
+            CANDIDATES,
+            real_fallback(),
+            every_n=every_n,
+            drift_ratio=1.5,
+            min_samples=2,
+        )
+        lat = []
+        for k in range(requests):
+            if k == requests // 2:
+                slow["scale"] = 6.0
+            lat.append(adapt.run(1.0).total_s)
+        rows["real_adaptive_post_drift_s"] = float(np.median(lat[-(requests // 4) :]))
+        rows["real_route_version"] = float(adapt.routes.version)
+        moved = [s["moved"] for s in adapt.swaps]
+        assert any("work" in m and m["work"][1] == "pB" for m in moved), moved
+
+    slow = {"scale": 1.0}
+    with _deploy(DagDeployment(_registry()), slow) as engine:
+        lat = []
+        for k in range(requests):
+            if k == requests // 2:
+                slow["scale"] = 6.0
+            lat.append(engine.run(spec, 1.0).total_s)
+        rows["real_static_post_drift_s"] = float(np.median(lat[-(requests // 4) :]))
+    return rows
+
+
+def main(n: int = 1200, runs_real: int = 48) -> dict:
+    half = n // 2
+    drift = DriftSchedule([DriftEvent(half, "pA", compute_scale=5.0)])
+
+    static, _, _ = run_sim(n, drift, adaptive=False)
+    adaptive, swaps, ctrl_s = run_sim(n, drift, adaptive=True)
+    nd_static, _, _ = run_sim(n, None, adaptive=False)
+    nd_adaptive, nd_swaps, nd_ctrl_s = run_sim(n, None, adaptive=True)
+
+    rows = {
+        "sim_static_post_drift_s": steady_state(static),
+        "sim_adaptive_post_drift_s": steady_state(adaptive),
+        "sim_static_nodrift_s": float(np.median(nd_static)),
+        "sim_adaptive_nodrift_s": float(np.median(nd_adaptive)),
+        "sim_controller_wall_s": ctrl_s,
+    }
+    rows.update(run_real(runs_real))
+    print("name,value")
+    for name, value in rows.items():
+        print(f"{name},{value:.4f}")
+
+    # the headline: adaptive recomposition recovers >= 25% of the static
+    # post-drift latency (in practice it recovers ~60%)
+    recovery = (
+        1.0 - rows["sim_adaptive_post_drift_s"] / rows["sim_static_post_drift_s"]
+    )
+    assert recovery >= 0.25, rows
+    assert swaps, "drifted run never recomposed"
+    # no drift -> no swap, and the adaptive stream costs <= 2% extra
+    assert not nd_swaps, nd_swaps
+    overhead = (
+        rows["sim_adaptive_nodrift_s"] - rows["sim_static_nodrift_s"]
+    ) / rows["sim_static_nodrift_s"]
+    assert overhead <= 0.02, rows
+    # the real engine swapped and recovered too
+    assert rows["real_route_version"] >= 1
+    assert rows["real_adaptive_post_drift_s"] < rows["real_static_post_drift_s"], rows
+    print(f"derived,sim_post_drift_recovery_pct,{recovery * 100:.1f}")
+    print(f"derived,sim_nodrift_overhead_pct,{overhead * 100:.2f}")
+    print(f"derived,sim_swap_at_request,{swaps[0][0]}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

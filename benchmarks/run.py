@@ -3,6 +3,9 @@
   paper_figs        Figs 4/6/8 medians + CDFs (calibrated simulator)
   dag_overlap       chain vs DAG medians, +-prefetch (sim + real engine)
   placement         exact place_dag DP vs greedy baseline (asserts DP wins)
+  adapt             online recomposition vs static under 5x mid-run drift
+                    (sim + real engine; asserts >= 25% recovery, <= 2%
+                    no-drift overhead)
   wrapper_overhead  §4.1 wrapper < 1 ms (real wall-clock)
   real_overlap      real-JAX latency hiding on this host (not simulated)
   pipeline_overlap  data-pipeline DoubleBuffer vs sync input
@@ -34,6 +37,7 @@ def main(argv=None) -> None:
     sys.path.insert(0, os.path.join(root, "src"))
     sys.path.insert(0, root)  # `benchmarks` as a package from anywhere
     from benchmarks import (
+        adapt_bench,
         dag_overlap,
         paper_figs,
         pipeline_overlap,
@@ -52,6 +56,12 @@ def main(argv=None) -> None:
             lambda: dag_overlap.main(n=n_fig, runs_real=3 if args.quick else 7),
         ),
         ("placement", placement_bench.main),
+        (
+            "adapt",
+            lambda: adapt_bench.main(
+                n=160 if args.quick else 1200, runs_real=40 if args.quick else 64
+            ),
+        ),
         (
             "wrapper_overhead",
             lambda: wrapper_overhead.main(n_calls=100 if args.quick else 2000),

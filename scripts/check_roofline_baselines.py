@@ -1,0 +1,140 @@
+"""Diff dry-run roofline artifacts against checked-in baselines.
+
+The scheduled CI sweep (``.github/workflows/nightly.yml``) runs
+``python -m repro.launch.dryrun --all --both-meshes`` (512 simulated
+devices) and then this script: every cell present in
+``experiments/baselines/roofline_baselines.json`` must still exist in the
+fresh artifacts and agree on its three roofline terms (compute / memory /
+collective seconds), the useful-FLOPs ratio, and the bottleneck — within
+``--rtol`` (default 5%, absorbing XLA version noise). A drifted cell means
+a distribution-config or cost-model regression landed silently; the job
+fails and prints the per-term deltas.
+
+Cells WITHOUT a baseline are reported as "new" but do not fail — the
+baseline set grows file-by-file as cells are vetted (run with ``--write``
+to regenerate the baseline file from the current artifacts after an
+intentional change, then commit it).
+
+Usage:
+  python scripts/check_roofline_baselines.py             # diff (CI gate)
+  python scripts/check_roofline_baselines.py --write     # refresh baselines
+  python scripts/check_roofline_baselines.py --allow-missing   # partial
+      local artifact sets: baseline cells absent from disk only warn
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+BASELINE_PATH = os.path.join(
+    os.path.dirname(__file__), "..", "experiments", "baselines",
+    "roofline_baselines.json",
+)
+
+TERMS = ("compute_s", "memory_s", "collective_s")
+
+
+def cell_key(r: dict) -> str:
+    return f"{r['arch']}|{r['shape']}|{r['mesh']}|{r.get('tag', '') or ''}"
+
+
+def summarize(r: dict) -> dict:
+    from benchmarks.roofline import roofline_fraction
+
+    rl = r["roofline"]
+    out = {t: rl[t] for t in TERMS}
+    out["bottleneck"] = rl["bottleneck"]
+    out["useful_flops_ratio"] = r["useful_flops_ratio"]
+    out["roofline_fraction"] = roofline_fraction(r)
+    return out
+
+
+def rel_delta(a: float, b: float) -> float:
+    scale = max(abs(a), abs(b), 1e-12)
+    return abs(a - b) / scale
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--rtol", type=float, default=0.05,
+                    help="relative tolerance per numeric term")
+    ap.add_argument("--write", action="store_true",
+                    help="regenerate the baseline file from current artifacts")
+    ap.add_argument("--allow-missing", action="store_true",
+                    help="baseline cells absent from the artifact set warn "
+                         "instead of fail (partial local runs)")
+    args = ap.parse_args(argv)
+
+    from benchmarks.roofline import load
+
+    rows = load()
+    if not rows:
+        print("no dry-run artifacts under experiments/dryrun — run "
+              "`python -m repro.launch.dryrun` first")
+        return 1
+    current = {cell_key(r): summarize(r) for r in rows}
+
+    if args.write:
+        os.makedirs(os.path.dirname(BASELINE_PATH), exist_ok=True)
+        with open(BASELINE_PATH, "w") as f:
+            json.dump(current, f, indent=1, sort_keys=True)
+        print(f"wrote {len(current)} baseline cells -> {BASELINE_PATH}")
+        return 0
+
+    if not os.path.exists(BASELINE_PATH):
+        print(f"no baseline file at {BASELINE_PATH} — run with --write first")
+        return 1
+    with open(BASELINE_PATH) as f:
+        baselines = json.load(f)
+
+    failures, missing, drifted = [], [], []
+    for key, base in sorted(baselines.items()):
+        got = current.get(key)
+        if got is None:
+            missing.append(key)
+            continue
+        deltas = {}
+        for term in (*TERMS, "useful_flops_ratio", "roofline_fraction"):
+            d = rel_delta(base[term], got[term])
+            if d > args.rtol:
+                deltas[term] = (base[term], got[term], d)
+        if base["bottleneck"] != got["bottleneck"]:
+            deltas["bottleneck"] = (base["bottleneck"], got["bottleneck"], "")
+        if deltas:
+            drifted.append((key, deltas))
+
+    new = sorted(set(current) - set(baselines))
+    print(f"cells: {len(current)} current, {len(baselines)} baselined, "
+          f"{len(new)} new (no baseline)")
+    for key in new:
+        print(f"  new: {key}")
+    for key in missing:
+        line = f"  MISSING from artifacts: {key}"
+        if args.allow_missing:
+            print(line + " (allowed)")
+        else:
+            print(line)
+            failures.append(key)
+    for key, deltas in drifted:
+        failures.append(key)
+        print(f"  DRIFTED: {key}")
+        for term, (want, got_v, d) in deltas.items():
+            extra = f" ({d * 100:.1f}% off)" if d != "" else ""
+            print(f"    {term}: baseline={want} current={got_v}{extra}")
+
+    if failures:
+        print(f"\nFAIL: {len(failures)} cell(s) drifted or missing "
+              f"(rtol={args.rtol})")
+        return 1
+    print("\nall baselined roofline cells within tolerance")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

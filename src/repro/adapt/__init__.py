@@ -1,0 +1,29 @@
+"""repro.adapt — online telemetry and ad-hoc workflow recomposition.
+
+GeoFF routes are per-request data, so recomposition never needed a
+redeploy; this package closes the loop that makes recomposition *online*:
+
+  telemetry   TelemetryHub — thread-safe EWMAs of observed compute,
+              fetch, transfer, and cold-start behavior, fed by duck-typed
+              hooks in the engine, compile cache, prefetcher, object
+              store, and the unified simulator
+  costs       observed_costs(hub, fallback) — a shipping.PlacementCosts
+              view over the hub that falls back to the modeled costs for
+              unobserved cells, keeping place_dag total
+  controller  RecompositionController (re-run the exact placement DP
+              every N requests or on cost drift) + AdaptiveDeployment
+              (versioned RouteTable hot-swap over a DagDeployment;
+              in-flight requests finish on their captured routes, moved
+              steps are pre-warmed before cutover)
+
+benchmarks/adapt_bench.py degrades one platform 5x mid-run and shows the
+adaptive deployment recovering most of the lost end-to-end latency.
+"""
+
+from repro.adapt.telemetry import TelemetryHub, attach  # noqa: F401
+from repro.adapt.costs import observed_costs, regions_of  # noqa: F401
+from repro.adapt.controller import (  # noqa: F401
+    AdaptiveDeployment,
+    RecompositionController,
+    RouteTable,
+)

@@ -1,0 +1,257 @@
+"""Online workflow recomposition: re-run the exact placement DP against
+measured costs and hot-swap routes while requests are in flight.
+
+This is the paper's ad-hoc recomposition claim made *online*. Because a
+``DagSpec`` is immutable per-request data (not a deployment artifact),
+re-placing a workflow is just publishing a new spec version — no redeploy,
+no handler restart, and in-flight requests keep executing the spec they
+captured at entry. Three pieces:
+
+  ``RouteTable``             versioned holder of the active spec. ``swap``
+                             publishes a new version atomically; readers
+                             grab ``(version, spec)`` in one lock hop.
+  ``RecompositionController`` the policy: every ``every_n`` completed
+                             requests — or as soon as the observed cost of
+                             the ACTIVE placement drifts past
+                             ``drift_ratio`` x its cost when placed — pull
+                             ``observed_costs`` from the telemetry hub and
+                             re-run ``place_dag`` (the same exact DP static
+                             placement uses; DFlow-style: invocation
+                             decisions track observed state).
+  ``AdaptiveDeployment``     wraps a ``DagDeployment``: wires the telemetry
+                             hooks, runs every request on the current route
+                             version, ticks the controller, and on a
+                             placement change pre-warms the moved steps'
+                             compile caches on their NEW platforms before
+                             cutover — the swap lands warm.
+
+The controller is engine-agnostic: it speaks ``DagSpec`` and placement
+dicts, so the simulator benches (``benchmarks/adapt_bench.py``) drive the
+identical decide loop against simulated telemetry.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+from typing import Optional
+
+from repro.core.shipping import PlacementCosts, dag_cost, place_dag
+from repro.dag.spec import DagSpec
+
+from repro.adapt.costs import observed_costs, regions_of
+from repro.adapt.telemetry import TelemetryHub, attach
+
+
+class RouteTable:
+    """Versioned route publication. Requests capture ``(version, spec)``
+    once at entry; ``swap`` never mutates a published spec (DagSpec is
+    frozen), so in-flight requests finish on the routes they started with
+    and the swap is atomic for new arrivals."""
+
+    def __init__(self, spec: DagSpec, history_len: int = 64):
+        self._lock = threading.Lock()
+        self._version = 0
+        self._spec = spec
+        # recent published (version, spec) pairs — bounded: a long-lived
+        # deployment swapping for days must not retain every old spec
+        self.history = deque([(0, spec)], maxlen=history_len)
+
+    def current(self) -> tuple:
+        with self._lock:
+            return self._version, self._spec
+
+    @property
+    def version(self) -> int:
+        with self._lock:
+            return self._version
+
+    @property
+    def spec(self) -> DagSpec:
+        with self._lock:
+            return self._spec
+
+    def swap(self, new_spec: DagSpec) -> int:
+        with self._lock:
+            self._version += 1
+            self._spec = new_spec
+            self.history.append((self._version, new_spec))
+            return self._version
+
+
+class RecompositionController:
+    """Decides WHEN to re-place and WHAT the new placement is.
+
+    ``tick(spec)`` is called once per completed request with the currently
+    active spec; it returns a placement dict ``{step: platform}`` when the
+    DP found a strictly different placement, else None. Cheap per-tick work
+    is one ``dag_cost`` evaluation (linear in the graph); the DP itself
+    runs only on the every-N boundary or on a drift trigger.
+    """
+
+    def __init__(
+        self,
+        hub: TelemetryHub,
+        fallback: PlacementCosts,
+        candidates: dict,
+        regions: Optional[dict] = None,
+        every_n: int = 16,
+        drift_ratio: float = 1.5,
+        min_samples: int = 2,
+        prefetch: bool = True,
+    ):
+        self.hub = hub
+        self.fallback = fallback
+        self.candidates = dict(candidates)
+        self.regions = regions
+        self.every_n = every_n
+        self.drift_ratio = drift_ratio
+        self.min_samples = min_samples
+        self.prefetch = prefetch
+        self._lock = threading.Lock()
+        self._n = 0
+        self._placed_cost: Optional[float] = None  # active placement's cost
+        #   under the observations that selected it (the drift reference)
+        self.stats = {"ticks": 0, "drift_triggers": 0, "recomputes": 0, "swaps": 0}
+
+    def costs(self) -> PlacementCosts:
+        return observed_costs(self.hub, self.fallback, self.regions, self.min_samples)
+
+    def tick(self, spec: DagSpec) -> Optional[dict]:
+        with self._lock:
+            self._n += 1
+            n = self._n
+            self.stats["ticks"] += 1
+            placed_cost = self._placed_cost
+        nodes = {s.name: s for s in spec.steps}
+        edges = list(spec.edges)
+        placement = {s.name: s.platform for s in spec.steps}
+        costs = self.costs()
+        drifted = False
+        if placed_cost is not None:
+            current_cost = dag_cost(nodes, edges, placement, costs, self.prefetch)
+            drifted = current_cost > self.drift_ratio * placed_cost
+        if not drifted and n % self.every_n != 0:
+            return None
+        with self._lock:
+            if drifted:
+                self.stats["drift_triggers"] += 1
+            self.stats["recomputes"] += 1
+        new_placement = place_dag(nodes, edges, self.candidates, costs, self.prefetch)
+        new_cost = dag_cost(nodes, edges, new_placement, costs, self.prefetch)
+        with self._lock:
+            self._placed_cost = new_cost
+        if new_placement == placement:
+            return None
+        with self._lock:
+            self.stats["swaps"] += 1
+        return new_placement
+
+
+class AdaptiveDeployment:
+    """A ``DagDeployment`` that re-places itself against live telemetry.
+
+    Wraps an existing deployment and ONE workflow spec (the workflow being
+    served): every ``run(payload)`` executes on the current route version;
+    after each request the controller ticks, and a placement change is cut
+    over via ``RouteTable.swap`` — validated against the deployment's
+    platform set, moved steps pre-warmed on their new platforms first.
+
+    ``candidates`` maps step name -> list of platforms the step MAY move
+    to; every candidate must actually have the step's function deployed
+    (checked eagerly, so a recomposition can never route onto a platform
+    that would 404).
+    """
+
+    def __init__(
+        self,
+        deployment,
+        spec: DagSpec,
+        candidates: dict,
+        fallback_costs: PlacementCosts,
+        hub: Optional[TelemetryHub] = None,
+        every_n: int = 16,
+        drift_ratio: float = 1.5,
+        min_samples: int = 2,
+        prewarm: bool = True,
+    ):
+        self.deployment = deployment
+        self.hub = attach(deployment, hub)
+        self.prewarm = prewarm
+        for step in spec.steps:  # fail fast: candidates must be deployed
+            for platform in candidates.get(step.name, ()):
+                fn = step.resolved_fn()
+                if (fn, platform) not in deployment._functions:
+                    raise ValueError(
+                        f"candidate platform {platform!r} for step "
+                        f"{step.name!r} has no deployment of {fn!r}"
+                    )
+        self.controller = RecompositionController(
+            self.hub,
+            fallback_costs,
+            candidates,
+            regions=regions_of(deployment.registry),
+            every_n=every_n,
+            drift_ratio=drift_ratio,
+            min_samples=min_samples,
+        )
+        self.routes = RouteTable(spec)
+        self._cut_lock = threading.Lock()
+        self.swaps = deque(maxlen=256)  # bounded audit log of cutovers
+
+    # -- client ----------------------------------------------------------------
+    def run(self, payload, timeout_s: Optional[float] = 120.0):
+        version, spec = self.routes.current()
+        result = self.deployment.run(spec, payload, timeout_s)
+        placement = self.controller.tick(self.routes.spec)
+        if placement is not None:
+            self._cutover(placement)
+        return result
+
+    # -- cutover ---------------------------------------------------------------
+    def _cutover(self, placement: dict) -> int:
+        """Publish a new route version: validate, pre-warm, swap."""
+        with self._cut_lock:
+            _, spec = self.routes.current()
+            new_spec = spec.apply_placement(
+                placement, platforms=self.deployment.registry.names()
+            )
+            moved = {
+                s.name: (spec.node(s.name).platform, s.platform)
+                for s in new_spec.steps
+                if s.platform != spec.node(s.name).platform
+            }
+            if not moved:
+                return self.routes.version
+            if self.prewarm:
+                for name, (_, platform) in moved.items():
+                    step = new_spec.node(name)
+                    fn = self.deployment._resolve(step.resolved_fn(), platform)
+                    if fn.compile_fn is not None and fn.abstract_args is not None:
+                        self.deployment.cache.warm(
+                            fn.name, platform, fn.compile_fn, fn.abstract_args
+                        )
+            version = self.routes.swap(new_spec)
+            self.swaps.append({"version": version, "moved": moved, "at": time.time()})
+            return version
+
+    # -- reporting / lifecycle -------------------------------------------------
+    def report(self) -> dict:
+        out = self.deployment.report()
+        out["adapt"] = {
+            "route_version": self.routes.version,
+            "swaps": list(self.swaps),
+            "controller": dict(self.controller.stats),
+        }
+        return out
+
+    def shutdown(self):
+        self.deployment.shutdown()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.shutdown()
+        return False

@@ -1,0 +1,152 @@
+"""Online telemetry: the measured-EWMA side of ``shipping.PlacementCosts``.
+
+GeoFF's headline claim is ad-hoc recomposition, but a placement can only be
+*re*-composed against live conditions if something measures them. The
+``TelemetryHub`` is that something: a thread-safe registry of EWMA
+observations, fed by small duck-typed hooks in the runtime —
+
+  dag/engine.py      per-(step, platform) handler compute seconds
+  core/prewarm.py    cold-start / warm-hit counts and compile seconds
+                     per (step, platform)
+  core/prefetch.py   per-(key, region) fetch seconds
+  core/store.py      per-(src_region, dst_region) transfer seconds + bytes
+
+— and by the unified simulator (``WorkflowSimulator(telemetry=...)``), so
+simulated experiments exercise the same observe → estimate → re-place loop
+the real engine runs. The hub never *pushes* anything: ``adapt.costs.
+observed_costs`` pulls a ``PlacementCosts`` view from it on demand, falling
+back to modeled costs for cells with too few samples (Kulkarni et al. 2025
+show public-cloud latencies drift by integer factors over hours — the EWMA
+tracks that drift; the fallback keeps ``place_dag`` total before any
+traffic has flowed).
+
+Producers call ``record_*``; they hold the hub lock only long enough to
+update one EWMA, so instrumentation stays off the critical path.
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Optional
+
+from repro.core.timing import EWMA
+
+
+class TelemetryHub:
+    """Thread-safe EWMA store for every observation class the placement
+    cost model consumes. All ``record_*`` methods are safe to call from any
+    executor thread; ``snapshot`` returns a plain-dict copy for reports."""
+
+    def __init__(self, alpha: float = 0.25):
+        self.alpha = alpha
+        self._lock = threading.Lock()
+        self._compute: dict = {}  # (step, platform) -> EWMA seconds
+        self._fetch: dict = {}  # (key, region) -> EWMA seconds
+        self._transfer_s: dict = {}  # (src_region, dst_region) -> EWMA s
+        self._transfer_b: dict = {}  # (src_region, dst_region) -> EWMA bytes
+        self._cold: dict = {}  # (step, platform) -> cold-start count
+        self._warm: dict = {}  # (step, platform) -> warm-hit count
+
+    def _ewma(self, table: dict, key) -> EWMA:
+        # callers hold self._lock
+        e = table.get(key)
+        if e is None:
+            e = table[key] = EWMA(self.alpha)
+        return e
+
+    # -- producers (instrumentation hooks call these) --------------------------
+    def record_compute(self, step: str, platform: str, seconds: float):
+        with self._lock:
+            self._ewma(self._compute, (step, platform)).update(seconds)
+
+    def record_fetch(self, key: str, region: str, seconds: float):
+        with self._lock:
+            self._ewma(self._fetch, (key, region)).update(seconds)
+
+    def record_transfer(
+        self, src_region: str, dst_region: str, size_bytes: float, seconds: float
+    ):
+        pair = (src_region, dst_region)
+        with self._lock:
+            self._ewma(self._transfer_s, pair).update(seconds)
+            self._ewma(self._transfer_b, pair).update(float(size_bytes))
+
+    def record_cold_start(self, step: str, platform: str):
+        with self._lock:
+            key = (step, platform)
+            self._cold[key] = self._cold.get(key, 0) + 1
+
+    def record_warm_hit(self, step: str, platform: str):
+        with self._lock:
+            key = (step, platform)
+            self._warm[key] = self._warm.get(key, 0) + 1
+
+    # -- consumers (the cost estimator pulls these) ----------------------------
+    def compute_s(self, step: str, platform: str, min_samples: int = 1):
+        """Observed compute EWMA, or None below ``min_samples``."""
+        with self._lock:
+            e = self._compute.get((step, platform))
+            return e.value if e is not None and e.n >= min_samples else None
+
+    def fetch_s(self, key: str, region: str, min_samples: int = 1):
+        with self._lock:
+            e = self._fetch.get((key, region))
+            return e.value if e is not None and e.n >= min_samples else None
+
+    def transfer_s(
+        self, src_region: str, dst_region: str, size_bytes: float, min_samples: int = 1
+    ):
+        """Observed per-transfer seconds on the pair's link (EWMA), or None
+        when unobserved. Deliberately NOT rescaled to ``size_bytes``: the
+        observations ARE the workflow's own payload/fetch traffic, so the
+        EWMA already has the units placement scoring wants — seconds per
+        transfer this workflow performs on this link. (Linear rescaling
+        explodes on latency-dominated links where a 64-byte payload costs
+        almost what a 1 MB one does; the observed bytes EWMA is kept for
+        reporting.) ``size_bytes`` stays in the signature so the estimator
+        is call-compatible with ``PlacementCosts.transfer_s``."""
+        pair = (src_region, dst_region)
+        with self._lock:
+            es = self._transfer_s.get(pair)
+            return es.value if es is not None and es.n >= min_samples else None
+
+    def cold_start_rate(self, step: str, platform: str):
+        """cold / (cold + warm) — None before any observation."""
+        with self._lock:
+            key = (step, platform)
+            cold, warm = self._cold.get(key, 0), self._warm.get(key, 0)
+            return cold / (cold + warm) if cold + warm else None
+
+    # -- reporting -------------------------------------------------------------
+    def snapshot(self) -> dict:
+        """Plain-dict copy of every table (the ``report()`` surface)."""
+        with self._lock:
+            return {
+                "compute_s": {
+                    f"{s}@{p}": e.value for (s, p), e in self._compute.items()
+                },
+                "fetch_s": {f"{k}@{r}": e.value for (k, r), e in self._fetch.items()},
+                "transfer_s": {
+                    f"{a}->{b}": e.value for (a, b), e in self._transfer_s.items()
+                },
+                "transfer_bytes": {
+                    f"{a}->{b}": e.value for (a, b), e in self._transfer_b.items()
+                },
+                "cold_starts": {f"{s}@{p}": n for (s, p), n in self._cold.items()},
+                "warm_hits": {f"{s}@{p}": n for (s, p), n in self._warm.items()},
+            }
+
+
+def attach(deployment, hub: Optional[TelemetryHub] = None) -> TelemetryHub:
+    """Wire a hub into an existing (Dag)Deployment's components.
+
+    The engine, cache, prefetcher, and store each carry a ``telemetry``
+    attribute (None by default — zero overhead when unused); this sets all
+    four in one place so a deployment constructed without telemetry can be
+    instrumented after the fact. Returns the hub."""
+    hub = hub or TelemetryHub()
+    deployment.telemetry = hub
+    deployment.cache.telemetry = hub
+    deployment.prefetcher.telemetry = hub
+    deployment.store.telemetry = hub
+    return hub

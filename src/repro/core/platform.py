@@ -12,6 +12,7 @@ sharding rules, stages inputs onto the platform's devices) so the SAME
 function code deploys anywhere. The paper reports < 1 ms wrapper overhead
 (§4.1); benchmarks/wrapper_overhead.py reproduces that measurement.
 """
+
 from __future__ import annotations
 
 import dataclasses
@@ -28,19 +29,20 @@ from repro.dist import sharding as shd
 class Platform:
     name: str
     region: str
-    kind: str = "cloud"            # cloud | private | edge
+    kind: str = "cloud"  # cloud | private | edge
     native_prefetch: bool = False  # provider-side poke interception (§4.4)
-    allows_sync: bool = True       # public clouds: async only (§4.1)
-    cold_start_s: float = 0.5      # modeled cold-start latency
+    allows_sync: bool = True  # public clouds: async only (§4.1)
+    cold_start_s: float = 0.5  # modeled cold-start latency
     mesh: Optional[object] = None  # jax Mesh (None = default device)
-    rules: Optional[object] = None # ShardingRules for this platform
+    rules: Optional[object] = None  # ShardingRules for this platform
 
     def executor_key(self):
         return self.name
 
 
-def bind_sharding(platform: Platform, mesh=None, rules=None,
-                  workload: str = "decode") -> Platform:
+def bind_sharding(
+    platform: Platform, mesh=None, rules=None, workload: str = "decode"
+) -> Platform:
     """Attach a mesh + sharding rules to a platform (heterogeneous federation).
 
     Every platform in a GeoFF deployment can carry its own placement config:
@@ -51,11 +53,10 @@ def bind_sharding(platform: Platform, mesh=None, rules=None,
     so the SAME step function deploys to either.
     """
     if platform.kind == "edge":
-        mesh = None                       # edge nodes are single-device
+        mesh = None  # edge nodes are single-device
     if rules is None:
         multi_pod = mesh is not None and "pod" in mesh.shape
-        rules = shd.rules_for_platform(platform.kind, workload,
-                                       multi_pod=multi_pod)
+        rules = shd.rules_for_platform(platform.kind, workload, multi_pod=multi_pod)
     return dataclasses.replace(platform, mesh=mesh, rules=rules)
 
 
@@ -63,8 +64,9 @@ class NetworkModel:
     """Inter-region RTT/bandwidth. Symmetric; defaults are public-cloud-ish
     medians (calibrated further in core/simulator.py)."""
 
-    def __init__(self, rtt_s=None, bandwidth_Bps=None,
-                 default_rtt=0.09, default_bw=50e6):
+    def __init__(
+        self, rtt_s=None, bandwidth_Bps=None, default_rtt=0.09, default_bw=50e6
+    ):
         self._rtt = dict(rtt_s or {})
         self._bw = dict(bandwidth_Bps or {})
         self.default_rtt = default_rtt
@@ -108,8 +110,10 @@ class PlatformRegistry:
             self._platforms[platform.name] = platform
             self._executors.setdefault(
                 platform.name,
-                ThreadPoolExecutor(max_workers=8,
-                                   thread_name_prefix=f"plat-{platform.name}"))
+                ThreadPoolExecutor(
+                    max_workers=8, thread_name_prefix=f"plat-{platform.name}"
+                ),
+            )
         return platform
 
     def get(self, name: str) -> Platform:
@@ -136,6 +140,10 @@ class PlatformWrapper:
         self.name = name or getattr(fn, "__name__", "step")
         self.calls = 0
         self.overhead_s = 0.0
+        # concurrent requests to the same (function, platform) run this
+        # wrapper from several executor threads — the counters need a lock
+        # (unlocked += lost updates under contention)
+        self._stats_lock = threading.Lock()
 
     def __call__(self, *args, **kwargs):
         t0 = time.perf_counter()
@@ -144,11 +152,12 @@ class PlatformWrapper:
             ctx = shd.use_sharding(p.mesh, p.rules)
         else:
             ctx = _null_ctx()
-        t1 = time.perf_counter()     # wrapper work before user code
+        t1 = time.perf_counter()  # wrapper work before user code
         with ctx:
             out = self.fn(*args, **kwargs)
-        self.calls += 1
-        self.overhead_s += t1 - t0
+        with self._stats_lock:
+            self.calls += 1
+            self.overhead_s += t1 - t0
         return out
 
 

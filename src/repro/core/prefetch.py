@@ -10,6 +10,7 @@ nothing (the paper's Figure 2, workflow B).
 ``DoubleBuffer`` reuses the same machinery for the training data pipeline:
 batch k+1 is fetched/transferred while step k computes.
 """
+
 from __future__ import annotations
 
 import threading
@@ -26,22 +27,36 @@ from repro.core.workflow import DataRef
 class Prefetcher:
     def __init__(self, store: ObjectStore, max_workers: int = 8):
         self.store = store
-        self._pool = ThreadPoolExecutor(max_workers=max_workers,
-                                        thread_name_prefix="prefetch")
-        self.stats = {"prefetched": 0, "cold_fetches": 0,
-                      "hidden_s": 0.0, "exposed_s": 0.0}
+        self._pool = ThreadPoolExecutor(
+            max_workers=max_workers, thread_name_prefix="prefetch"
+        )
+        self.stats = {
+            "prefetched": 0,
+            "cold_fetches": 0,
+            "hidden_s": 0.0,
+            "exposed_s": 0.0,
+        }
         self._lock = threading.Lock()
+        self.telemetry = None  # duck-typed TelemetryHub (repro.adapt)
 
-    def start(self, deps: Iterable[DataRef], to_region: str,
-              device=None) -> dict:
+    def stats_snapshot(self) -> dict:
+        """Copy of ``stats`` under the lock (joins land on pool threads)."""
+        with self._lock:
+            return dict(self.stats)
+
+    def start(self, deps: Iterable[DataRef], to_region: str, device=None) -> dict:
         """Kick off async fetches. Returns {key: Future[(value, modeled_s)]}."""
         futs = {}
         for ref in deps:
+
             def job(r=ref):
                 value, dt = self.store.get(r.key, to_region)
                 if device is not None and hasattr(value, "shape"):
                     value = jax.device_put(value, device)
+                if self.telemetry is not None:
+                    self.telemetry.record_fetch(r.key, to_region, dt)
                 return value, dt
+
             futs[ref.key] = self._pool.submit(job)
         return futs
 
@@ -61,14 +76,17 @@ class Prefetcher:
             self.stats["hidden_s"] += max(0.0, modeled - exposed)
         return out, exposed, modeled
 
-    def fetch_blocking(self, deps: Iterable[DataRef], to_region: str,
-                       device=None) -> tuple:
+    def fetch_blocking(
+        self, deps: Iterable[DataRef], to_region: str, device=None
+    ) -> tuple:
         """The baseline (no pre-fetch) path: sequential download."""
         out, total = {}, 0.0
         for ref in deps:
             value, dt = self.store.get(ref.key, to_region)
             if device is not None and hasattr(value, "shape"):
                 value = jax.device_put(value, device)
+            if self.telemetry is not None:
+                self.telemetry.record_fetch(ref.key, to_region, dt)
             out[ref.key] = value
             total += dt
         with self._lock:
@@ -87,12 +105,12 @@ class DoubleBuffer:
     pipeline's version of GeoFF pre-fetching.
     """
 
-    def __init__(self, it: Iterable, depth: int = 2,
-                 transform: Optional[Callable] = None):
+    def __init__(
+        self, it: Iterable, depth: int = 2, transform: Optional[Callable] = None
+    ):
         self._it = iter(it)
         self._transform = transform
-        self._pool = ThreadPoolExecutor(max_workers=1,
-                                        thread_name_prefix="databuf")
+        self._pool = ThreadPoolExecutor(max_workers=1, thread_name_prefix="databuf")
         self._queue = []
         self._depth = depth
         for _ in range(depth):

@@ -10,6 +10,7 @@ Keys are (step name, platform, abstract input signature), so re-routing a
 step to a different platform (ad-hoc recomposition / function shipping)
 compiles per platform and subsequent calls are warm.
 """
+
 from __future__ import annotations
 
 import threading
@@ -22,10 +23,16 @@ import jax
 
 def signature_of(args_pytree) -> tuple:
     leaves, treedef = jax.tree_util.tree_flatten(args_pytree)
-    return (str(treedef),
-            tuple((tuple(getattr(leaf, "shape", ())),
-                   str(getattr(leaf, "dtype", type(leaf).__name__)))
-                  for leaf in leaves))
+    return (
+        str(treedef),
+        tuple(
+            (
+                tuple(getattr(leaf, "shape", ())),
+                str(getattr(leaf, "dtype", type(leaf).__name__)),
+            )
+            for leaf in leaves
+        ),
+    )
 
 
 class CompileCache:
@@ -35,10 +42,23 @@ class CompileCache:
         self._cache: dict = {}
         self._inflight: dict = {}
         self._lock = threading.Lock()
-        self._pool = ThreadPoolExecutor(max_workers=max_workers,
-                                        thread_name_prefix="prewarm")
-        self.stats = {"hits": 0, "misses": 0, "prewarms": 0,
-                      "compile_s": 0.0, "hidden_compile_s": 0.0}
+        self._pool = ThreadPoolExecutor(
+            max_workers=max_workers, thread_name_prefix="prewarm"
+        )
+        self.stats = {
+            "hits": 0,
+            "misses": 0,
+            "prewarms": 0,
+            "compile_s": 0.0,
+            "hidden_compile_s": 0.0,
+        }
+        self.telemetry = None  # duck-typed TelemetryHub (repro.adapt)
+
+    def stats_snapshot(self) -> dict:
+        """Copy of ``stats`` under the cache lock (safe to read while
+        compiles land on other threads)."""
+        with self._lock:
+            return dict(self.stats)
 
     def _key(self, name: str, platform: str, args) -> tuple:
         return (name, platform, signature_of(args))
@@ -49,8 +69,9 @@ class CompileCache:
         compiled = jitted.lower(*args).compile()
         return compiled, time.perf_counter() - t0
 
-    def warm(self, name: str, platform: str, fn: Callable, abstract_args,
-             donate=()) -> Future:
+    def warm(
+        self, name: str, platform: str, fn: Callable, abstract_args, donate=()
+    ) -> Future:
         """Start compiling in the background (the poke path). Idempotent."""
         key = self._key(name, platform, abstract_args)
         with self._lock:
@@ -74,26 +95,34 @@ class CompileCache:
             self._inflight[key] = fut
             return fut
 
-    def get(self, name: str, platform: str, fn: Callable, args,
-            donate=()) -> object:
+    def get(self, name: str, platform: str, fn: Callable, args, donate=()) -> object:
         """Blocking fetch (the payload path): hit, join in-flight, or
         compile cold (a cold start — counted in stats)."""
         key = self._key(name, platform, args)
+        tel = self.telemetry
         with self._lock:
-            if key in self._cache:
+            hit = self._cache.get(key)
+            if hit is not None:
                 self.stats["hits"] += 1
-                return self._cache[key]
             fut = self._inflight.get(key)
+        if hit is not None:
+            if tel is not None:
+                tel.record_warm_hit(name, platform)
+            return hit
         if fut is not None:
             compiled = fut.result()
             with self._lock:
                 self.stats["hits"] += 1
+            if tel is not None:
+                tel.record_warm_hit(name, platform)
             return compiled
         compiled, dt = self._compile(fn, args, donate)
         with self._lock:
             self._cache[key] = compiled
             self.stats["misses"] += 1
             self.stats["compile_s"] += dt
+        if tel is not None:
+            tel.record_cold_start(name, platform)
         return compiled
 
     def is_warm(self, name: str, platform: str, args) -> bool:

@@ -30,6 +30,14 @@ list. Double-billing per node (prefetch on) is start - prepare clipped at 0
 as ``timing=`` to shrink it: each edge's poke is delayed by the learned
 slack, and the controller is fed per-edge slack observations (relative to
 the undelayed poke) plus per-step compute/prepare EWMAs.
+
+Two optional taps serve ``repro.adapt``: ``telemetry=`` feeds a
+``TelemetryHub`` the same observation classes the real engine records
+(per-(step, platform) compute, per-(key, region) fetch, per-region-pair
+transfer, cold/warm counts), and ``drift=`` attaches a ``DriftSchedule``
+that rescales a platform's compute/transfer/fetch draws from request k on
+(mid-run condition changes). Both are draw-neutral: scaling happens after
+sampling, so with them disabled the trace is bit-for-bit the undrifted one.
 """
 
 from __future__ import annotations
@@ -76,6 +84,10 @@ class SimStep:
     compute: Dist
     fetch: Dist = Dist(0.0)  # external data download at the step's region
     prefetch: bool = True
+    fetch_key: str = ""  # telemetry key for fetch draws ("" -> step name);
+    #   set it to the DataRef key of the matching DagSpec step so simulated
+    #   fetch observations are reachable by adapt.costs.observed_costs
+    #   (which looks fetches up per dep key, like the real prefetcher)
 
 
 @dataclass
@@ -98,6 +110,46 @@ class DagTrace:
     payload: dict
     double_billed_s: float
     exposed_fetch_s: float
+
+
+@dataclass(frozen=True)
+class DriftEvent:
+    """From request ``at_request`` on, rescale one platform's draws.
+
+    Models the integer-factor latency drift public clouds exhibit over
+    hours (Kulkarni et al., 2025): compute draws on the platform are
+    multiplied by ``compute_scale``, transfers touching the platform by
+    ``transfer_scale``, external-data fetches at the platform by
+    ``fetch_scale``. Scales compose multiplicatively across events."""
+
+    at_request: int
+    platform: str
+    compute_scale: float = 1.0
+    transfer_scale: float = 1.0
+    fetch_scale: float = 1.0
+
+
+class DriftSchedule:
+    """Mid-run drift injection for the simulator: a list of ``DriftEvent``.
+
+    The simulator consults ``scales(k, platform)`` with its running request
+    index; with no schedule attached (or no event in range) the draw stream
+    is bit-for-bit what the un-drifted simulator produces (scaling happens
+    AFTER sampling, so rng consumption never changes — the frozen-reference
+    tests in tests/test_unified_core.py pin this)."""
+
+    def __init__(self, events=()):
+        self.events = tuple(events)
+
+    def scales(self, request_k: int, platform: str) -> tuple:
+        """(compute_scale, transfer_scale, fetch_scale) at request_k."""
+        c = t = f = 1.0
+        for e in self.events:
+            if e.platform == platform and request_k >= e.at_request:
+                c *= e.compute_scale
+                t *= e.transfer_scale
+                f *= e.fetch_scale
+        return c, t, f
 
 
 class ObjectLatency:
@@ -146,6 +198,8 @@ class WorkflowSimulator:
         payload_size_bytes: float = 1.5e6,
         seed: int = 0,
         timing=None,
+        telemetry=None,
+        drift: Optional[DriftSchedule] = None,
     ):
         self.platforms = {p.name: p for p in platforms}
         self.msg = msg_latency_s
@@ -153,6 +207,9 @@ class WorkflowSimulator:
         self.payload_size = payload_size_bytes
         self.rng = np.random.default_rng(seed)
         self.timing = timing  # optional PokeTimingController (per-edge)
+        self.telemetry = telemetry  # optional TelemetryHub (repro.adapt)
+        self.drift = drift  # optional DriftSchedule (mid-run injection)
+        self._req_k = 0  # running request index (feeds the drift schedule)
         self._last_use: dict = {}
 
     # -- transfer of the inter-step payload ------------------------------------
@@ -170,6 +227,26 @@ class WorkflowSimulator:
         last = self._last_use.get(key, -math.inf)
         cold = (t - last) > plat.keep_warm_s
         return plat.cold_start.sample(self.rng) if cold else 0.0
+
+    # -- drift injection (mid-run condition changes) ---------------------------
+    def _scales(self, platform: str) -> tuple:
+        if self.drift is None:
+            return (1.0, 1.0, 1.0)
+        return self.drift.scales(self._req_k, platform)
+
+    def _edge_transfer_s(self, src_step: SimStep, dst_step: SimStep) -> float:
+        """Payload transfer for one edge, with drift applied: a degraded
+        platform slows every link it terminates (max of the two endpoint
+        scales — rescaling AFTER the model keeps rng consumption fixed)."""
+        tr = self._transfer_s(
+            self.platforms[src_step.platform], self.platforms[dst_step.platform]
+        )
+        if self.drift is not None:
+            tr *= max(
+                self._scales(src_step.platform)[1],
+                self._scales(dst_step.platform)[1],
+            )
+        return tr
 
     # -- the one dataflow recurrence -------------------------------------------
     def _run_graph(self, order, steps, preds, succs, t0: float, prefetch: bool):
@@ -200,13 +277,16 @@ class WorkflowSimulator:
             step = steps[v]
             cold = self._cold(step, t0)
             fetch = step.fetch.sample(self.rng)
+            compute = step.compute.sample(self.rng)
+            if self.drift is not None:
+                csc, _, fsc = self._scales(step.platform)
+                compute *= csc
+                fetch *= fsc
             if not preds[v]:
                 payload[v] = t0 + self.msg / 2
             else:
-                dst = self.platforms[step.platform]
                 payload[v] = max(
-                    end[u] + self._transfer_s(self.platforms[steps[u].platform], dst)
-                    for u in preds[v]
+                    end[u] + self._edge_transfer_s(steps[u], step) for u in preds[v]
                 )
             if prefetch and poke[v] < math.inf:
                 prepare[v] = poke[v] + cold + fetch
@@ -216,8 +296,28 @@ class WorkflowSimulator:
             else:
                 start[v] = payload[v] + cold + fetch
                 exposed_fetch += fetch
-            end[v] = start[v] + step.compute.sample(self.rng)
+            end[v] = start[v] + compute
             self._last_use[(step.name, step.platform)] = end[v]
+            if self.telemetry is not None:
+                region = self.platforms[step.platform].region
+                self.telemetry.record_compute(step.name, step.platform, compute)
+                if step.fetch.median > 0:
+                    # the step's aggregate external fetch at its platform's
+                    # region, keyed by fetch_key (default: the step name)
+                    self.telemetry.record_fetch(
+                        step.fetch_key or step.name, region, fetch
+                    )
+                for u in preds[v]:
+                    self.telemetry.record_transfer(
+                        self.platforms[steps[u].platform].region,
+                        region,
+                        self.payload_size,
+                        self._edge_transfer_s(steps[u], step),
+                    )
+                if cold > 0:
+                    self.telemetry.record_cold_start(step.name, step.platform)
+                else:
+                    self.telemetry.record_warm_hit(step.name, step.platform)
             if self.timing is not None and prefetch:
                 self.timing.record_prepare(step.name, cold + fetch)
                 self.timing.record_compute(step.name, end[v] - start[v])
@@ -228,11 +328,8 @@ class WorkflowSimulator:
                     # delay embedded in prepare[v] is the argmin edge's,
                     # not each recorded edge's)
                     prepare0 = poke0[v] + cold + fetch
-                    dst = self.platforms[step.platform]
                     for u in preds[v]:
-                        arrival = end[u] + self._transfer_s(
-                            self.platforms[steps[u].platform], dst
-                        )
+                        arrival = end[u] + self._edge_transfer_s(steps[u], step)
                         self.timing.record_slack(
                             steps[u].name, steps[v].name, arrival - prepare0
                         )
@@ -248,6 +345,7 @@ class WorkflowSimulator:
         prepare, payload, start, end, total, db, ef = self._run_graph(
             ids, smap, preds, succs, t0, prefetch
         )
+        self._req_k += 1
         return RequestTrace(
             total,
             [start[i] for i in ids],
@@ -265,6 +363,7 @@ class WorkflowSimulator:
         prepare, payload, start, end, total, db, ef = self._run_graph(
             order, smap, preds, succs, t0, prefetch
         )
+        self._req_k += 1
         return DagTrace(total, start, end, prepare, payload, db, ef)
 
     # -- an experiment (paper: 1 req/s for 30 min) -----------------------------
@@ -276,6 +375,7 @@ class WorkflowSimulator:
         prefetch: bool = True,
     ) -> np.ndarray:
         self._last_use = {}
+        self._req_k = 0  # drift events are indexed from the experiment start
         out = np.empty(n_requests)
         for k in range(n_requests):
             out[k] = self.run_request(steps, k * interarrival_s, prefetch).total_s
@@ -290,6 +390,7 @@ class WorkflowSimulator:
         prefetch: bool = True,
     ) -> np.ndarray:
         self._last_use = {}
+        self._req_k = 0  # drift events are indexed from the experiment start
         out = np.empty(n_requests)
         for k in range(n_requests):
             out[k] = self.run_dag_request(

@@ -50,14 +50,21 @@ class ObjectStore:
         self.enforce_latency = enforce_latency
         self._objects: dict = {}
         self._lock = threading.Lock()
+        self.telemetry = None  # duck-typed TelemetryHub (repro.adapt)
         self.stats = {
             "puts": 0,
-            "gets": 0,
+            "gets": 0,  # successful GETs (hits; a missing key raises)
+            "misses": 0,
             "bytes_in": 0,
             "bytes_out": 0,
             "modeled_get_s": 0.0,
             "modeled_put_s": 0.0,
         }
+
+    def stats_snapshot(self) -> dict:
+        """Copy of ``stats`` under the store lock."""
+        with self._lock:
+            return dict(self.stats)
 
     # -- api -------------------------------------------------------------------
     def put(self, key: str, value, region: str, from_region: str = "") -> float:
@@ -70,6 +77,8 @@ class ObjectStore:
             self.stats["modeled_put_s"] += dt
         if self.enforce_latency:
             time.sleep(dt)
+        if self.telemetry is not None:
+            self.telemetry.record_transfer(from_region or region, region, size, dt)
         return dt
 
     def get(self, key: str, to_region: str) -> tuple:
@@ -82,6 +91,7 @@ class ObjectStore:
         with self._lock:
             obj = self._objects.get(key)
             if obj is None:
+                self.stats["misses"] += 1
                 prefix = key.rsplit("/", 1)[0] + "/" if "/" in key else key[:4]
                 near = sorted(k for k in self._objects if k.startswith(prefix))[:8]
                 hint = (
@@ -101,6 +111,8 @@ class ObjectStore:
             self.stats["modeled_get_s"] += dt
         if self.enforce_latency:
             time.sleep(dt)
+        if self.telemetry is not None:
+            self.telemetry.record_transfer(obj.region, to_region, obj.size_bytes, dt)
         return obj.value, dt
 
     def head(self, key: str) -> Optional[StoredObject]:

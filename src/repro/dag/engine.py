@@ -105,6 +105,7 @@ class DagDeployment:
         registry: Optional[PlatformRegistry] = None,
         store: Optional[ObjectStore] = None,
         timing_mode: str = "eager",
+        telemetry=None,
     ):
         self.registry = registry or PlatformRegistry()
         self.store = store or ObjectStore(self.registry.network)
@@ -115,6 +116,13 @@ class DagDeployment:
         self._stats_lock = threading.Lock()
         self._shut = False
         self.stats = {"pokes": {}, "joins": 0, "buffered_edges": 0}
+        # duck-typed TelemetryHub (repro.adapt): propagated to every piece
+        # so one hub sees compute + warm/cold + fetch + transfer events
+        self.telemetry = telemetry
+        if telemetry is not None:
+            self.cache.telemetry = telemetry
+            self.prefetcher.telemetry = telemetry
+            self.store.telemetry = telemetry
 
     # -- deployer --------------------------------------------------------------
     def deploy(
@@ -172,6 +180,28 @@ class DagDeployment:
         return DagResult(
             state.rid, outputs, dict(state.timeline), time.perf_counter() - t0
         )
+
+    def report(self) -> dict:
+        """ONE merged runtime-stats surface (locked snapshots throughout):
+        engine counters, compile cache, prefetcher, object store, and the
+        per-step/per-edge timing report — plus the telemetry snapshot when
+        a hub is attached. This is also the surface ``repro.adapt`` taps."""
+        with self._stats_lock:
+            engine = {
+                "pokes": dict(self.stats["pokes"]),
+                "joins": self.stats["joins"],
+                "buffered_edges": self.stats["buffered_edges"],
+            }
+        out = {
+            "engine": engine,
+            "compile": self.cache.stats_snapshot(),
+            "prefetch": self.prefetcher.stats_snapshot(),
+            "store": self.store.stats_snapshot(),
+            "timing": self.timing.report(),
+        }
+        if self.telemetry is not None:
+            out["telemetry"] = self.telemetry.snapshot()
+        return out
 
     def shutdown(self):
         if self._shut:
@@ -339,6 +369,8 @@ class DagDeployment:
         dt = time.perf_counter() - t0
         timeline["compute_s"] = dt
         self.timing.record_compute(step.name, dt)
+        if self.telemetry is not None:
+            self.telemetry.record_compute(step.name, fn.platform.name, dt)
         with state.lock:
             state.timeline[node] = timeline
 

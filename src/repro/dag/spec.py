@@ -150,9 +150,30 @@ class DagSpec:
         """Ad-hoc recomposition: same workflow, one step moved."""
         return self.apply_placement({step_name: platform})
 
-    def apply_placement(self, placement: dict) -> "DagSpec":
+    def apply_placement(self, placement: dict, platforms=None) -> "DagSpec":
         """Move every step named in ``placement`` (a ``{name: platform}``
-        map, e.g. the output of ``shipping.place_dag``) to its platform."""
+        map, e.g. the output of ``shipping.place_dag``) to its platform.
+
+        Validates its input: a placement naming an unknown step raises
+        ``ValueError`` with the offending name, and when ``platforms`` (the
+        deployment's platform set, e.g. ``registry.names()``) is given, so
+        does a target platform outside it — a hot-swapped route must never
+        point at a platform that cannot serve it."""
+        known = {s.name for s in self.steps}
+        for name in placement:
+            if name not in known:
+                raise ValueError(
+                    f"placement names unknown step {name!r}; "
+                    f"steps: {sorted(known)}"
+                )
+        if platforms is not None:
+            allowed = set(platforms)
+            for name, platform in placement.items():
+                if platform not in allowed:
+                    raise ValueError(
+                        f"placement moves step {name!r} to unknown platform "
+                        f"{platform!r}; platforms: {sorted(allowed)}"
+                    )
         steps = tuple(
             DagStep(
                 s.name,

@@ -1,0 +1,386 @@
+"""repro.adapt: telemetry hub, observed costs, recomposition controller,
+and the AdaptiveDeployment hot-swap over the real dataflow engine."""
+
+import threading
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.adapt import (
+    AdaptiveDeployment,
+    RecompositionController,
+    RouteTable,
+    TelemetryHub,
+    attach,
+    observed_costs,
+)
+from repro.core import DataRef, Platform, PlatformRegistry
+from repro.core.shipping import PlacementCosts
+from repro.dag import DagDeployment, DagSpec, DagStep
+
+
+def fallback_costs(compute=None, transfer_cross=0.5):
+    compute = compute or {}
+    return PlacementCosts(
+        fetch_s=lambda name, p, deps: 0.25 * len(deps),
+        compute_s=lambda name, p: compute.get((name, p), 0.1),
+        transfer_s=lambda a, b, size: 0.0 if a == b else transfer_cross,
+        payload_size=1.5e6,
+    )
+
+
+# ---------------------------------------------------------------------------
+# TelemetryHub
+# ---------------------------------------------------------------------------
+def test_hub_ewma_and_min_samples():
+    hub = TelemetryHub(alpha=0.5)
+    assert hub.compute_s("f", "p") is None
+    hub.record_compute("f", "p", 1.0)
+    assert hub.compute_s("f", "p") == pytest.approx(1.0)
+    assert hub.compute_s("f", "p", min_samples=2) is None
+    hub.record_compute("f", "p", 2.0)
+    assert hub.compute_s("f", "p", min_samples=2) == pytest.approx(1.5)
+
+
+def test_hub_transfer_is_observed_seconds_not_rescaled():
+    """The transfer estimate is the link's observed per-transfer EWMA; it
+    must NOT be linearly rescaled to the queried size (latency-dominated
+    links would explode a 64 B observation to a 1.5 MB query)."""
+    hub = TelemetryHub()
+    hub.record_transfer("eu", "us", 64, 0.05)
+    hub.record_transfer("eu", "us", 64, 0.05)
+    assert hub.transfer_s("eu", "us", 1.5e6) == pytest.approx(0.05)
+    assert hub.transfer_s("us", "eu", 64) is None  # directional
+
+
+def test_hub_cold_start_rate_and_snapshot():
+    hub = TelemetryHub()
+    assert hub.cold_start_rate("f", "p") is None
+    hub.record_cold_start("f", "p")
+    hub.record_warm_hit("f", "p")
+    hub.record_warm_hit("f", "p")
+    assert hub.cold_start_rate("f", "p") == pytest.approx(1 / 3)
+    hub.record_fetch("k", "eu", 0.2)
+    snap = hub.snapshot()
+    assert snap["cold_starts"]["f@p"] == 1
+    assert snap["warm_hits"]["f@p"] == 2
+    assert snap["fetch_s"]["k@eu"] == pytest.approx(0.2)
+
+
+def test_hub_is_thread_safe_under_contention():
+    hub = TelemetryHub(alpha=0.5)
+
+    def hammer():
+        for _ in range(500):
+            hub.record_compute("f", "p", 1.0)
+            hub.record_transfer("a", "b", 10, 0.1)
+            hub.record_cold_start("f", "p")
+
+    threads = [threading.Thread(target=hammer) for _ in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert hub.snapshot()["cold_starts"]["f@p"] == 4000
+    assert hub.compute_s("f", "p") == pytest.approx(1.0)
+
+
+# ---------------------------------------------------------------------------
+# observed_costs
+# ---------------------------------------------------------------------------
+def test_observed_costs_falls_back_when_unobserved():
+    hub = TelemetryHub()
+    costs = observed_costs(hub, fallback_costs(), min_samples=2)
+    assert costs.compute_s("f", "p") == pytest.approx(0.1)
+    assert costs.transfer_s("p", "q", 100) == pytest.approx(0.5)
+    assert costs.fetch_s("f", "p", (DataRef("k"),)) == pytest.approx(0.25)
+
+
+def test_observed_costs_prefers_measurements():
+    hub = TelemetryHub(alpha=1.0)
+    for _ in range(2):
+        hub.record_compute("f", "p", 3.0)
+        hub.record_transfer("ra", "rb", 100, 0.9)
+        hub.record_fetch("k", "rb", 0.7)
+    regions = {"p": "ra", "q": "rb"}
+    costs = observed_costs(hub, fallback_costs(), regions=regions, min_samples=2)
+    assert costs.compute_s("f", "p") == pytest.approx(3.0)
+    assert costs.compute_s("f", "q") == pytest.approx(0.1)  # unobserved cell
+    assert costs.transfer_s("p", "q", 100) == pytest.approx(0.9)
+    assert costs.transfer_s("q", "p", 100) == pytest.approx(0.5)  # fallback
+    # fetch observed at q's region for key k
+    assert costs.fetch_s("f", "q", (DataRef("k"),)) == pytest.approx(0.7)
+
+
+def test_observed_costs_fetch_is_all_or_fallback():
+    """A half-observed dep set falls back entirely (mixed scales lie)."""
+    hub = TelemetryHub(alpha=1.0)
+    hub.record_fetch("k1", "p", 0.7)
+    costs = observed_costs(hub, fallback_costs(), min_samples=1)
+    deps = (DataRef("k1"), DataRef("k2"))
+    assert costs.fetch_s("f", "p", deps) == pytest.approx(0.5)  # 0.25 * 2
+    hub.record_fetch("k2", "p", 0.1)
+    assert costs.fetch_s("f", "p", deps) == pytest.approx(0.8)
+
+
+# ---------------------------------------------------------------------------
+# RouteTable + RecompositionController
+# ---------------------------------------------------------------------------
+def chain_spec(work_platform="pA"):
+    return DagSpec(
+        (
+            DagStep("ingest", "edge"),
+            DagStep("work", work_platform),
+            DagStep("deliver", "edge"),
+        ),
+        (("ingest", "work"), ("work", "deliver")),
+        "t",
+    )
+
+
+def test_route_table_versions_and_history():
+    table = RouteTable(chain_spec())
+    assert table.version == 0
+    v1 = table.swap(chain_spec("pB"))
+    assert v1 == 1 and table.spec.node("work").platform == "pB"
+    assert [v for v, _ in table.history] == [0, 1]
+    version, spec = table.current()
+    assert version == 1 and spec.node("work").platform == "pB"
+
+
+def test_controller_recomposes_on_every_n_boundary():
+    hub = TelemetryHub(alpha=1.0)
+    fb = fallback_costs(compute={("work", "pA"): 0.1, ("work", "pB"): 0.2})
+    ctrl = RecompositionController(
+        hub, fb, {"work": ["pA", "pB"]}, every_n=4, min_samples=2
+    )
+    spec = chain_spec("pA")
+    # pA degrades: observed compute way past pB's modeled cost
+    for _ in range(3):
+        hub.record_compute("work", "pA", 5.0)
+        assert ctrl.tick(spec) is None  # ticks 1..3: not on the boundary
+    placement = ctrl.tick(spec)  # tick 4: recompute -> move to pB
+    assert placement is not None and placement["work"] == "pB"
+    assert ctrl.stats["recomputes"] == 1 and ctrl.stats["swaps"] == 1
+
+
+def test_controller_drift_trigger_fires_between_boundaries():
+    hub = TelemetryHub(alpha=1.0)
+    fb = fallback_costs(compute={("work", "pA"): 0.1, ("work", "pB"): 0.2})
+    ctrl = RecompositionController(
+        hub, fb, {"work": ["pA", "pB"]}, every_n=100, drift_ratio=1.5, min_samples=1
+    )
+    spec = chain_spec("pA")
+    hub.record_compute("work", "pA", 0.1)
+    # seed the drift reference: force one recompute on a boundary
+    ctrl.every_n = 1
+    assert ctrl.tick(spec) is None  # placement already optimal
+    ctrl.every_n = 100
+    # now degrade pA 20x: the NEXT tick must trigger off drift alone
+    hub.record_compute("work", "pA", 2.0)
+    placement = ctrl.tick(spec)
+    assert placement == {"ingest": "edge", "work": "pB", "deliver": "edge"}
+    assert ctrl.stats["drift_triggers"] == 1
+
+
+def test_controller_stable_placement_returns_none():
+    hub = TelemetryHub()
+    fb = fallback_costs(compute={("work", "pA"): 0.1, ("work", "pB"): 0.2})
+    ctrl = RecompositionController(hub, fb, {"work": ["pA", "pB"]}, every_n=1)
+    spec = chain_spec("pA")
+    for _ in range(5):
+        assert ctrl.tick(spec) is None  # pA stays optimal: never a swap
+    assert ctrl.stats["recomputes"] == 5 and ctrl.stats["swaps"] == 0
+
+
+# ---------------------------------------------------------------------------
+# AdaptiveDeployment on the real engine
+# ---------------------------------------------------------------------------
+def make_registry():
+    reg = PlatformRegistry()
+    reg.register(Platform("edge", "edge", kind="edge", native_prefetch=True))
+    reg.register(Platform("pA", "region-a", kind="cloud"))
+    reg.register(Platform("pB", "region-b", kind="cloud"))
+    return reg
+
+
+def platform_of_current_thread():
+    name = threading.current_thread().name
+    return name.split("plat-")[1].rsplit("_", 1)[0] if "plat-" in name else name
+
+
+def deploy_chain(engine, ran_on, work=None):
+    def passthrough(p, d):
+        return p
+
+    def default_work(p, d):
+        ran_on.append(platform_of_current_thread())
+        return p * 2
+
+    engine.deploy("ingest", passthrough, ["edge"])
+    engine.deploy("work", work or default_work, ["pA", "pB"])
+    engine.deploy("deliver", passthrough, ["edge"])
+    return engine
+
+
+def test_adaptive_deployment_rejects_undeployed_candidates():
+    with deploy_chain(DagDeployment(make_registry()), []) as engine:
+        with pytest.raises(ValueError, match="'pC'"):
+            AdaptiveDeployment(
+                engine, chain_spec(), {"work": ["pA", "pC"]}, fallback_costs()
+            )
+
+
+def test_adaptive_deployment_swaps_and_serves():
+    """Degrade pA mid-stream: the controller swaps the route to pB and
+    every request (before, during, after) returns the right answer."""
+    ran_on = []
+    slow = {"scale": 1.0}
+
+    def work(p, d):
+        plat = platform_of_current_thread()
+        ran_on.append(plat)
+        # only pA degrades; pB stays at its nominal 0.03 s
+        time.sleep(0.02 * slow["scale"] if plat == "pA" else 0.03)
+        return p * 2
+
+    # modeled cross-link cost must be payload-scale (0.05 s) or pB's two
+    # unobserved links would mask any compute drift on pA
+    fb = fallback_costs(
+        compute={("work", "pA"): 0.02, ("work", "pB"): 0.03}, transfer_cross=0.05
+    )
+    with deploy_chain(DagDeployment(make_registry()), ran_on, work) as engine:
+        adapt = AdaptiveDeployment(
+            engine,
+            chain_spec(),
+            {"work": ["pA", "pB"]},
+            fb,
+            every_n=4,
+            drift_ratio=1.5,
+            min_samples=2,
+        )
+        outs = [adapt.run(k).outputs for k in range(6)]
+        slow["scale"] = 20.0
+        outs += [adapt.run(k).outputs for k in range(6, 16)]
+        assert outs == [k * 2 for k in range(16)]  # nothing dropped, ever
+        assert adapt.routes.version >= 1
+        assert adapt.swaps[0]["moved"]["work"] == ("pA", "pB")
+        assert ran_on[0] == "pA" and ran_on[-1] == "pB"
+        report = adapt.report()
+        assert report["adapt"]["route_version"] == adapt.routes.version
+        assert report["adapt"]["controller"]["swaps"] >= 1
+
+
+def test_in_flight_request_survives_cutover():
+    """A request that entered on route v0 finishes on v0's platform while
+    the table swaps to v1 underneath it — no drop, no reroute mid-flight."""
+    ran_on = []
+    started, release = threading.Event(), threading.Event()
+
+    def work(p, d):
+        ran_on.append(platform_of_current_thread())
+        started.set()
+        assert release.wait(5.0)
+        return p * 2
+
+    with deploy_chain(DagDeployment(make_registry()), ran_on, work) as engine:
+        adapt = AdaptiveDeployment(
+            engine, chain_spec(), {"work": ["pA", "pB"]}, fallback_costs()
+        )
+        results = []
+        t = threading.Thread(target=lambda: results.append(adapt.run(21)))
+        t.start()
+        assert started.wait(5.0)
+        version = adapt._cutover({"work": "pB"})  # hot-swap mid-flight
+        assert version == 1
+        release.set()
+        t.join(5.0)
+        assert results and results[0].outputs == 42
+        assert ran_on == ["pA"]  # the in-flight request kept its route
+        release.set()
+        assert adapt.run(5).outputs == 10
+        assert ran_on[-1] == "pB"  # new arrivals take the new route
+
+
+def test_cutover_prewarms_moved_step():
+    """The moved step's compile cache is warmed on the NEW platform before
+    the swap is published (the cutover lands warm)."""
+    abstract = (jnp.zeros((4,), jnp.float32),)
+    with DagDeployment(make_registry()) as engine:
+        engine.deploy("ingest", lambda p, d: p, ["edge"])
+        engine.deploy(
+            "work",
+            lambda p, d: p * 2,
+            ["pA", "pB"],
+            abstract_args=abstract,
+            compile_fn=lambda x: x * 2,
+        )
+        engine.deploy("deliver", lambda p, d: p, ["edge"])
+        adapt = AdaptiveDeployment(
+            engine, chain_spec(), {"work": ["pA", "pB"]}, fallback_costs()
+        )
+        adapt.run(1)
+        assert not engine.cache.is_warm("work", "pB", abstract)
+        adapt._cutover({"work": "pB"})
+        deadline = time.time() + 5.0
+        while not engine.cache.is_warm("work", "pB", abstract):
+            assert time.time() < deadline, "prewarm never landed"
+            time.sleep(0.01)
+        assert adapt.routes.spec.node("work").platform == "pB"
+
+
+def test_cutover_validates_against_deployment_platform_set():
+    with deploy_chain(DagDeployment(make_registry()), []) as engine:
+        adapt = AdaptiveDeployment(
+            engine, chain_spec(), {"work": ["pA", "pB"]}, fallback_costs()
+        )
+        with pytest.raises(ValueError, match="unknown platform"):
+            adapt._cutover({"work": "nowhere"})
+
+
+# ---------------------------------------------------------------------------
+# unified report() + engine telemetry hooks
+# ---------------------------------------------------------------------------
+def test_deployment_report_merges_all_stats_surfaces():
+    ran_on = []
+    with deploy_chain(DagDeployment(make_registry()), ran_on) as engine:
+        hub = attach(engine)
+        engine.store.put("k", np.ones(8), region="region-a")
+        spec = DagSpec(
+            (
+                DagStep("ingest", "edge"),
+                DagStep("work", "pA", data_deps=(DataRef("k", "region-a"),)),
+                DagStep("deliver", "edge"),
+            ),
+            (("ingest", "work"), ("work", "deliver")),
+        )
+        for k in range(3):
+            engine.run(spec, k)
+        report = engine.report()
+    assert set(report) == {
+        "engine", "compile", "prefetch", "store", "timing", "telemetry"
+    }
+    assert report["engine"]["pokes"]["work"] >= 1
+    assert report["prefetch"]["prefetched"] >= 1
+    assert report["store"]["gets"] >= 1 and report["store"]["misses"] == 0
+    assert "steps" in report["timing"] and "edges" in report["timing"]
+    # the hub saw the engine's hooks: compute per (step, platform), fetch
+    # per (key, region), transfers per region pair
+    tel = report["telemetry"]
+    assert "work@pA" in tel["compute_s"]
+    assert "k@region-a" in tel["fetch_s"]
+    assert any("region-a" in k for k in tel["transfer_s"])
+
+
+def test_store_counts_hits_and_misses():
+    from repro.core import ObjectStore
+
+    store = ObjectStore()
+    store.put("k", b"v", region="eu")
+    store.get("k", "eu")
+    with pytest.raises(KeyError):
+        store.get("gone", "eu")
+    snap = store.stats_snapshot()
+    assert snap["gets"] == 1 and snap["misses"] == 1

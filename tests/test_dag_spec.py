@@ -112,6 +112,23 @@ def test_apply_placement_moves_many():
     assert placed.node("b").platform == "p1"
 
 
+def test_apply_placement_rejects_unknown_step():
+    with pytest.raises(ValueError, match="unknown step 'zzz'"):
+        diamond().apply_placement({"zzz": "p1"})
+
+
+def test_apply_placement_rejects_platform_outside_deployment_set():
+    spec = diamond()
+    # without a platform set, any target platform is accepted (per-request
+    # data; the deployment is not known here)
+    assert spec.apply_placement({"a": "p9"}).node("a").platform == "p9"
+    with pytest.raises(ValueError, match="unknown platform 'p9'"):
+        spec.apply_placement({"a": "p9"}, platforms=["p1", "p2"])
+    # valid placements pass with the set given
+    placed = spec.apply_placement({"a": "p2"}, platforms=["p1", "p2"])
+    assert placed.node("a").platform == "p2"
+
+
 def test_from_chain_degenerate_dag():
     wf = WorkflowSpec(
         (

@@ -272,6 +272,95 @@ def test_dag_sim_per_edge_slack_does_not_chase_feedback():
 
 
 # ---------------------------------------------------------------------------
+# drift injection: inert schedules are draw-neutral; active ones rescale
+# ---------------------------------------------------------------------------
+def _trace_tuple(tr):
+    return (
+        tr.total_s,
+        tuple(tr.start),
+        tuple(tr.end),
+        tuple(tr.prepare),
+        tuple(tr.payload),
+        tr.double_billed_s,
+        tr.exposed_fetch_s,
+    )
+
+
+@pytest.mark.parametrize(
+    "drift",
+    [
+        S.DriftSchedule(),
+        S.DriftSchedule([S.DriftEvent(10**9, "gcf", compute_scale=9.0)]),
+    ],
+)
+def test_drift_disabled_is_bit_for_bit_identical(drift):
+    """With no drift in range, every sampled value is EXACTLY (==, not
+    approx) what the plain simulator draws — attaching a schedule must not
+    perturb rng consumption or float arithmetic."""
+    steps = S.document_workflow_fig4()
+    for prefetch in (True, False):
+        plain = S.WorkflowSimulator(S.paper_platforms(), seed=5)
+        drifty = S.WorkflowSimulator(S.paper_platforms(), seed=5, drift=drift)
+        for k in range(20):
+            a = plain.run_request(steps, k * 1.0, prefetch)
+            b = drifty.run_request(steps, k * 1.0, prefetch)
+            assert _trace_tuple(a) == _trace_tuple(b)
+
+
+def test_telemetry_tap_is_draw_neutral():
+    """Feeding a TelemetryHub must not change the sampled trace either."""
+    from repro.adapt import TelemetryHub
+
+    steps = S.document_workflow_fig4()
+    plain = S.WorkflowSimulator(S.paper_platforms(), seed=9)
+    tapped = S.WorkflowSimulator(S.paper_platforms(), seed=9, telemetry=TelemetryHub())
+    for k in range(10):
+        a = _trace_tuple(plain.run_request(steps, k * 1.0, True))
+        b = _trace_tuple(tapped.run_request(steps, k * 1.0, True))
+        assert a == b
+    snap = tapped.telemetry.snapshot()
+    assert "ocr@lambda-us-east-1" in snap["compute_s"]
+
+
+def test_drift_rescales_target_platform_from_request_k():
+    """From request k on, the named platform's compute draws scale; other
+    platforms and earlier requests are untouched."""
+    plats = [
+        S.SimPlatform("p", "r", native_prefetch=True, cold_start=S.Dist(0.0)),
+        S.SimPlatform("q", "r", native_prefetch=True, cold_start=S.Dist(0.0)),
+    ]
+    steps = [
+        S.SimStep("a", "p", compute=S.Dist(0.1, 0.0)),
+        S.SimStep("b", "q", compute=S.Dist(0.2, 0.0)),
+    ]
+    drift = S.DriftSchedule([S.DriftEvent(2, "q", compute_scale=3.0)])
+    sim = S.WorkflowSimulator(plats, msg_latency_s=0.0, seed=0, drift=drift)
+    totals = [sim.run_request(steps, k * 1.0, True).total_s for k in range(4)]
+    assert totals[0] == pytest.approx(0.3, abs=1e-9)
+    assert totals[1] == pytest.approx(0.3, abs=1e-9)
+    assert totals[2] == pytest.approx(0.1 + 0.6, abs=1e-9)  # only q scaled
+    assert totals[3] == pytest.approx(0.7, abs=1e-9)
+
+
+def test_drift_transfer_scale_applies_to_links_touching_platform():
+    plats = [
+        S.SimPlatform("p", "r1", cold_start=S.Dist(0.0)),
+        S.SimPlatform("q", "r2", cold_start=S.Dist(0.0)),
+    ]
+    steps = [
+        S.SimStep("a", "p", compute=S.Dist(0.1, 0.0)),
+        S.SimStep("b", "q", compute=S.Dist(0.2, 0.0)),
+    ]
+    base = S.WorkflowSimulator(plats, seed=0)
+    tr = base._transfer_s(plats[0], plats[1])
+    drift = S.DriftSchedule([S.DriftEvent(0, "q", transfer_scale=2.0)])
+    sim = S.WorkflowSimulator(plats, seed=0, drift=drift)
+    t_plain = base.run_request(steps, 0.0, False).total_s
+    t_drift = sim.run_request(steps, 0.0, False).total_s
+    assert t_drift == pytest.approx(t_plain + tr, abs=1e-9)
+
+
+# ---------------------------------------------------------------------------
 # satellite: descriptive object-store errors
 # ---------------------------------------------------------------------------
 def test_store_missing_key_error_is_descriptive():
