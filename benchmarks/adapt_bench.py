@@ -101,8 +101,11 @@ def steps_for(placement: dict) -> list:
     ]
 
 
-def run_sim(n: int, drift, adaptive: bool, seed: int = 11):
-    """One simulated request stream. Returns (totals, swaps, ctrl_wall_s)."""
+def run_sim(n: int, drift, adaptive: bool, seed: int = 11, scorer=None):
+    """One simulated request stream. Returns (totals, swaps, ctrl_wall_s).
+    With ``scorer`` set, swaps are additionally gated on the batched
+    candidate scorer: the proposed placement must beat the active one on
+    simulated latency distributions at the scorer's quantile."""
     hub = TelemetryHub(alpha=0.4)
     sim = WorkflowSimulator(
         SIM_PLATFORMS, seed=seed, telemetry=hub if adaptive else None, drift=drift
@@ -115,6 +118,7 @@ def run_sim(n: int, drift, adaptive: bool, seed: int = 11):
         every_n=8,
         drift_ratio=1.4,
         min_samples=2,
+        scorer=scorer,
     )
     spec = SPEC
     totals = np.empty(n)
@@ -237,13 +241,25 @@ def main(n: int = 1200, runs_real: int = 48) -> dict:
     adaptive, swaps, ctrl_s = run_sim(n, drift, adaptive=True)
     nd_static, _, _ = run_sim(n, None, adaptive=False)
     nd_adaptive, nd_swaps, nd_ctrl_s = run_sim(n, None, adaptive=True)
+    # distribution-gated variant: the DP's proposal must also win at p90
+    # of the scorer's simulated latency distributions before swapping
+    from repro.adapt import PlacementScorer
+
+    scored, scored_swaps, scored_ctrl_s = run_sim(
+        n,
+        drift,
+        adaptive=True,
+        scorer=PlacementScorer(n_requests=128, quantile=0.9),
+    )
 
     rows = {
         "sim_static_post_drift_s": steady_state(static),
         "sim_adaptive_post_drift_s": steady_state(adaptive),
+        "sim_scored_post_drift_s": steady_state(scored),
         "sim_static_nodrift_s": float(np.median(nd_static)),
         "sim_adaptive_nodrift_s": float(np.median(nd_adaptive)),
         "sim_controller_wall_s": ctrl_s,
+        "sim_scored_controller_wall_s": scored_ctrl_s,
     }
     rows.update(run_real(runs_real))
     print("name,value")
@@ -257,6 +273,12 @@ def main(n: int = 1200, runs_real: int = 48) -> dict:
     )
     assert recovery >= 0.25, rows
     assert swaps, "drifted run never recomposed"
+    # the distribution-gated controller recovers too (same drift, same bar)
+    scored_recovery = (
+        1.0 - rows["sim_scored_post_drift_s"] / rows["sim_static_post_drift_s"]
+    )
+    assert scored_recovery >= 0.25, rows
+    assert scored_swaps, "scored run never recomposed"
     # no drift -> no swap, and the adaptive stream costs <= 2% extra
     assert not nd_swaps, nd_swaps
     overhead = (
@@ -267,6 +289,7 @@ def main(n: int = 1200, runs_real: int = 48) -> dict:
     assert rows["real_route_version"] >= 1
     assert rows["real_adaptive_post_drift_s"] < rows["real_static_post_drift_s"], rows
     print(f"derived,sim_post_drift_recovery_pct,{recovery * 100:.1f}")
+    print(f"derived,sim_scored_recovery_pct,{scored_recovery * 100:.1f}")
     print(f"derived,sim_nodrift_overhead_pct,{overhead * 100:.2f}")
     print(f"derived,sim_swap_at_request,{swaps[0][0]}")
     return rows

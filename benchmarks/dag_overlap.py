@@ -40,17 +40,19 @@ from repro.dag import (
 
 
 def run_sim(n: int = 1800) -> dict:
+    """Four medians through the vectorized fast path (50k-request streams
+    cost milliseconds; the scalar loop is gated by the vecsim bench)."""
     steps, edges = document_dag_fig4()
     chain = serialize_chain(steps, edges)
     rows = {}
     for label, prefetch in [("baseline", False), ("prefetch", True)]:
         sim = DagWorkflowSimulator(paper_platforms(), seed=42)
         rows[f"sim_chain_{label}"] = median(
-            sim.run_experiment(chain, n, prefetch=prefetch)
+            sim.run_experiment(chain, n, prefetch=prefetch, vectorized=True)
         )
         sim = DagWorkflowSimulator(paper_platforms(), seed=42)
         rows[f"sim_dag_{label}"] = median(
-            sim.run_dag_experiment(steps, edges, n, prefetch=prefetch)
+            sim.run_dag_experiment(steps, edges, n, prefetch=prefetch, vectorized=True)
         )
     return rows
 

@@ -1,6 +1,9 @@
 """Benchmark entry point: one bench per paper table/figure + system benches.
 
-  paper_figs        Figs 4/6/8 medians + CDFs (calibrated simulator)
+  paper_figs        Figs 4/6/8 medians + CDFs (vectorized simulator,
+                    multi-seed error bars)
+  vecsim            vectorized vs scalar simulation core (asserts >= 20x
+                    speedup and <= 1% median/p99 gaps)
   dag_overlap       chain vs DAG medians, +-prefetch (sim + real engine)
   placement         exact place_dag DP vs greedy baseline (asserts DP wins)
   adapt             online recomposition vs static under 5x mid-run drift
@@ -12,15 +15,37 @@
   timing            §5.5 eager vs learned poke timing (beyond-paper)
   roofline          per-cell three-term table from the dry-run artifacts
 
-Output: CSV-ish ``name,us_per_call,derived`` blocks per bench.
+Output: CSV-ish ``name,us_per_call,derived`` blocks per bench, plus one
+machine-readable ``experiments/bench/BENCH_<name>.json`` per bench (the
+bench's returned rows + wall time) so the perf trajectory is tracked
+across commits instead of scrolling away in CI logs.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import sys
+import time
 import traceback
+
+BENCH_OUT = os.path.join(os.path.dirname(__file__), "..", "experiments", "bench")
+
+
+def _write_bench_json(name: str, wall_s: float, rows) -> None:
+    """One JSON artifact per bench: rows (when the bench returned a dict)
+    + wall time. Non-serializable values degrade to strings rather than
+    failing the bench."""
+    os.makedirs(BENCH_OUT, exist_ok=True)
+    payload = {
+        "bench": name,
+        "wall_s": round(wall_s, 4),
+        "rows": rows if isinstance(rows, dict) else None,
+    }
+    path = os.path.join(BENCH_OUT, f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True, default=str)
 
 
 def main(argv=None) -> None:
@@ -45,15 +70,25 @@ def main(argv=None) -> None:
         real_overlap,
         roofline,
         timing_bench,
+        vecsim_bench,
         wrapper_overhead,
     )
 
-    n_fig = 80 if args.quick else 1800
+    # the simulated benches ride the vectorized path now, so the full run
+    # uses paper-scale x ~28 (50k requests) instead of the scalar 1800
+    n_fig = 80 if args.quick else 50_000
+    seeds_fig = (42, 43) if args.quick else (42, 43, 44, 45, 46)
     benches = [
-        ("paper_figs", lambda: paper_figs.main(n=n_fig, write=not args.quick)),
+        (
+            "paper_figs",
+            lambda: paper_figs.main(n=n_fig, write=not args.quick, seeds=seeds_fig),
+        ),
+        ("vecsim", vecsim_bench.main),
         (
             "dag_overlap",
-            lambda: dag_overlap.main(n=n_fig, runs_real=3 if args.quick else 7),
+            lambda: dag_overlap.main(
+                n=max(n_fig, 1800), runs_real=3 if args.quick else 7
+            ),
         ),
         ("placement", placement_bench.main),
         (
@@ -78,7 +113,9 @@ def main(argv=None) -> None:
     for name, fn in benches:
         print(f"\n===== bench: {name} =====")
         try:
-            fn()
+            t0 = time.perf_counter()
+            rows = fn()
+            _write_bench_json(name, time.perf_counter() - t0, rows)
         except Exception:
             failed.append(name)
             traceback.print_exc()

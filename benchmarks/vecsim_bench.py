@@ -1,0 +1,120 @@
+"""Vectorized vs scalar simulation core (vecsim bench).
+
+The repo's entire evidence chain — paper reproductions, DAG-overlap and
+placement benches, the adapt controller's decisions — flows through
+``WorkflowSimulator``. This bench gates the batched fast path that makes
+those experiments cheap:
+
+  - SPEED: the 1800-request document workflow (the paper's §4.2 stream)
+    through ``run_experiment(vectorized=True)`` must be >= 20x faster than
+    the scalar per-request loop (measured: ~100x+ on CI-class CPUs).
+  - AGREEMENT: pooled medians (3 fixed seeds x n requests) of the scalar
+    and vectorized paths must land within 1% on all three paper workflows
+    and the diamond DAG — different draw order, same distributions.
+  - SCALE: a 50k-request, multi-seed sweep through
+    ``run_experiment_many`` with per-seed medians (the error-bar workflow
+    the scalar loop could never afford).
+
+Output: CSV-ish ``name,value`` rows; asserts the speedup and agreement
+bounds so CI catches both a perf regression and a semantic drift between
+the two paths.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import simulator as S
+from repro.dag import document_dag_fig4
+
+SEEDS = (0, 1, 2)
+
+
+def _pooled(make_steps, n, vectorized, edges=None):
+    """Totals pooled across the fixed seeds, one fresh simulator each."""
+    chunks = []
+    for seed in SEEDS:
+        sim = S.WorkflowSimulator(S.paper_platforms(), seed=seed)
+        if edges is None:
+            chunks.append(
+                sim.run_experiment(
+                    make_steps(), n, prefetch=True, vectorized=vectorized
+                )
+            )
+        else:
+            chunks.append(
+                sim.run_dag_experiment(
+                    make_steps(), edges, n, prefetch=True, vectorized=vectorized
+                )
+            )
+    return np.concatenate(chunks)
+
+
+def _time_experiment(n: int, vectorized: bool, repeats: int = 3) -> float:
+    """Best-of wall time for one document-workflow experiment."""
+    steps = S.document_workflow_fig4()
+    best = float("inf")
+    for _ in range(repeats):
+        sim = S.WorkflowSimulator(S.paper_platforms(), seed=0)
+        t0 = time.perf_counter()
+        sim.run_experiment(steps, n, prefetch=True, vectorized=vectorized)
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def main(
+    n: int = 1800, sweep_n: int = 50_000, sweep_seeds=(42, 43, 44, 45, 46)
+) -> dict:
+    rows = {}
+
+    # -- speed gate ------------------------------------------------------------
+    t_scalar = _time_experiment(n, vectorized=False, repeats=2)
+    t_vec = _time_experiment(n, vectorized=True, repeats=5)
+    rows["scalar_1800_s"] = t_scalar
+    rows["vectorized_1800_s"] = t_vec
+    rows["speedup_x"] = t_scalar / t_vec
+
+    # -- agreement gate (fixed seeds -> deterministic, not flaky) --------------
+    workflows = [
+        ("fig4_document", S.document_workflow_fig4, None),
+        ("fig6_far", lambda: S.shipping_workflow_fig6("lambda-eu-central-1"), None),
+        ("fig6_close", lambda: S.shipping_workflow_fig6("lambda-us-east-1"), None),
+        ("fig8_native", S.native_prefetch_workflow_fig8, None),
+        ("diamond_dag", lambda: document_dag_fig4()[0], document_dag_fig4()[1]),
+    ]
+    for name, make_steps, edges in workflows:
+        sc = _pooled(make_steps, n, vectorized=False, edges=edges)
+        ve = _pooled(make_steps, n, vectorized=True, edges=edges)
+        p99_sc, p99_ve = np.percentile(sc, 99), np.percentile(ve, 99)
+        med_gap = abs(np.median(sc) - np.median(ve)) / np.median(sc)
+        rows[f"{name}_median_gap_pct"] = med_gap * 100
+        rows[f"{name}_p99_gap_pct"] = abs(p99_sc - p99_ve) / p99_sc * 100
+
+    # -- the scale the fast path buys ------------------------------------------
+    sim = S.WorkflowSimulator(S.paper_platforms(), seed=0)
+    t0 = time.perf_counter()
+    sweep = sim.run_experiment_many(
+        S.document_workflow_fig4(), seeds=sweep_seeds, n_requests=sweep_n
+    )
+    rows["sweep_wall_s"] = time.perf_counter() - t0
+    per_seed = np.median(sweep, axis=1)
+    rows["sweep_median_s"] = float(np.median(per_seed))
+    rows["sweep_seed_spread_s"] = float(per_seed.max() - per_seed.min())
+    rows["sweep_requests"] = float(sweep.size)
+
+    print("name,value")
+    for name, value in rows.items():
+        print(f"{name},{value:.6f}")
+    print(f"derived,requests_per_second_vectorized,{n / t_vec:.0f}")
+
+    assert rows["speedup_x"] >= 20.0, rows
+    for name, _, _ in workflows:
+        assert rows[f"{name}_median_gap_pct"] <= 1.0, (name, rows)
+        assert rows[f"{name}_p99_gap_pct"] <= 1.0, (name, rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -11,10 +11,15 @@ redeploy; this package closes the loop that makes recomposition *online*:
               view over the hub that falls back to the modeled costs for
               unobserved cells, keeping place_dag total
   controller  RecompositionController (re-run the exact placement DP
-              every N requests or on cost drift) + AdaptiveDeployment
+              every N requests or on cost drift, with cooldown +
+              minimum-improvement hysteresis) + AdaptiveDeployment
               (versioned RouteTable hot-swap over a DagDeployment;
               in-flight requests finish on their captured routes, moved
               steps are pre-warmed before cutover)
+  scorer      PlacementScorer — batched candidate scoring through the
+              vectorized simulator: placements are compared on simulated
+              latency distributions (common random numbers, quantile
+              gate), not point costs
 
 benchmarks/adapt_bench.py degrades one platform 5x mid-run and shows the
 adaptive deployment recovering most of the lost end-to-end latency.
@@ -27,3 +32,4 @@ from repro.adapt.controller import (  # noqa: F401
     RecompositionController,
     RouteTable,
 )
+from repro.adapt.scorer import PlacementScorer  # noqa: F401

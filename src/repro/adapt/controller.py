@@ -88,6 +88,17 @@ class RecompositionController:
     DP found a strictly different placement, else None. Cheap per-tick work
     is one ``dag_cost`` evaluation (linear in the graph); the DP itself
     runs only on the every-N boundary or on a drift trigger.
+
+    Hysteresis (both default off, so the bare controller is the PR-4 one):
+    ``cooldown_requests`` suppresses every recompute for that many ticks
+    after a swap, and ``min_improvement`` demands the proposed placement
+    beat the active one by that fraction before swapping — together they
+    stop an alternating drift from thrashing the route table. The
+    improvement is judged on ``dag_cost`` point estimates, or — when a
+    ``scorer`` (``adapt.scorer.PlacementScorer``) is given — on simulated
+    latency *distributions* of both placements under the observed costs,
+    compared at the scorer's quantile (a placement that only wins on the
+    mean but loses the tail does not get swapped in).
     """
 
     def __init__(
@@ -100,6 +111,9 @@ class RecompositionController:
         drift_ratio: float = 1.5,
         min_samples: int = 2,
         prefetch: bool = True,
+        cooldown_requests: int = 0,
+        min_improvement: float = 0.0,
+        scorer=None,
     ):
         self.hub = hub
         self.fallback = fallback
@@ -109,11 +123,22 @@ class RecompositionController:
         self.drift_ratio = drift_ratio
         self.min_samples = min_samples
         self.prefetch = prefetch
+        self.cooldown_requests = cooldown_requests
+        self.min_improvement = min_improvement
+        self.scorer = scorer
         self._lock = threading.Lock()
         self._n = 0
+        self._cooldown_until = 0  # tick count before which recomputes pause
         self._placed_cost: Optional[float] = None  # active placement's cost
         #   under the observations that selected it (the drift reference)
-        self.stats = {"ticks": 0, "drift_triggers": 0, "recomputes": 0, "swaps": 0}
+        self.stats = {
+            "ticks": 0,
+            "drift_triggers": 0,
+            "recomputes": 0,
+            "swaps": 0,
+            "cooldown_skips": 0,
+            "improvement_vetoes": 0,
+        }
 
     def costs(self) -> PlacementCosts:
         return observed_costs(self.hub, self.fallback, self.regions, self.min_samples)
@@ -124,10 +149,14 @@ class RecompositionController:
             n = self._n
             self.stats["ticks"] += 1
             placed_cost = self._placed_cost
+            if n < self._cooldown_until:
+                self.stats["cooldown_skips"] += 1
+                return None
         nodes = {s.name: s for s in spec.steps}
         edges = list(spec.edges)
         placement = {s.name: s.platform for s in spec.steps}
         costs = self.costs()
+        current_cost = None
         drifted = False
         if placed_cost is not None:
             current_cost = dag_cost(nodes, edges, placement, costs, self.prefetch)
@@ -140,13 +169,40 @@ class RecompositionController:
             self.stats["recomputes"] += 1
         new_placement = place_dag(nodes, edges, self.candidates, costs, self.prefetch)
         new_cost = dag_cost(nodes, edges, new_placement, costs, self.prefetch)
-        with self._lock:
-            self._placed_cost = new_cost
         if new_placement == placement:
+            with self._lock:
+                self._placed_cost = new_cost
+            return None
+        if current_cost is None:
+            current_cost = dag_cost(nodes, edges, placement, costs, self.prefetch)
+        if not self._improves(
+            nodes, edges, new_placement, placement, new_cost, current_cost, costs
+        ):
+            # not worth the churn: keep the active placement, refresh the
+            # drift reference so the same near-tie doesn't retrigger
+            with self._lock:
+                self.stats["improvement_vetoes"] += 1
+                self._placed_cost = current_cost
             return None
         with self._lock:
+            self._placed_cost = new_cost
             self.stats["swaps"] += 1
+            self._cooldown_until = n + self.cooldown_requests
         return new_placement
+
+    def _improves(
+        self, nodes, edges, new_placement, placement, new_cost, current_cost, costs
+    ) -> bool:
+        """Is ``new_placement`` enough better than the active one to swap?
+        Point costs by default; simulated distributions when a scorer is
+        wired (both placements under the same observed costs and common
+        random numbers, compared at the scorer's quantile)."""
+        if self.scorer is not None:
+            q_new, q_cur = self.scorer.quantiles(
+                nodes, edges, [new_placement, placement], costs, self.prefetch
+            )
+            return q_new < (1.0 - self.min_improvement) * q_cur
+        return new_cost < (1.0 - self.min_improvement) * current_cost
 
 
 class AdaptiveDeployment:
@@ -175,6 +231,9 @@ class AdaptiveDeployment:
         drift_ratio: float = 1.5,
         min_samples: int = 2,
         prewarm: bool = True,
+        cooldown_requests: int = 0,
+        min_improvement: float = 0.0,
+        scorer=None,
     ):
         self.deployment = deployment
         self.hub = attach(deployment, hub)
@@ -195,6 +254,9 @@ class AdaptiveDeployment:
             every_n=every_n,
             drift_ratio=drift_ratio,
             min_samples=min_samples,
+            cooldown_requests=cooldown_requests,
+            min_improvement=min_improvement,
+            scorer=scorer,
         )
         self.routes = RouteTable(spec)
         self._cut_lock = threading.Lock()

@@ -36,11 +36,18 @@ def observed_costs(
     fallback: PlacementCosts,
     regions: Optional[dict] = None,
     min_samples: int = 2,
+    cold_starts: bool = True,
 ) -> PlacementCosts:
     """A ``PlacementCosts`` that prefers measurements over the model.
 
     - ``compute_s(step, p)``: the (step, p) EWMA once it has
-      ``min_samples`` observations, else ``fallback.compute_s``.
+      ``min_samples`` observations, else ``fallback.compute_s``. With
+      ``cold_starts`` on (the default), the hub's cold/warm counts are
+      folded in as an expected warm-up term, ``cold_rate x observed cold
+      EWMA`` (``TelemetryHub.cold_penalty_s``) — a platform that keeps
+      missing its warm pool pays for it in placement instead of winning on
+      compute alone. Cells with no cold observations add nothing, so the
+      estimator stays total.
     - ``fetch_s(step, p, deps)``: the sum of per-(key, region-of-p) fetch
       EWMAs when EVERY dep has been observed in that region, else
       ``fallback.fetch_s`` for the whole dep set (a half-measured set
@@ -61,7 +68,12 @@ def observed_costs(
 
     def compute_s(step, platform):
         obs = hub.compute_s(step, platform, min_samples)
-        return obs if obs is not None else fallback.compute_s(step, platform)
+        base = obs if obs is not None else fallback.compute_s(step, platform)
+        if cold_starts:
+            penalty = hub.cold_penalty_s(step, platform)
+            if penalty:
+                base += penalty
+        return base
 
     def fetch_s(step, platform, deps):
         if not deps:

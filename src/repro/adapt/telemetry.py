@@ -29,6 +29,8 @@ from __future__ import annotations
 import threading
 from typing import Optional
 
+import numpy as np
+
 from repro.core.timing import EWMA
 
 
@@ -46,6 +48,7 @@ class TelemetryHub:
         self._transfer_b: dict = {}  # (src_region, dst_region) -> EWMA bytes
         self._cold: dict = {}  # (step, platform) -> cold-start count
         self._warm: dict = {}  # (step, platform) -> warm-hit count
+        self._cold_s: dict = {}  # (step, platform) -> EWMA cold seconds
 
     def _ewma(self, table: dict, key) -> EWMA:
         # callers hold self._lock
@@ -71,15 +74,72 @@ class TelemetryHub:
             self._ewma(self._transfer_s, pair).update(seconds)
             self._ewma(self._transfer_b, pair).update(float(size_bytes))
 
-    def record_cold_start(self, step: str, platform: str):
+    def record_cold_start(
+        self, step: str, platform: str, seconds: Optional[float] = None
+    ):
+        """Count a cold start; when the producer knows how long the warm-up
+        took (compile seconds on the engine, the sampled cold draw in the
+        simulator) it passes ``seconds`` so placement can price cold starts
+        (``cold_penalty_s``), not just count them."""
         with self._lock:
             key = (step, platform)
             self._cold[key] = self._cold.get(key, 0) + 1
+            if seconds is not None:
+                self._ewma(self._cold_s, key).update(seconds)
 
     def record_warm_hit(self, step: str, platform: str):
         with self._lock:
             key = (step, platform)
             self._warm[key] = self._warm.get(key, 0) + 1
+
+    # -- batch producers (the vectorized simulator reports aggregates) ---------
+    def record_compute_batch(self, step: str, platform: str, seconds):
+        seconds = np.asarray(seconds)
+        if seconds.size == 0:
+            return
+        with self._lock:
+            self._ewma(self._compute, (step, platform)).update_many(
+                float(seconds.mean()), seconds.size
+            )
+
+    def record_fetch_batch(self, key: str, region: str, seconds):
+        seconds = np.asarray(seconds)
+        if seconds.size == 0:
+            return
+        with self._lock:
+            self._ewma(self._fetch, (key, region)).update_many(
+                float(seconds.mean()), seconds.size
+            )
+
+    def record_transfer_batch(
+        self, src_region: str, dst_region: str, size_bytes: float, seconds
+    ):
+        seconds = np.asarray(seconds)
+        if seconds.size == 0:
+            return
+        pair = (src_region, dst_region)
+        with self._lock:
+            self._ewma(self._transfer_s, pair).update_many(
+                float(seconds.mean()), seconds.size
+            )
+            self._ewma(self._transfer_b, pair).update_many(
+                float(size_bytes), seconds.size
+            )
+
+    def record_cold_start_batch(
+        self, step: str, platform: str, n_cold: int, n_warm: int, cold_seconds=()
+    ):
+        cold_seconds = np.asarray(cold_seconds)
+        with self._lock:
+            key = (step, platform)
+            if n_cold:
+                self._cold[key] = self._cold.get(key, 0) + n_cold
+            if n_warm:
+                self._warm[key] = self._warm.get(key, 0) + n_warm
+            if cold_seconds.size:
+                self._ewma(self._cold_s, key).update_many(
+                    float(cold_seconds.mean()), cold_seconds.size
+                )
 
     # -- consumers (the cost estimator pulls these) ----------------------------
     def compute_s(self, step: str, platform: str, min_samples: int = 1):
@@ -117,6 +177,23 @@ class TelemetryHub:
             cold, warm = self._cold.get(key, 0), self._warm.get(key, 0)
             return cold / (cold + warm) if cold + warm else None
 
+    def cold_penalty_s(self, step: str, platform: str):
+        """Expected per-request cold-start seconds on (step, platform):
+        ``cold_rate x observed cold EWMA``. None when the rate is unknown
+        (no invocations seen) or cold starts happened but none carried a
+        duration; 0.0 when every observed invocation was warm."""
+        with self._lock:
+            key = (step, platform)
+            cold, warm = self._cold.get(key, 0), self._warm.get(key, 0)
+            if cold + warm == 0:
+                return None
+            if cold == 0:
+                return 0.0
+            e = self._cold_s.get(key)
+            if e is None or e.n == 0:
+                return None
+            return (cold / (cold + warm)) * e.value
+
     # -- reporting -------------------------------------------------------------
     def snapshot(self) -> dict:
         """Plain-dict copy of every table (the ``report()`` surface)."""
@@ -134,6 +211,7 @@ class TelemetryHub:
                 },
                 "cold_starts": {f"{s}@{p}": n for (s, p), n in self._cold.items()},
                 "warm_hits": {f"{s}@{p}": n for (s, p), n in self._warm.items()},
+                "cold_s": {f"{s}@{p}": e.value for (s, p), e in self._cold_s.items()},
             }
 
 

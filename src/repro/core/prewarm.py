@@ -122,7 +122,8 @@ class CompileCache:
             self.stats["misses"] += 1
             self.stats["compile_s"] += dt
         if tel is not None:
-            tel.record_cold_start(name, platform)
+            # the compile wall time is the cold-start cost placement wants
+            tel.record_cold_start(name, platform, dt)
         return compiled
 
     def is_warm(self, name: str, platform: str, args) -> bool:

@@ -25,7 +25,23 @@ chain deployer is a facade over the dataflow engine). Per request, with
 ``run_request`` executes this on the degenerate chain graph — positionally,
 so the sampled trace is draw-for-draw what the pre-unification chain
 simulator produced. ``run_dag_request`` executes it on an explicit edge
-list. Double-billing per node (prefetch on) is start - prepare clipped at 0
+list.
+
+Experiments have a second, batched execution mode
+(``run_experiment(..., vectorized=True)``): every per-request scalar of
+the recurrence becomes a ``(n_requests,)`` numpy array and the graph is
+walked once, node-major in topo order, instead of once per request. The
+only genuinely sequential piece — the cold-start ``_last_use`` recurrence
+— collapses to a tight per-(step, platform) scan over the few requests
+that can possibly be cold (see ``_cold_scan``). The scalar path is left
+byte-for-byte untouched; the vectorized path has its own draw-order
+contract (per node in topo order: ``n`` cold-start draws, then ``n``
+fetch draws, then ``n`` compute draws) pinned by frozen-reference tests,
+and agrees with the scalar path statistically (medians/p99 within 1%,
+``tests/test_vecsim.py``). ``run_experiment_many(seeds=...)`` sweeps the
+vectorized experiment across seeds for error bars.
+
+Double-billing per node (prefetch on) is start - prepare clipped at 0
 — the instance is up and idle (paper §5.5); pass a ``PokeTimingController``
 as ``timing=`` to shrink it: each edge's poke is delayed by the learned
 slack, and the controller is fed per-edge slack observations (relative to
@@ -42,6 +58,7 @@ sampling, so with them disabled the trace is bit-for-bit the undrifted one.
 
 from __future__ import annotations
 
+import bisect
 import math
 from dataclasses import dataclass
 from typing import Optional
@@ -65,6 +82,13 @@ class Dist:
         if self.median <= 0:
             return 0.0
         return float(self.median * math.exp(rng.normal(0.0, self.sigma)))
+
+    def sample_many(self, rng: np.random.Generator, n: int) -> np.ndarray:
+        """``n`` draws in one rng call (the vectorized path). Mirrors
+        ``sample``: a degenerate distribution consumes no randomness."""
+        if self.median <= 0:
+            return np.zeros(n)
+        return self.median * np.exp(rng.normal(0.0, self.sigma, n))
 
 
 @dataclass(frozen=True)
@@ -140,15 +164,46 @@ class DriftSchedule:
 
     def __init__(self, events=()):
         self.events = tuple(events)
+        # scales(k, p) is piecewise constant in k: it only changes when k
+        # crosses one of p's event boundaries, so memoize per (platform,
+        # segment) — O(1) amortized, cache bounded by events + 1 segments
+        # per platform (it used to be O(events) per call, and the scalar
+        # simulator calls it per node AND per edge endpoint per request)
+        self._thresholds: dict = {}  # platform -> sorted at_request list
+        self._segments: dict = {}  # (platform, segment) -> (c, t, f)
 
     def scales(self, request_k: int, platform: str) -> tuple:
         """(compute_scale, transfer_scale, fetch_scale) at request_k."""
-        c = t = f = 1.0
+        th = self._thresholds.get(platform)
+        if th is None:
+            th = self._thresholds[platform] = sorted(
+                {e.at_request for e in self.events if e.platform == platform}
+            )
+        key = (platform, bisect.bisect_right(th, request_k))
+        hit = self._segments.get(key)
+        if hit is None:
+            c = t = f = 1.0
+            for e in self.events:
+                if e.platform == platform and request_k >= e.at_request:
+                    c *= e.compute_scale
+                    t *= e.transfer_scale
+                    f *= e.fetch_scale
+            hit = self._segments[key] = (c, t, f)
+        return hit
+
+    def scale_arrays(self, request_ks: np.ndarray, platform: str) -> tuple:
+        """``scales`` over a whole request axis at once: three
+        ``(n_requests,)`` arrays (compute, transfer, fetch) built from
+        boolean masks over the event boundaries (the vectorized path)."""
+        n = len(request_ks)
+        c, t, f = np.ones(n), np.ones(n), np.ones(n)
         for e in self.events:
-            if e.platform == platform and request_k >= e.at_request:
-                c *= e.compute_scale
-                t *= e.transfer_scale
-                f *= e.fetch_scale
+            if e.platform != platform:
+                continue
+            m = request_ks >= e.at_request
+            c[m] *= e.compute_scale
+            t[m] *= e.transfer_scale
+            f[m] *= e.fetch_scale
         return c, t, f
 
 
@@ -282,12 +337,14 @@ class WorkflowSimulator:
                 csc, _, fsc = self._scales(step.platform)
                 compute *= csc
                 fetch *= fsc
+            # one transfer evaluation per edge per request, shared by the
+            # payload join, the telemetry tap, and the timing feedback
+            # (deterministic given the endpoints, so reuse is exact)
+            edge_tr = {u: self._edge_transfer_s(steps[u], step) for u in preds[v]}
             if not preds[v]:
                 payload[v] = t0 + self.msg / 2
             else:
-                payload[v] = max(
-                    end[u] + self._edge_transfer_s(steps[u], step) for u in preds[v]
-                )
+                payload[v] = max(end[u] + edge_tr[u] for u in preds[v])
             if prefetch and poke[v] < math.inf:
                 prepare[v] = poke[v] + cold + fetch
                 start[v] = max(payload[v], prepare[v])
@@ -312,10 +369,10 @@ class WorkflowSimulator:
                         self.platforms[steps[u].platform].region,
                         region,
                         self.payload_size,
-                        self._edge_transfer_s(steps[u], step),
+                        edge_tr[u],
                     )
                 if cold > 0:
-                    self.telemetry.record_cold_start(step.name, step.platform)
+                    self.telemetry.record_cold_start(step.name, step.platform, cold)
                 else:
                     self.telemetry.record_warm_hit(step.name, step.platform)
             if self.timing is not None and prefetch:
@@ -329,12 +386,169 @@ class WorkflowSimulator:
                     # not each recorded edge's)
                     prepare0 = poke0[v] + cold + fetch
                     for u in preds[v]:
-                        arrival = end[u] + self._edge_transfer_s(steps[u], step)
+                        arrival = end[u] + edge_tr[u]
                         self.timing.record_slack(
                             steps[u].name, steps[v].name, arrival - prepare0
                         )
         total = max(end[v] for v in order if not succs[v]) - t0
         return prepare, payload, start, end, total, double_billed, exposed_fetch
+
+    # -- the batched fast path (request axis vectorized) -----------------------
+    def _cold_scan(
+        self,
+        t0s: np.ndarray,
+        warm_end: np.ndarray,
+        cold_end: np.ndarray,
+        keep_warm_s: float,
+    ) -> np.ndarray:
+        """Boolean cold mask for one (step, platform) node: the ``_last_use``
+        recurrence, request-major. ``warm_end``/``cold_end`` are the node's
+        end times under the warm / cold hypothesis (``cold_end >= warm_end``
+        since the cold draw is nonnegative).
+
+        A request k can only be cold if even the EARLIEST possible previous
+        end — the warm one — left a gap past ``keep_warm_s``; everything
+        else is warm by construction. So the scan walks just those
+        candidates (for the paper's 1 req/s streams that is request 0 and
+        nothing else), resolving each against the actual previous end
+        (cold or warm per the mask built so far). Exact, and O(candidates)
+        instead of O(n_requests)."""
+        n = len(t0s)
+        mask = np.zeros(n, dtype=bool)
+        if n == 0:
+            return mask
+        # request 0 measures against _last_use = -inf (fresh experiment)
+        mask[0] = math.inf > keep_warm_s
+        cand = np.nonzero(t0s[1:] - warm_end[:-1] > keep_warm_s)[0] + 1
+        for k in cand:
+            last = cold_end[k - 1] if mask[k - 1] else warm_end[k - 1]
+            mask[k] = (t0s[k] - last) > keep_warm_s
+        return mask
+
+    def _run_graph_vectorized(
+        self, order, steps, preds, succs, t0s: np.ndarray, prefetch: bool
+    ) -> np.ndarray:
+        """``_run_graph`` with the request axis vectorized: one pass over
+        the nodes in topo order, every recurrence variable a ``(n,)`` array.
+        Returns the per-request totals.
+
+        Draw-order contract (pinned by tests/test_vecsim.py): per node in
+        topo order, ``n`` cold-start draws, then ``n`` fetch draws, then
+        ``n`` compute draws — so the stream differs from the scalar path's
+        request-major interleaving but every marginal distribution is
+        identical (cold draws are masked by the ``_cold_scan`` result
+        instead of being conditionally consumed). Telemetry is fed one
+        aggregate observation batch per node/edge rather than n singles.
+
+        Not supported here (use the scalar path): ``timing=`` (the learned
+        poke delay is per-request feedback, inherently sequential) and
+        graphs where one (name, platform) pair spans several nodes (its
+        cold recurrence couples nodes across requests)."""
+        if self.timing is not None:
+            raise ValueError(
+                "vectorized experiments do not support timing=: the poke "
+                "controller learns from per-request feedback; use the "
+                "scalar path (vectorized=False)"
+            )
+        keys = [(steps[v].name, steps[v].platform) for v in order]
+        if len(set(keys)) != len(keys):
+            raise ValueError(
+                "vectorized experiments need a unique (name, platform) per "
+                "node — a duplicated pair couples the cold-start recurrence "
+                "across nodes; use the scalar path (vectorized=False)"
+            )
+        n = len(t0s)
+        if n == 0:
+            self._req_k = 0
+            return np.empty(0)
+        request_ks = np.arange(n)
+        scale_cache: dict = {}
+
+        def scales_for(platform: str) -> tuple:
+            arrs = scale_cache.get(platform)
+            if arrs is None:
+                arrs = scale_cache[platform] = self.drift.scale_arrays(
+                    request_ks, platform
+                )
+            return arrs
+
+        inf = np.full(n, math.inf)
+        tel = self.telemetry
+        poke: dict = {}
+        end: dict = {}
+        total = np.full(n, -math.inf)
+        for v in order:
+            step = steps[v]
+            plat = self.platforms[step.platform]
+            cold_draw = plat.cold_start.sample_many(self.rng, n)
+            fetch = step.fetch.sample_many(self.rng, n)
+            compute = step.compute.sample_many(self.rng, n)
+            if self.drift is not None:
+                csc, _, fsc = scales_for(step.platform)
+                compute = compute * csc
+                fetch = fetch * fsc
+            # poke cascade (min over in-edges; structural, uniform over k)
+            if not prefetch:
+                poke_v = inf
+            elif not preds[v]:
+                poke_v = t0s
+            elif step.prefetch:
+                poke_v = np.minimum.reduce([poke[u] for u in preds[v]]) + self.msg
+            else:
+                poke_v = inf
+            poke[v] = poke_v
+            # payload join (max over in-edges of upstream end + transfer)
+            if not preds[v]:
+                payload = t0s + self.msg / 2
+            else:
+                arrivals = []
+                for u in preds[v]:
+                    tr = self._transfer_s(self.platforms[steps[u].platform], plat)
+                    if self.drift is not None:
+                        tr = tr * np.maximum(
+                            scales_for(steps[u].platform)[1],
+                            scales_for(step.platform)[1],
+                        )
+                    arrivals.append(end[u] + tr)
+                    if tel is not None:
+                        tel.record_transfer_batch(
+                            self.platforms[steps[u].platform].region,
+                            plat.region,
+                            self.payload_size,
+                            np.broadcast_to(tr, (n,)),
+                        )
+                payload = np.maximum.reduce(arrivals)
+            # start/end under both cold hypotheses, then the cold scan
+            if prefetch and not math.isinf(poke_v[0]):
+                warm_start = np.maximum(payload, poke_v + fetch)
+                cold_start = np.maximum(payload, poke_v + cold_draw + fetch)
+            else:
+                warm_start = payload + fetch
+                cold_start = warm_start + cold_draw
+            warm_end = warm_start + compute
+            cold_end = cold_start + compute
+            mask = self._cold_scan(t0s, warm_end, cold_end, plat.keep_warm_s)
+            end_v = np.where(mask, cold_end, warm_end)
+            end[v] = end_v
+            self._last_use[(step.name, step.platform)] = float(end_v[-1])
+            if tel is not None:
+                tel.record_compute_batch(step.name, step.platform, compute)
+                if step.fetch.median > 0:
+                    tel.record_fetch_batch(
+                        step.fetch_key or step.name, plat.region, fetch
+                    )
+                n_cold = int(mask.sum())
+                tel.record_cold_start_batch(
+                    step.name,
+                    step.platform,
+                    n_cold,
+                    n - n_cold,
+                    cold_draw[mask],
+                )
+            if not succs[v]:
+                total = np.maximum(total, end_v)
+        self._req_k = n
+        return total - t0s
 
     # -- one chain request (degenerate DAG, positional keys) -------------------
     def run_request(self, steps, t0: float, prefetch: bool) -> RequestTrace:
@@ -373,9 +587,17 @@ class WorkflowSimulator:
         n_requests: int = 1800,
         interarrival_s: float = 1.0,
         prefetch: bool = True,
+        vectorized: bool = False,
     ) -> np.ndarray:
         self._last_use = {}
         self._req_k = 0  # drift events are indexed from the experiment start
+        if vectorized:
+            ids = list(range(len(steps)))
+            smap = dict(enumerate(steps))
+            preds = {i: ([] if i == 0 else [i - 1]) for i in ids}
+            succs = {i: ([i + 1] if i + 1 < len(steps) else []) for i in ids}
+            t0s = np.arange(n_requests) * interarrival_s
+            return self._run_graph_vectorized(ids, smap, preds, succs, t0s, prefetch)
         out = np.empty(n_requests)
         for k in range(n_requests):
             out[k] = self.run_request(steps, k * interarrival_s, prefetch).total_s
@@ -388,14 +610,55 @@ class WorkflowSimulator:
         n_requests: int = 1800,
         interarrival_s: float = 1.0,
         prefetch: bool = True,
+        vectorized: bool = False,
     ) -> np.ndarray:
         self._last_use = {}
         self._req_k = 0  # drift events are indexed from the experiment start
+        if vectorized:
+            smap = {s.name: s for s in steps}
+            preds, succs, order = _graph(steps, edges)
+            t0s = np.arange(n_requests) * interarrival_s
+            return self._run_graph_vectorized(
+                order, smap, preds, succs, t0s, prefetch
+            )
         out = np.empty(n_requests)
         for k in range(n_requests):
             out[k] = self.run_dag_request(
                 steps, edges, k * interarrival_s, prefetch
             ).total_s
+        return out
+
+    def run_experiment_many(
+        self,
+        steps,
+        seeds,
+        n_requests: int = 1800,
+        interarrival_s: float = 1.0,
+        prefetch: bool = True,
+        edges=None,
+        vectorized: bool = True,
+    ) -> np.ndarray:
+        """Seed sweep: one experiment per seed, fresh rng each (the
+        simulator's own rng is restored afterwards). Returns a
+        ``(len(seeds), n_requests)`` totals matrix — rows are replicas, so
+        ``np.median(out, axis=1)`` gives the per-seed medians error bars
+        are built from. Pass ``edges`` to sweep a DAG workflow."""
+        seeds = list(seeds)
+        out = np.empty((len(seeds), n_requests))
+        saved = self.rng
+        try:
+            for i, seed in enumerate(seeds):
+                self.rng = np.random.default_rng(seed)
+                if edges is None:
+                    out[i] = self.run_experiment(
+                        steps, n_requests, interarrival_s, prefetch, vectorized
+                    )
+                else:
+                    out[i] = self.run_dag_experiment(
+                        steps, edges, n_requests, interarrival_s, prefetch, vectorized
+                    )
+        finally:
+            self.rng = saved
         return out
 
 

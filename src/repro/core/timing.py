@@ -43,6 +43,22 @@ class EWMA:
         self.n += 1
         return self.value
 
+    def update_many(self, mean: float, count: int) -> float:
+        """Fold a batch of ``count`` observations with the given ``mean``
+        in one step (the vectorized simulator reports aggregates, not n
+        singles): the estimate moves toward the batch mean with the weight
+        ``count`` sequential updates would have carried in total,
+        ``1 - (1 - alpha) ** count``."""
+        if count <= 0:
+            return self.value
+        if self.n == 0:
+            self.value = mean
+        else:
+            w = 1.0 - (1.0 - self.alpha) ** count
+            self.value = (1 - w) * self.value + w * mean
+        self.n += count
+        return self.value
+
 
 @dataclass
 class StepTimings:

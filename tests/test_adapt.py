@@ -10,6 +10,7 @@ import pytest
 
 from repro.adapt import (
     AdaptiveDeployment,
+    PlacementScorer,
     RecompositionController,
     RouteTable,
     TelemetryHub,
@@ -126,6 +127,69 @@ def test_observed_costs_fetch_is_all_or_fallback():
 
 
 # ---------------------------------------------------------------------------
+# cold-start-rate-aware placement
+# ---------------------------------------------------------------------------
+def test_ewma_update_many_matches_batch_weight():
+    from repro.core.timing import EWMA
+
+    e = EWMA(alpha=0.5)
+    e.update_many(2.0, 3)  # first batch seeds the value
+    assert e.value == pytest.approx(2.0) and e.n == 3
+    e.update_many(4.0, 2)  # weight = 1 - 0.5**2 = 0.75
+    assert e.value == pytest.approx(0.25 * 2.0 + 0.75 * 4.0)
+    assert e.n == 5
+    e.update_many(9.0, 0)  # empty batch: no-op
+    assert e.n == 5
+
+
+def test_hub_cold_penalty_semantics():
+    hub = TelemetryHub(alpha=1.0)
+    assert hub.cold_penalty_s("f", "p") is None  # never invoked
+    hub.record_warm_hit("f", "p")
+    assert hub.cold_penalty_s("f", "p") == 0.0  # warm-only: free
+    hub.record_cold_start("f", "p")  # legacy call: count, no duration
+    assert hub.cold_penalty_s("f", "p") is None  # rate known, price unknown
+    hub.record_cold_start("f", "p", 2.0)
+    # 2 cold / 3 total, cold EWMA 2.0
+    assert hub.cold_penalty_s("f", "p") == pytest.approx(2 / 3 * 2.0)
+
+
+def test_hub_record_cold_start_batch():
+    hub = TelemetryHub(alpha=1.0)
+    hub.record_cold_start_batch("f", "p", 2, 6, np.array([1.0, 3.0]))
+    assert hub.cold_start_rate("f", "p") == pytest.approx(0.25)
+    assert hub.cold_penalty_s("f", "p") == pytest.approx(0.25 * 2.0)
+    assert hub.snapshot()["cold_s"]["f@p"] == pytest.approx(2.0)
+
+
+def test_observed_costs_fold_cold_rate_into_compute():
+    hub = TelemetryHub(alpha=1.0)
+    for _ in range(2):
+        hub.record_compute("f", "p", 0.5)
+    hub.record_cold_start_batch("f", "p", 5, 5, np.array([2.0]))
+    costs = observed_costs(hub, fallback_costs(), min_samples=2)
+    assert costs.compute_s("f", "p") == pytest.approx(0.5 + 0.5 * 2.0)
+    off = observed_costs(hub, fallback_costs(), min_samples=2, cold_starts=False)
+    assert off.compute_s("f", "p") == pytest.approx(0.5)
+
+
+def test_high_cold_rate_platform_loses_placement_it_wins_on_compute():
+    """pA computes faster than pB but keeps going cold; once the hub has
+    priced the cold starts, the DP moves the step to steady pB."""
+    hub = TelemetryHub(alpha=1.0)
+    fb = fallback_costs(compute={("work", "pA"): 0.3, ("work", "pB"): 0.4})
+    ctrl = RecompositionController(
+        hub, fb, {"work": ["pA", "pB"]}, every_n=1, min_samples=1
+    )
+    spec = chain_spec("pA")
+    assert ctrl.tick(spec) is None  # on compute alone pA wins
+    # pA misses its warm pool on half the requests, 1.2 s per miss
+    hub.record_cold_start_batch("work", "pA", 5, 5, np.array([1.2]))
+    placement = ctrl.tick(spec)
+    assert placement is not None and placement["work"] == "pB"
+
+
+# ---------------------------------------------------------------------------
 # RouteTable + RecompositionController
 # ---------------------------------------------------------------------------
 def chain_spec(work_platform="pA"):
@@ -193,6 +257,151 @@ def test_controller_stable_placement_returns_none():
     for _ in range(5):
         assert ctrl.tick(spec) is None  # pA stays optimal: never a swap
     assert ctrl.stats["recomputes"] == 5 and ctrl.stats["swaps"] == 0
+
+
+# ---------------------------------------------------------------------------
+# controller hysteresis: cooldown + minimum improvement
+# ---------------------------------------------------------------------------
+def _flapping_hub_controller(**kwargs):
+    """pA's observed compute flaps between awful and great every other
+    tick — the pathological alternating drift."""
+    hub = TelemetryHub(alpha=1.0)
+    fb = fallback_costs(compute={("work", "pA"): 0.1, ("work", "pB"): 0.2})
+    ctrl = RecompositionController(
+        hub, fb, {"work": ["pA", "pB"]}, every_n=1, min_samples=1, **kwargs
+    )
+    return hub, ctrl
+
+
+def _run_flapping(hub, ctrl, ticks=40):
+    spec, swaps = chain_spec("pA"), 0
+    for k in range(ticks):
+        hub.record_compute("work", "pA", 3.0 if (k // 2) % 2 == 0 else 0.05)
+        placement = ctrl.tick(spec)
+        if placement is not None:
+            swaps += 1
+            spec = spec.apply_placement(placement)
+    return swaps
+
+
+def test_controller_without_hysteresis_thrashes_under_alternating_drift():
+    hub, ctrl = _flapping_hub_controller()
+    assert _run_flapping(hub, ctrl) >= 10  # the failure mode being fixed
+
+
+def test_controller_hysteresis_damps_oscillation():
+    """Regression: cooldown + minimum improvement must stop the route
+    table thrashing under alternating drift."""
+    hub, ctrl = _flapping_hub_controller(cooldown_requests=16, min_improvement=0.3)
+    swaps = _run_flapping(hub, ctrl)
+    assert swaps <= 3, swaps
+    assert ctrl.stats["cooldown_skips"] > 0
+
+
+def test_controller_cooldown_suppresses_recompute_window():
+    hub, ctrl = _flapping_hub_controller(cooldown_requests=8)
+    hub.record_compute("work", "pA", 3.0)
+    assert ctrl.tick(chain_spec("pA")) is not None  # swap -> cooldown opens
+    recomputes = ctrl.stats["recomputes"]
+    for _ in range(7):  # inside the window: no recompute at all
+        assert ctrl.tick(chain_spec("pB")) is None
+    assert ctrl.stats["recomputes"] == recomputes
+    assert ctrl.stats["cooldown_skips"] == 7
+
+
+def test_controller_min_improvement_vetoes_marginal_win():
+    hub = TelemetryHub(alpha=1.0)
+    fb = fallback_costs(compute={("work", "pA"): 0.22, ("work", "pB"): 0.2})
+    ctrl = RecompositionController(
+        hub,
+        fb,
+        {"work": ["pA", "pB"]},
+        every_n=1,
+        min_samples=1,
+        min_improvement=0.5,
+    )
+    # pB is better, but nowhere near 50% better end to end
+    assert ctrl.tick(chain_spec("pA")) is None
+    assert ctrl.stats["improvement_vetoes"] == 1
+    loose = RecompositionController(
+        hub, fb, {"work": ["pA", "pB"]}, every_n=1, min_samples=1
+    )
+    assert loose.tick(chain_spec("pA"))["work"] == "pB"
+
+
+# ---------------------------------------------------------------------------
+# batched candidate-placement scorer
+# ---------------------------------------------------------------------------
+def scorer_fixture():
+    fb = fallback_costs(
+        compute={("work", "pA"): 1.0, ("work", "pB"): 0.3}, transfer_cross=0.05
+    )
+    spec = chain_spec("pA")
+    nodes = {s.name: s for s in spec.steps}
+    placements = [
+        {"ingest": "edge", "work": "pA", "deliver": "edge"},
+        {"ingest": "edge", "work": "pB", "deliver": "edge"},
+    ]
+    return fb, spec, nodes, placements
+
+
+def test_scorer_distributions_shape_and_ranking():
+    fb, spec, nodes, placements = scorer_fixture()
+    scorer = PlacementScorer(n_requests=128, quantile=0.95)
+    dists = scorer.distributions(nodes, list(spec.edges), placements, fb)
+    assert dists.shape == (2, 128)
+    q_a, q_b = scorer.quantiles(nodes, list(spec.edges), placements, fb)
+    assert q_b < q_a  # pB's distribution dominates
+    stats = scorer.score(nodes, list(spec.edges), placements[0], fb)
+    assert stats["median_s"] <= stats["p95_s"] <= stats["p99_s"]
+    assert stats["quantile_s"] == pytest.approx(stats["p95_s"])
+
+
+def test_scorer_is_deterministic_common_random_numbers():
+    fb, spec, nodes, placements = scorer_fixture()
+    scorer = PlacementScorer(n_requests=64, seed=9)
+    a = scorer.distributions(nodes, list(spec.edges), placements, fb)
+    b = scorer.distributions(nodes, list(spec.edges), placements, fb)
+    assert np.array_equal(a, b)
+
+
+def test_controller_with_scorer_swaps_on_distribution_win():
+    hub = TelemetryHub(alpha=1.0)
+    fb = fallback_costs(
+        compute={("work", "pA"): 0.1, ("work", "pB"): 0.2}, transfer_cross=0.05
+    )
+    ctrl = RecompositionController(
+        hub,
+        fb,
+        {"work": ["pA", "pB"]},
+        every_n=1,
+        min_samples=1,
+        scorer=PlacementScorer(n_requests=128),
+    )
+    for _ in range(2):
+        hub.record_compute("work", "pA", 4.0)  # pA degrades hard
+    placement = ctrl.tick(chain_spec("pA"))
+    assert placement is not None and placement["work"] == "pB"
+
+
+def test_controller_with_scorer_vetoes_distribution_tie():
+    """The DP's point estimate prefers pB by a hair, but the simulated
+    distributions are too close at the quantile: no swap."""
+    hub = TelemetryHub(alpha=1.0)
+    fb = fallback_costs(
+        compute={("work", "pA"): 0.21, ("work", "pB"): 0.2}, transfer_cross=0.05
+    )
+    ctrl = RecompositionController(
+        hub,
+        fb,
+        {"work": ["pA", "pB"]},
+        every_n=1,
+        min_samples=1,
+        scorer=PlacementScorer(n_requests=128, sigma=0.4),
+        min_improvement=0.2,
+    )
+    assert ctrl.tick(chain_spec("pA")) is None
+    assert ctrl.stats["improvement_vetoes"] == 1
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,390 @@
+"""The batched simulation fast path: draw-order contract (frozen
+reference), statistical equivalence with the scalar loop, exact agreement
+wherever randomness cancels (sigma-0 distributions, n=1), drift-mask
+boundaries, the cold-start scan, and the seed-sweep helper."""
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import simulator as S
+from repro.dag import document_dag_fig4
+
+SEEDS = (0, 1, 2)
+
+
+def _deterministic(steps):
+    """The same workflow with every spread zeroed: identical arithmetic on
+    both paths, so traces must agree bit-for-bit, not statistically."""
+    return [
+        S.SimStep(
+            s.name,
+            s.platform,
+            compute=S.Dist(s.compute.median, 0.0),
+            fetch=S.Dist(s.fetch.median, 0.0),
+            prefetch=s.prefetch,
+        )
+        for s in steps
+    ]
+
+
+def _deterministic_platforms():
+    return [
+        S.SimPlatform(
+            p.name,
+            p.region,
+            p.native_prefetch,
+            p.allows_sync,
+            S.Dist(p.cold_start.median, 0.0),
+            p.keep_warm_s,
+        )
+        for p in S.paper_platforms()
+    ]
+
+
+# ---------------------------------------------------------------------------
+# frozen reference: the vectorized draw-order contract
+# ---------------------------------------------------------------------------
+# Per node in topo order: n cold draws, then n fetch draws, then n compute
+# draws. Regenerating these numbers requires an intentional, documented
+# change to that contract (or to the recurrence itself).
+FROZEN_CHAIN_PREFETCH = [
+    3.971754709658,
+    2.446005330083,
+    2.131840393647,
+    2.144428912572,
+    2.398269350945,
+    2.458603852856,
+]
+FROZEN_CHAIN_BASELINE = [
+    8.708875333184,
+    4.716278510589,
+    4.553191096882,
+    4.346689202346,
+    4.830691891129,
+    4.860633883353,
+]
+FROZEN_DAG_PREFETCH = [
+    4.126205311078,
+    2.155648526707,
+    2.156533624912,
+    2.114771100992,
+    2.451390063664,
+]
+
+
+def test_frozen_reference_chain():
+    for prefetch, want in [
+        (True, FROZEN_CHAIN_PREFETCH),
+        (False, FROZEN_CHAIN_BASELINE),
+    ]:
+        sim = S.WorkflowSimulator(S.paper_platforms(), seed=3)
+        out = sim.run_experiment(
+            S.document_workflow_fig4(), 6, prefetch=prefetch, vectorized=True
+        )
+        assert out.tolist() == pytest.approx(want, abs=1e-9)
+
+
+def test_frozen_reference_dag():
+    steps, edges = document_dag_fig4()
+    sim = S.WorkflowSimulator(S.paper_platforms(), seed=7)
+    out = sim.run_dag_experiment(steps, edges, 5, prefetch=True, vectorized=True)
+    assert out.tolist() == pytest.approx(FROZEN_DAG_PREFETCH, abs=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# statistical equivalence with the scalar path
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize(
+    "name,make_steps,edges",
+    [
+        ("fig4", S.document_workflow_fig4, None),
+        ("fig6_far", lambda: S.shipping_workflow_fig6("lambda-eu-central-1"), None),
+        ("fig6_close", lambda: S.shipping_workflow_fig6("lambda-us-east-1"), None),
+        ("fig8", S.native_prefetch_workflow_fig8, None),
+        ("diamond", lambda: document_dag_fig4()[0], document_dag_fig4()[1]),
+    ],
+)
+def test_median_and_p99_agree_within_1pct(name, make_steps, edges):
+    """Different draw order, same distributions: pooled (3 fixed seeds x
+    1800 requests) medians and p99s within 1%. Seeds are pinned, so this
+    is a deterministic regression bound, not a flaky statistical one."""
+
+    def pooled(vectorized):
+        chunks = []
+        for seed in SEEDS:
+            sim = S.WorkflowSimulator(S.paper_platforms(), seed=seed)
+            if edges is None:
+                chunks.append(
+                    sim.run_experiment(
+                        make_steps(), 1800, prefetch=True, vectorized=vectorized
+                    )
+                )
+            else:
+                chunks.append(
+                    sim.run_dag_experiment(
+                        make_steps(), edges, 1800, prefetch=True, vectorized=vectorized
+                    )
+                )
+        return np.concatenate(chunks)
+
+    sc, ve = pooled(False), pooled(True)
+    assert np.median(ve) == pytest.approx(np.median(sc), rel=0.01)
+    assert np.percentile(ve, 99) == pytest.approx(np.percentile(sc, 99), rel=0.01)
+
+
+def test_single_request_is_bitwise_scalar():
+    """With n=1 the two draw orders coincide (per node: one cold, one
+    fetch, one compute draw), so the paths must agree exactly. Holds
+    because request 0 is cold on every node here (finite keep_warm_s) —
+    a never-cold platform consumes no cold draw on the scalar path."""
+    a = S.WorkflowSimulator(S.paper_platforms(), seed=5).run_experiment(
+        S.document_workflow_fig4(), 1, vectorized=True
+    )
+    b = S.WorkflowSimulator(S.paper_platforms(), seed=5).run_experiment(
+        S.document_workflow_fig4(), 1
+    )
+    assert np.array_equal(a, b)
+
+
+def test_zero_requests():
+    out = S.WorkflowSimulator(S.paper_platforms(), seed=0).run_experiment(
+        S.document_workflow_fig4(), 0, vectorized=True
+    )
+    assert out.shape == (0,)
+
+
+# ---------------------------------------------------------------------------
+# exact agreement when randomness cancels (sigma-0 distributions)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("prefetch", [True, False])
+def test_sigma0_chain_matches_scalar_exactly(prefetch):
+    plats = _deterministic_platforms()
+    steps = _deterministic(S.document_workflow_fig4())
+    sc = S.WorkflowSimulator(plats, seed=0).run_experiment(steps, 40, prefetch=prefetch)
+    ve = S.WorkflowSimulator(plats, seed=0).run_experiment(
+        steps, 40, prefetch=prefetch, vectorized=True
+    )
+    assert np.allclose(sc, ve, atol=1e-12)
+
+
+@pytest.mark.parametrize("prefetch", [True, False])
+def test_sigma0_diamond_matches_scalar_exactly(prefetch):
+    raw, edges = document_dag_fig4()
+    steps = _deterministic(raw)
+    plats = _deterministic_platforms()
+    sc = S.WorkflowSimulator(plats, seed=0).run_dag_experiment(
+        steps, edges, 30, prefetch=prefetch
+    )
+    ve = S.WorkflowSimulator(plats, seed=0).run_dag_experiment(
+        steps, edges, 30, prefetch=prefetch, vectorized=True
+    )
+    assert np.allclose(sc, ve, atol=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# drift masks at event boundaries
+# ---------------------------------------------------------------------------
+def _drift_setup():
+    plats = [
+        S.SimPlatform("p", "r1", cold_start=S.Dist(0.5, 0.0)),
+        S.SimPlatform("q", "r2", cold_start=S.Dist(0.7, 0.0)),
+    ]
+    steps = [
+        S.SimStep("a", "p", compute=S.Dist(0.3, 0.0), fetch=S.Dist(0.1, 0.0)),
+        S.SimStep("b", "q", compute=S.Dist(0.4, 0.0), fetch=S.Dist(0.2, 0.0)),
+    ]
+    return plats, steps
+
+
+def test_drift_boundary_request_k_minus_1_vs_k():
+    """The event at request k scales requests k.. and leaves ..k-1 alone —
+    checked against the scalar path exactly (sigma 0) and against the
+    undrifted stream at the boundary."""
+    plats, steps = _drift_setup()
+
+    def mk():  # a fresh schedule per simulator (each memoizes segments)
+        return S.DriftSchedule(
+            [S.DriftEvent(3, "q", compute_scale=2.0, transfer_scale=1.5)]
+        )
+
+    sc = S.WorkflowSimulator(plats, seed=0, drift=mk()).run_experiment(
+        steps, 8, prefetch=True
+    )
+    ve = S.WorkflowSimulator(plats, seed=0, drift=mk()).run_experiment(
+        steps, 8, prefetch=True, vectorized=True
+    )
+    plain = S.WorkflowSimulator(plats, seed=0).run_experiment(
+        steps, 8, prefetch=True, vectorized=True
+    )
+    assert np.allclose(sc, ve, atol=1e-12)
+    assert ve[2] == pytest.approx(plain[2], abs=1e-12)  # k-1: untouched
+    assert ve[3] > plain[3]  # k: scaled
+
+
+def test_drift_scale_arrays_match_scalar_scales():
+    drift = S.DriftSchedule(
+        [
+            S.DriftEvent(2, "p", compute_scale=3.0),
+            S.DriftEvent(5, "p", compute_scale=2.0, fetch_scale=4.0),
+            S.DriftEvent(4, "q", transfer_scale=7.0),
+        ]
+    )
+    ks = np.arange(8)
+    for platform in ("p", "q", "unknown"):
+        c, t, f = drift.scale_arrays(ks, platform)
+        for k in ks:
+            assert (c[k], t[k], f[k]) == drift.scales(int(k), platform)
+
+
+def test_drift_scales_memoization_is_transparent():
+    """The segment cache must never change what ``scales`` returns."""
+    drift = S.DriftSchedule([S.DriftEvent(5, "p", compute_scale=2.0)])
+    assert drift.scales(4, "p") == (1.0, 1.0, 1.0)
+    assert drift.scales(5, "p") == (2.0, 1.0, 1.0)
+    assert drift.scales(9, "p") == (2.0, 1.0, 1.0)  # cached segment
+    assert drift.scales(4, "p") == (1.0, 1.0, 1.0)  # earlier segment again
+    assert drift.scales(5, "other") == (1.0, 1.0, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# the cold-start scan
+# ---------------------------------------------------------------------------
+def test_cold_scan_alternating_cold_warm_regime():
+    """interarrival > keep_warm only when the previous request was warm:
+    the cold mask must alternate, exactly as the scalar recurrence does
+    (this is the case where request k's coldness depends on request k-1's
+    coldness — the genuinely sequential recurrence)."""
+    plats = [
+        S.SimPlatform(
+            "p",
+            "r",
+            native_prefetch=True,
+            cold_start=S.Dist(0.5, 0.0),
+            keep_warm_s=4.0,
+        )
+    ]
+    steps = [S.SimStep("a", "p", compute=S.Dist(0.8, 0.0))]
+    sc = S.WorkflowSimulator(plats, seed=0).run_experiment(
+        steps, 20, interarrival_s=5.0, prefetch=True
+    )
+    ve = S.WorkflowSimulator(plats, seed=0).run_experiment(
+        steps, 20, interarrival_s=5.0, prefetch=True, vectorized=True
+    )
+    assert np.allclose(sc, ve, atol=1e-12)
+    assert len(set(np.round(ve, 9))) == 2  # two levels: cold and warm
+
+
+def test_cold_scan_every_request_cold():
+    plats = [
+        S.SimPlatform(
+            "p",
+            "r",
+            native_prefetch=True,
+            cold_start=S.Dist(0.5, 0.0),
+            keep_warm_s=1.0,
+        )
+    ]
+    steps = [S.SimStep("a", "p", compute=S.Dist(0.2, 0.0))]
+    sc = S.WorkflowSimulator(plats, seed=0).run_experiment(
+        steps, 10, interarrival_s=10.0, prefetch=True
+    )
+    ve = S.WorkflowSimulator(plats, seed=0).run_experiment(
+        steps, 10, interarrival_s=10.0, prefetch=True, vectorized=True
+    )
+    assert np.allclose(sc, ve, atol=1e-12)
+    assert np.allclose(ve[1:], ve[1], atol=1e-12)  # steady cold level
+
+
+def test_cold_scan_infinite_keep_warm_never_cold():
+    plats = [
+        S.SimPlatform(
+            "p",
+            "r",
+            native_prefetch=True,
+            cold_start=S.Dist(0.5, 0.0),
+            keep_warm_s=math.inf,
+        )
+    ]
+    steps = [S.SimStep("a", "p", compute=S.Dist(0.2, 0.0))]
+    ve = S.WorkflowSimulator(plats, seed=0).run_experiment(
+        steps, 4, prefetch=True, vectorized=True
+    )
+    sc = S.WorkflowSimulator(plats, seed=0).run_experiment(steps, 4, prefetch=True)
+    assert np.allclose(sc, ve, atol=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# guard rails + the sweep helper
+# ---------------------------------------------------------------------------
+def test_vectorized_rejects_timing_controller():
+    from repro.core.timing import PokeTimingController
+
+    sim = S.WorkflowSimulator(
+        S.paper_platforms(), seed=0, timing=PokeTimingController()
+    )
+    with pytest.raises(ValueError, match="timing"):
+        sim.run_experiment(S.document_workflow_fig4(), 4, vectorized=True)
+
+
+def test_vectorized_rejects_duplicate_name_platform_nodes():
+    steps = [
+        S.SimStep("f", "gcf", compute=S.Dist(0.1)),
+        S.SimStep("f", "gcf", compute=S.Dist(0.1)),
+    ]
+    sim = S.WorkflowSimulator(S.paper_platforms(), seed=0)
+    with pytest.raises(ValueError, match="unique"):
+        sim.run_experiment(steps, 4, vectorized=True)
+    sim.run_experiment(steps, 4)  # the scalar path still serves these
+
+
+def test_run_experiment_many_shapes_and_rng_isolation():
+    sim = S.WorkflowSimulator(S.paper_platforms(), seed=0)
+    before = sim.rng.bit_generator.state
+    m = sim.run_experiment_many(
+        S.document_workflow_fig4(), seeds=[0, 1, 2], n_requests=64
+    )
+    assert m.shape == (3, 64)
+    assert sim.rng.bit_generator.state == before  # own rng untouched
+    # per-seed rows are reproducible one-off experiments
+    solo = S.WorkflowSimulator(S.paper_platforms(), seed=1).run_experiment(
+        S.document_workflow_fig4(), 64, vectorized=True
+    )
+    assert np.array_equal(m[1], solo)
+    # DAG sweep
+    steps, edges = document_dag_fig4()
+    md = sim.run_experiment_many(steps, seeds=[3, 4], n_requests=16, edges=edges)
+    assert md.shape == (2, 16)
+
+
+def test_vectorized_telemetry_reports_aggregates():
+    from repro.adapt import TelemetryHub
+
+    hub = TelemetryHub()
+    sim = S.WorkflowSimulator(S.paper_platforms(), seed=0, telemetry=hub)
+    totals = sim.run_experiment(
+        S.document_workflow_fig4(), 200, prefetch=True, vectorized=True
+    )
+    snap = hub.snapshot()
+    assert snap["cold_starts"]["ocr@lambda-us-east-1"] == 1  # request 0 only
+    assert snap["warm_hits"]["ocr@lambda-us-east-1"] == 199
+    assert snap["cold_s"]["ocr@lambda-us-east-1"] > 0
+    assert snap["compute_s"]["ocr@lambda-us-east-1"] == pytest.approx(0.45, rel=0.25)
+    assert "ocr@us-east-1" in snap["fetch_s"]
+    assert "europe-west10->us-east-1" in snap["transfer_s"]
+    # and the tap is draw-neutral: same totals without the hub
+    plain = S.WorkflowSimulator(S.paper_platforms(), seed=0).run_experiment(
+        S.document_workflow_fig4(), 200, prefetch=True, vectorized=True
+    )
+    assert np.array_equal(totals, plain)
+
+
+def test_vectorized_with_drift_and_telemetry_sees_drifted_compute():
+    from repro.adapt import TelemetryHub
+
+    hub = TelemetryHub(alpha=1.0)
+    drift = S.DriftSchedule([S.DriftEvent(0, "gcf", compute_scale=10.0)])
+    sim = S.WorkflowSimulator(S.paper_platforms(), seed=0, telemetry=hub, drift=drift)
+    sim.run_experiment(S.document_workflow_fig4(), 100, vectorized=True)
+    assert hub.compute_s("virus", "gcf") == pytest.approx(3.0, rel=0.2)  # 10 x 0.30
