@@ -28,7 +28,7 @@ from repro.core import (
     StepSpec,
     WorkflowSpec,
 )
-from repro.core.simulator import median, paper_platforms
+from repro.core.simulator import ExperimentSpec, median, paper_platforms
 from repro.dag import (
     DagDeployment,
     DagSpec,
@@ -48,11 +48,17 @@ def run_sim(n: int = 1800) -> dict:
     for label, prefetch in [("baseline", False), ("prefetch", True)]:
         sim = DagWorkflowSimulator(paper_platforms(), seed=42)
         rows[f"sim_chain_{label}"] = median(
-            sim.run_experiment(chain, n, prefetch=prefetch, vectorized=True)
+            sim.simulate(
+                ExperimentSpec(chain, n_requests=n, prefetch=prefetch),
+                backend="numpy",
+            )
         )
         sim = DagWorkflowSimulator(paper_platforms(), seed=42)
         rows[f"sim_dag_{label}"] = median(
-            sim.run_dag_experiment(steps, edges, n, prefetch=prefetch, vectorized=True)
+            sim.simulate(
+                ExperimentSpec(steps, edges=edges, n_requests=n, prefetch=prefetch),
+                backend="numpy",
+            )
         )
     return rows
 

@@ -39,7 +39,8 @@ def cdf99(xs):
 def sweep(steps, n, prefetch, seeds):
     """(len(seeds), n) totals through the vectorized path."""
     sim = S.WorkflowSimulator(S.paper_platforms(), seed=seeds[0])
-    return sim.run_experiment_many(steps, seeds=seeds, n_requests=n, prefetch=prefetch)
+    spec = S.ExperimentSpec(steps, n_requests=n, prefetch=prefetch, seeds=tuple(seeds))
+    return sim.simulate(spec, backend="numpy")
 
 
 def run_fig4(n=1800, seeds=SEEDS):

@@ -4,6 +4,9 @@
                     multi-seed error bars)
   vecsim            vectorized vs scalar simulation core (asserts >= 20x
                     speedup and <= 1% median/p99 gaps)
+  jaxsim            jax backend vs numpy backend on the scorer-shaped
+                    (seeds x placements x requests) sweep (asserts >= 5x
+                    on the full sweep and <= 1% median/p99 gaps)
   dag_overlap       chain vs DAG medians, +-prefetch (sim + real engine)
   placement         exact place_dag DP vs greedy baseline (asserts DP wins)
   adapt             online recomposition vs static under 5x mid-run drift
@@ -64,6 +67,7 @@ def main(argv=None) -> None:
     from benchmarks import (
         adapt_bench,
         dag_overlap,
+        jaxsim_bench,
         paper_figs,
         pipeline_overlap,
         placement_bench,
@@ -84,6 +88,7 @@ def main(argv=None) -> None:
             lambda: paper_figs.main(n=n_fig, write=not args.quick, seeds=seeds_fig),
         ),
         ("vecsim", vecsim_bench.main),
+        ("jaxsim", lambda: jaxsim_bench.main(quick=args.quick)),
         (
             "dag_overlap",
             lambda: dag_overlap.main(

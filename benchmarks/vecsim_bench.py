@@ -6,7 +6,7 @@ placement benches, the adapt controller's decisions — flows through
 those experiments cheap:
 
   - SPEED: the 1800-request document workflow (the paper's §4.2 stream)
-    through ``run_experiment(vectorized=True)`` must be >= 20x faster than
+    through ``backend="numpy"`` must be >= 20x faster than
     the scalar per-request loop (measured: ~100x+ on CI-class CPUs).
   - AGREEMENT: pooled medians (3 fixed seeds x n requests) of the scalar
     and vectorized paths must land within 1% on all three paper workflows
@@ -32,34 +32,21 @@ from repro.dag import document_dag_fig4
 SEEDS = (0, 1, 2)
 
 
-def _pooled(make_steps, n, vectorized, edges=None):
-    """Totals pooled across the fixed seeds, one fresh simulator each."""
-    chunks = []
-    for seed in SEEDS:
-        sim = S.WorkflowSimulator(S.paper_platforms(), seed=seed)
-        if edges is None:
-            chunks.append(
-                sim.run_experiment(
-                    make_steps(), n, prefetch=True, vectorized=vectorized
-                )
-            )
-        else:
-            chunks.append(
-                sim.run_dag_experiment(
-                    make_steps(), edges, n, prefetch=True, vectorized=vectorized
-                )
-            )
-    return np.concatenate(chunks)
+def _pooled(make_steps, n, backend, edges=None):
+    """Totals pooled across the fixed seeds (one fresh rng stream each)."""
+    sim = S.WorkflowSimulator(S.paper_platforms(), seed=SEEDS[0])
+    spec = S.ExperimentSpec(make_steps(), edges=edges, n_requests=n, seeds=SEEDS)
+    return sim.simulate(spec, backend=backend).ravel()
 
 
-def _time_experiment(n: int, vectorized: bool, repeats: int = 3) -> float:
+def _time_experiment(n: int, backend: str, repeats: int = 3) -> float:
     """Best-of wall time for one document-workflow experiment."""
-    steps = S.document_workflow_fig4()
+    spec = S.ExperimentSpec(S.document_workflow_fig4(), n_requests=n)
     best = float("inf")
     for _ in range(repeats):
         sim = S.WorkflowSimulator(S.paper_platforms(), seed=0)
         t0 = time.perf_counter()
-        sim.run_experiment(steps, n, prefetch=True, vectorized=vectorized)
+        sim.simulate(spec, backend=backend)
         best = min(best, time.perf_counter() - t0)
     return best
 
@@ -70,8 +57,8 @@ def main(
     rows = {}
 
     # -- speed gate ------------------------------------------------------------
-    t_scalar = _time_experiment(n, vectorized=False, repeats=2)
-    t_vec = _time_experiment(n, vectorized=True, repeats=5)
+    t_scalar = _time_experiment(n, backend="scalar", repeats=2)
+    t_vec = _time_experiment(n, backend="numpy", repeats=5)
     rows["scalar_1800_s"] = t_scalar
     rows["vectorized_1800_s"] = t_vec
     rows["speedup_x"] = t_scalar / t_vec
@@ -85,8 +72,8 @@ def main(
         ("diamond_dag", lambda: document_dag_fig4()[0], document_dag_fig4()[1]),
     ]
     for name, make_steps, edges in workflows:
-        sc = _pooled(make_steps, n, vectorized=False, edges=edges)
-        ve = _pooled(make_steps, n, vectorized=True, edges=edges)
+        sc = _pooled(make_steps, n, backend="scalar", edges=edges)
+        ve = _pooled(make_steps, n, backend="numpy", edges=edges)
         p99_sc, p99_ve = np.percentile(sc, 99), np.percentile(ve, 99)
         med_gap = abs(np.median(sc) - np.median(ve)) / np.median(sc)
         rows[f"{name}_median_gap_pct"] = med_gap * 100

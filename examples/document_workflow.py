@@ -198,6 +198,30 @@ def main():
         ts = [chain.run(spec, pdf).total_s for _ in range(3)]
         print(f"{'chain serialization':28s} median {np.median(ts) * 1e3:7.1f} ms")
 
+    # --- the same workflow at paper scale, simulated ---------------------------
+    # one ExperimentSpec, three backends: the numpy backend replays the
+    # paper's 30-minute stream in milliseconds; the jax backend compiles a
+    # whole (seeds x placements x requests) sweep into one program
+    from dataclasses import replace as dc_replace
+
+    from repro.core import simulator as sm
+
+    steps = sm.document_workflow_fig4()
+    simspec = sm.ExperimentSpec(steps, n_requests=1800, seeds=(0, 1, 2))
+    simulator = sm.WorkflowSimulator(sm.paper_platforms(), seed=0)
+    totals = simulator.simulate(simspec, backend="numpy")  # (3, 1800)
+    print(
+        f"{'simulated (numpy, 3 seeds)':28s} median"
+        f" {np.median(totals) * 1e3:7.1f} ms"
+    )
+    candidates = [
+        steps,
+        [dc_replace(s, platform="gcf") if s.name == "ocr" else s for s in steps],
+    ]
+    swept = simulator.simulate_placements(simspec, candidates)  # (3, 2, 1800)
+    for cand, label in zip(swept.transpose(1, 0, 2), ("ocr@lambda", "ocr@gcf")):
+        print(f"{'  placement ' + label:28s} median {np.median(cand) * 1e3:7.1f} ms")
+
 
 if __name__ == "__main__":
     main()

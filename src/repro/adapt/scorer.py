@@ -20,10 +20,18 @@ placements is driven by the placements, not by sampling noise.
 
 from __future__ import annotations
 
+from dataclasses import replace
+
 import numpy as np
 
 from repro.core.shipping import PlacementCosts
-from repro.core.simulator import Dist, SimPlatform, SimStep, WorkflowSimulator
+from repro.core.simulator import (
+    Dist,
+    ExperimentSpec,
+    SimPlatform,
+    SimStep,
+    WorkflowSimulator,
+)
 
 
 class _CostSimulator(WorkflowSimulator):
@@ -47,6 +55,14 @@ class PlacementScorer:
     median (the cost model carries no dispersion of its own); ``quantile``
     is where placements are compared — 0.5 reproduces a median ranking,
     the 0.95 default penalizes placements that only win on average.
+
+    ``backend`` picks the simulator backend: ``"numpy"`` (default) runs
+    one vectorized experiment per candidate; ``"jax"`` scores the WHOLE
+    candidate set in one jitted call (``simulate_placements``, f32) —
+    same CRN property, and the per-candidate cost stops growing with the
+    set size. ``seeds`` replicates the experiment (tail quantiles get
+    ``len(seeds) * n_requests`` samples); None keeps the single ``seed``
+    stream.
     """
 
     def __init__(
@@ -57,6 +73,8 @@ class PlacementScorer:
         sigma: float = 0.12,
         interarrival_s: float = 1.0,
         msg_latency_s: float = 0.045,
+        backend: str = "numpy",
+        seeds=None,
     ):
         self.n_requests = n_requests
         self.seed = seed
@@ -64,6 +82,8 @@ class PlacementScorer:
         self.sigma = sigma
         self.interarrival_s = interarrival_s
         self.msg_latency_s = msg_latency_s
+        self.backend = backend
+        self.seeds = tuple(seeds) if seeds is not None else None
 
     # -- building the simulated world from a cost model ------------------------
     def _platforms(self, placements) -> list:
@@ -94,30 +114,46 @@ class PlacementScorer:
     def distributions(
         self, nodes, edges, placements, costs: PlacementCosts, prefetch: bool = True
     ) -> np.ndarray:
-        """One vectorized experiment per placement under a shared seed:
-        a ``(len(placements), n_requests)`` matrix of simulated totals.
-        ``nodes`` is ``{name: step}`` (anything with optional
-        ``data_deps``), ``edges`` the DAG edge list."""
+        """The whole candidate set under common random numbers: a
+        ``(len(placements), len(seeds or [seed]) * n_requests)`` matrix of
+        simulated totals, one row per placement. ``nodes`` is
+        ``{name: step}`` (anything with optional ``data_deps``), ``edges``
+        the DAG edge list. On ``backend="jax"`` all rows come from ONE
+        jitted sweep; on ``"numpy"``/``"scalar"`` each row is its own
+        experiment on the same seeds (bit-identical draws either way
+        within a backend — the CRN guarantee)."""
         order = list(nodes)
-        out = np.empty((len(placements), self.n_requests))
         platforms = self._platforms(placements)
-        for i, placement in enumerate(placements):
-            sim = _CostSimulator(
-                costs,
-                platforms,
-                msg_latency_s=self.msg_latency_s,
-                payload_size_bytes=costs.payload_size,
-                seed=self.seed,
+        step_sets = [self._steps(nodes, order, p, costs) for p in placements]
+        sim = _CostSimulator(
+            costs,
+            platforms,
+            msg_latency_s=self.msg_latency_s,
+            payload_size_bytes=costs.payload_size,
+            seed=self.seed,
+        )
+        spec = ExperimentSpec(
+            step_sets[0],
+            edges=tuple(edges),
+            n_requests=self.n_requests,
+            interarrival_s=self.interarrival_s,
+            prefetch=prefetch,
+            seeds=self.seeds if self.seeds is not None else (self.seed,),
+        )
+        if self.backend == "jax":
+            totals = sim.simulate_placements(spec, step_sets, dtype=np.float32)
+        else:
+            totals = np.stack(
+                [
+                    sim.simulate(replace(spec, steps=ss), backend=self.backend)
+                    for ss in step_sets
+                ],
+                axis=1,
             )
-            out[i] = sim.run_dag_experiment(
-                self._steps(nodes, order, placement, costs),
-                list(edges),
-                n_requests=self.n_requests,
-                interarrival_s=self.interarrival_s,
-                prefetch=prefetch,
-                vectorized=True,
-            )
-        return out
+        # (S, P, n) -> (P, S * n): rows are placements, columns samples
+        return np.ascontiguousarray(np.swapaxes(totals, 0, 1)).reshape(
+            len(placements), -1
+        )
 
     def quantiles(
         self, nodes, edges, placements, costs: PlacementCosts, prefetch: bool = True

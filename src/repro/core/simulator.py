@@ -27,19 +27,41 @@ so the sampled trace is draw-for-draw what the pre-unification chain
 simulator produced. ``run_dag_request`` executes it on an explicit edge
 list.
 
-Experiments have a second, batched execution mode
-(``run_experiment(..., vectorized=True)``): every per-request scalar of
-the recurrence becomes a ``(n_requests,)`` numpy array and the graph is
-walked once, node-major in topo order, instead of once per request. The
-only genuinely sequential piece — the cold-start ``_last_use`` recurrence
-— collapses to a tight per-(step, platform) scan over the few requests
-that can possibly be cold (see ``_cold_scan``). The scalar path is left
-byte-for-byte untouched; the vectorized path has its own draw-order
-contract (per node in topo order: ``n`` cold-start draws, then ``n``
-fetch draws, then ``n`` compute draws) pinned by frozen-reference tests,
-and agrees with the scalar path statistically (medians/p99 within 1%,
-``tests/test_vecsim.py``). ``run_experiment_many(seeds=...)`` sweeps the
-vectorized experiment across seeds for error bars.
+Experiments are described by an ``ExperimentSpec`` (steps, edges,
+request stream, seeds, drift, telemetry) and executed by ONE entry point,
+``WorkflowSimulator.simulate(spec, backend=...)``, with three backends:
+
+``backend="scalar"``   the per-request loop above — the reference
+                       semantics, and the only backend that supports
+                       ``timing=`` (per-request poke-delay feedback).
+``backend="numpy"``    the request axis vectorized: every per-request
+                       scalar becomes a ``(n_requests,)`` numpy array and
+                       the graph is walked once, node-major in topo
+                       order. The only genuinely sequential piece — the
+                       cold-start ``_last_use`` recurrence — collapses to
+                       a tight per-(step, platform) scan over the few
+                       requests that can possibly be cold (see
+                       ``_cold_scan``). Its draw-order contract (per node
+                       in topo order: ``n`` cold draws, then ``n`` fetch,
+                       then ``n`` compute) is pinned by frozen-reference
+                       tests and agrees with the scalar path
+                       statistically (medians/p99 within 1%,
+                       ``tests/test_vecsim.py``).
+``backend="jax"``      the whole (seeds x placements x requests) sweep as
+                       one jitted program (``repro.core.jaxsim``):
+                       ``lax.scan`` over topo order, ``vmap`` over seeds
+                       and candidate placements, the cold scan as a
+                       Pallas kernel on TPU and a log-depth parallel scan
+                       elsewhere. Bit-equal to ``numpy`` at sigma=0; its
+                       own (jax.random) draw contract with spread, within
+                       1% on medians/p99 (``tests/test_jaxsim.py``).
+                       ``simulate_placements`` exposes the placement axis
+                       — ``PlacementScorer`` scores an entire candidate
+                       set in one call.
+
+``run_experiment`` / ``run_dag_experiment`` / ``run_experiment_many`` are
+thin wrappers over ``simulate`` (the legacy ``vectorized=`` flag is a
+deprecation shim that maps True/False to ``backend="numpy"``/"scalar").
 
 Double-billing per node (prefetch on) is start - prepare clipped at 0
 — the instance is up and idle (paper §5.5); pass a ``PokeTimingController``
@@ -60,6 +82,7 @@ from __future__ import annotations
 
 import bisect
 import math
+import warnings
 from dataclasses import dataclass
 from typing import Optional
 
@@ -241,6 +264,58 @@ def serialize_chain(steps, edges):
     return [by_name[n] for n in order]
 
 
+@dataclass(frozen=True)
+class ExperimentSpec:
+    """Everything that defines one workflow experiment, independent of how
+    it is executed. ``steps`` is the placed workflow (a sequence of
+    ``SimStep``); ``edges`` is None for a linear chain or a list of
+    ``(src_name, dst_name)`` pairs for a DAG. The request stream is
+    ``n_requests`` arrivals spaced ``interarrival_s`` apart. ``seeds`` is
+    None for a single run on the simulator's own rng stream, or a sequence
+    of seeds for a replicated sweep (one fresh stream per seed — rows of
+    the result). ``drift`` / ``telemetry`` override the simulator's
+    attached ``DriftSchedule`` / ``TelemetryHub`` for this experiment only
+    (None inherits). Execute with ``WorkflowSimulator.simulate(spec,
+    backend=...)``."""
+
+    steps: tuple
+    edges: Optional[tuple] = None
+    n_requests: int = 1800
+    interarrival_s: float = 1.0
+    prefetch: bool = True
+    seeds: Optional[tuple] = None
+    drift: Optional[DriftSchedule] = None
+    telemetry: object = None
+
+    def __post_init__(self):
+        object.__setattr__(self, "steps", tuple(self.steps))
+        if self.edges is not None:
+            object.__setattr__(self, "edges", tuple(self.edges))
+        if self.seeds is not None:
+            object.__setattr__(self, "seeds", tuple(self.seeds))
+
+
+def _spec_graph(steps, edges):
+    """The one chain-vs-DAG dispatch: node ids, step map and adjacency for
+    either workflow shape. Chains are keyed positionally (duplicate step
+    names allowed), DAGs by step name (the edge vocabulary)."""
+    if edges is None:
+        ids = list(range(len(steps)))
+        smap = dict(enumerate(steps))
+        preds = {i: ([] if i == 0 else [i - 1]) for i in ids}
+        succs = {i: ([i + 1] if i + 1 < len(steps) else []) for i in ids}
+        return ids, smap, preds, succs
+    smap = {s.name: s for s in steps}
+    preds, succs, order = _graph(steps, edges)
+    return order, smap, preds, succs
+
+
+_BACKENDS = ("scalar", "numpy", "jax")
+
+# sentinel: distinguishes "caller did not pass vectorized=" from any value
+_VECTORIZED_UNSET = object()
+
+
 class WorkflowSimulator:
     """One simulator for chains and DAGs: same platforms, latencies,
     cold-start bookkeeping and rng, so results are directly comparable."""
@@ -260,6 +335,7 @@ class WorkflowSimulator:
         self.msg = msg_latency_s
         self.obj = object_latency or ObjectLatency()
         self.payload_size = payload_size_bytes
+        self.seed = seed  # kept for backends that sample per-seed (jax)
         self.rng = np.random.default_rng(seed)
         self.timing = timing  # optional PokeTimingController (per-edge)
         self.telemetry = telemetry  # optional TelemetryHub (repro.adapt)
@@ -448,14 +524,14 @@ class WorkflowSimulator:
             raise ValueError(
                 "vectorized experiments do not support timing=: the poke "
                 "controller learns from per-request feedback; use the "
-                "scalar path (vectorized=False)"
+                "scalar backend (backend='scalar')"
             )
         keys = [(steps[v].name, steps[v].platform) for v in order]
         if len(set(keys)) != len(keys):
             raise ValueError(
                 "vectorized experiments need a unique (name, platform) per "
                 "node — a duplicated pair couples the cold-start recurrence "
-                "across nodes; use the scalar path (vectorized=False)"
+                "across nodes; use the scalar backend (backend='scalar')"
             )
         n = len(t0s)
         if n == 0:
@@ -580,28 +656,145 @@ class WorkflowSimulator:
         self._req_k += 1
         return DagTrace(total, start, end, prepare, payload, db, ef)
 
-    # -- an experiment (paper: 1 req/s for 30 min) -----------------------------
+    # -- the one experiment entry point -----------------------------------------
+    def simulate(self, spec: ExperimentSpec, backend: str = "numpy") -> np.ndarray:
+        """Run one experiment described by ``spec`` on the chosen backend
+        (``"scalar"``, ``"numpy"`` or ``"jax"`` — see the module docstring
+        for the matrix). Returns per-request totals: shape
+        ``(n_requests,)`` when ``spec.seeds`` is None, else
+        ``(len(seeds), n_requests)`` with one fresh rng stream per seed
+        (the simulator's own rng is restored afterwards), so
+        ``np.median(out, axis=1)`` gives the per-seed medians error bars
+        are built from.
+
+        ``backend="scalar"`` is the per-request reference loop (the only
+        one that supports ``timing=``); ``"numpy"`` vectorizes the request
+        axis; ``"jax"`` compiles the whole sweep (its draws come from
+        ``jax.random``, so it matches the others statistically, and
+        bit-exactly at sigma=0; with ``spec.seeds=None`` it runs the
+        simulator's construction seed rather than continuing the numpy
+        stream)."""
+        if backend == "jax":
+            totals = self.simulate_placements(spec, [spec.steps])[:, 0, :]
+            return totals if spec.seeds is not None else totals[0]
+        if backend not in _BACKENDS:
+            raise ValueError(
+                f"unknown backend {backend!r}: expected one of {_BACKENDS}"
+            )
+        saved_drift, saved_tel = self.drift, self.telemetry
+        if spec.drift is not None:
+            self.drift = spec.drift
+        if spec.telemetry is not None:
+            self.telemetry = spec.telemetry
+        try:
+            order, smap, preds, succs = _spec_graph(spec.steps, spec.edges)
+            t0s = np.arange(spec.n_requests) * spec.interarrival_s
+            if spec.seeds is None:
+                return self._run_stream(
+                    order, smap, preds, succs, t0s, spec.prefetch, backend
+                )
+            out = np.empty((len(spec.seeds), spec.n_requests))
+            saved_rng = self.rng
+            try:
+                for i, seed in enumerate(spec.seeds):
+                    self.rng = np.random.default_rng(seed)
+                    out[i] = self._run_stream(
+                        order, smap, preds, succs, t0s, spec.prefetch, backend
+                    )
+            finally:
+                self.rng = saved_rng
+            return out
+        finally:
+            self.drift, self.telemetry = saved_drift, saved_tel
+
+    def _run_stream(self, order, smap, preds, succs, t0s, prefetch, backend):
+        """One request stream on the current rng: the scalar loop or the
+        vectorized pass, from a fresh experiment (cold containers, drift
+        indexed from request 0)."""
+        self._last_use = {}
+        self._req_k = 0
+        if backend == "numpy":
+            return self._run_graph_vectorized(order, smap, preds, succs, t0s, prefetch)
+        out = np.empty(len(t0s))
+        for k, t0 in enumerate(t0s):
+            out[k] = self._run_graph(order, smap, preds, succs, float(t0), prefetch)[4]
+            self._req_k += 1
+        return out
+
+    def simulate_placements(
+        self, spec: ExperimentSpec, placements, dtype=np.float64
+    ) -> np.ndarray:
+        """Score a whole candidate placement set under common random
+        numbers in ONE jitted jax call: ``placements`` is a sequence of
+        step-sequences, each shaped like ``spec.steps`` (same length for a
+        chain, same step names for a DAG — only the platform assignments
+        and per-step distributions differ). Returns totals of shape
+        ``(n_seeds, n_placements, n_requests)``; seeds default to the
+        simulator's construction seed. Every placement sees the same
+        per-seed draws, so differences between rows are placement effects,
+        not sampling noise (the scorer's CRN property). ``dtype=np.float32``
+        halves memory traffic for big sweeps at ~1e-7 relative cost."""
+        from repro.core import jaxsim  # deferred: jax pays init cost
+
+        telemetry = spec.telemetry if spec.telemetry is not None else self.telemetry
+        if telemetry is not None:
+            raise ValueError(
+                "backend='jax' does not support telemetry=: observations "
+                "are per-request side effects; use backend='numpy'"
+            )
+        placements = [tuple(p) for p in placements]
+        if not placements:
+            raise ValueError("placements must be non-empty")
+        order, _, preds, succs = _spec_graph(placements[0], spec.edges)
+        if spec.edges is None:
+            step_sets = [dict(enumerate(p)) for p in placements]
+        else:
+            step_sets = [{s.name: s for s in p} for p in placements]
+        seeds = spec.seeds if spec.seeds is not None else (self.seed,)
+        drift = spec.drift if spec.drift is not None else self.drift
+        t0s = np.arange(spec.n_requests) * spec.interarrival_s
+        return jaxsim.run_batched(
+            self, order, step_sets, preds, succs, t0s, spec.prefetch,
+            list(seeds), drift=drift, dtype=dtype,
+        )
+
+    # -- legacy wrappers (paper: 1 req/s for 30 min) ----------------------------
+    def _shim_backend(self, vectorized, backend, default):
+        if vectorized is not _VECTORIZED_UNSET:
+            warnings.warn(
+                "vectorized= is deprecated; pass backend='numpy' "
+                "(vectorized=True) or backend='scalar' (vectorized=False)",
+                DeprecationWarning,
+                stacklevel=3,
+            )
+            if backend is not None:
+                raise TypeError(
+                    "pass either backend= or the deprecated vectorized=, "
+                    "not both"
+                )
+            return "numpy" if vectorized else "scalar"
+        return backend if backend is not None else default
+
     def run_experiment(
         self,
         steps,
         n_requests: int = 1800,
         interarrival_s: float = 1.0,
         prefetch: bool = True,
-        vectorized: bool = False,
+        vectorized=_VECTORIZED_UNSET,
+        *,
+        backend: Optional[str] = None,
     ) -> np.ndarray:
-        self._last_use = {}
-        self._req_k = 0  # drift events are indexed from the experiment start
-        if vectorized:
-            ids = list(range(len(steps)))
-            smap = dict(enumerate(steps))
-            preds = {i: ([] if i == 0 else [i - 1]) for i in ids}
-            succs = {i: ([i + 1] if i + 1 < len(steps) else []) for i in ids}
-            t0s = np.arange(n_requests) * interarrival_s
-            return self._run_graph_vectorized(ids, smap, preds, succs, t0s, prefetch)
-        out = np.empty(n_requests)
-        for k in range(n_requests):
-            out[k] = self.run_request(steps, k * interarrival_s, prefetch).total_s
-        return out
+        backend = self._shim_backend(vectorized, backend, "scalar")
+        return self.simulate(
+            ExperimentSpec(
+                steps,
+                n_requests=n_requests,
+                interarrival_s=interarrival_s,
+                prefetch=prefetch,
+            ),
+            backend=backend,
+        )
 
     def run_dag_experiment(
         self,
@@ -610,23 +803,21 @@ class WorkflowSimulator:
         n_requests: int = 1800,
         interarrival_s: float = 1.0,
         prefetch: bool = True,
-        vectorized: bool = False,
+        vectorized=_VECTORIZED_UNSET,
+        *,
+        backend: Optional[str] = None,
     ) -> np.ndarray:
-        self._last_use = {}
-        self._req_k = 0  # drift events are indexed from the experiment start
-        if vectorized:
-            smap = {s.name: s for s in steps}
-            preds, succs, order = _graph(steps, edges)
-            t0s = np.arange(n_requests) * interarrival_s
-            return self._run_graph_vectorized(
-                order, smap, preds, succs, t0s, prefetch
-            )
-        out = np.empty(n_requests)
-        for k in range(n_requests):
-            out[k] = self.run_dag_request(
-                steps, edges, k * interarrival_s, prefetch
-            ).total_s
-        return out
+        backend = self._shim_backend(vectorized, backend, "scalar")
+        return self.simulate(
+            ExperimentSpec(
+                steps,
+                edges=edges,
+                n_requests=n_requests,
+                interarrival_s=interarrival_s,
+                prefetch=prefetch,
+            ),
+            backend=backend,
+        )
 
     def run_experiment_many(
         self,
@@ -636,30 +827,23 @@ class WorkflowSimulator:
         interarrival_s: float = 1.0,
         prefetch: bool = True,
         edges=None,
-        vectorized: bool = True,
+        vectorized=_VECTORIZED_UNSET,
+        *,
+        backend: Optional[str] = None,
     ) -> np.ndarray:
-        """Seed sweep: one experiment per seed, fresh rng each (the
-        simulator's own rng is restored afterwards). Returns a
-        ``(len(seeds), n_requests)`` totals matrix — rows are replicas, so
-        ``np.median(out, axis=1)`` gives the per-seed medians error bars
-        are built from. Pass ``edges`` to sweep a DAG workflow."""
-        seeds = list(seeds)
-        out = np.empty((len(seeds), n_requests))
-        saved = self.rng
-        try:
-            for i, seed in enumerate(seeds):
-                self.rng = np.random.default_rng(seed)
-                if edges is None:
-                    out[i] = self.run_experiment(
-                        steps, n_requests, interarrival_s, prefetch, vectorized
-                    )
-                else:
-                    out[i] = self.run_dag_experiment(
-                        steps, edges, n_requests, interarrival_s, prefetch, vectorized
-                    )
-        finally:
-            self.rng = saved
-        return out
+        """Seed sweep, ``(len(seeds), n_requests)`` — see ``simulate``."""
+        backend = self._shim_backend(vectorized, backend, "numpy")
+        return self.simulate(
+            ExperimentSpec(
+                steps,
+                edges=edges,
+                n_requests=n_requests,
+                interarrival_s=interarrival_s,
+                prefetch=prefetch,
+                seeds=tuple(seeds),
+            ),
+            backend=backend,
+        )
 
 
 def median(xs) -> float:

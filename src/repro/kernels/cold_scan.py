@@ -1,0 +1,166 @@
+"""Cold-start scan for the batched workflow simulator (Pallas).
+
+The one genuinely sequential piece of the simulator's request-axis
+recurrence: whether request ``k`` finds its (step, platform) instance cold
+depends on request ``k-1``'s end time, which depends on whether *that*
+request was cold. Given the node's per-request end times under both
+hypotheses (``warm_end[k] <= cold_end[k]``, the cold draw is nonnegative),
+the mask obeys
+
+    last[-1] = -inf                      (fresh experiment)
+    mask[k]  = (t0[k] - last[k-1]) > keep_warm
+    last[k]  = cold_end[k] if mask[k] else warm_end[k]
+
+Two device implementations of the same recurrence:
+
+``cold_scan``           the TPU kernel. The recurrence is memory-bound and
+                        diagonal across the batch axis (independent rows),
+                        so the kernel streams (time-chunk x batch-block)
+                        tiles through VMEM — grid (batch-block, time-chunk)
+                        with time sequential, carrying ``last`` in f32
+                        scratch; within a chunk the scan is a fori_loop over
+                        rows, each step a (block_b,)-wide VPU vector op
+                        (the rglru/ssd scan shape). Time is the sublane
+                        dimension so the per-step store is a full lane row.
+                        On non-TPU backends it runs in interpret mode.
+
+``cold_scan_parallel``  the same mask with the sequential dependence
+                        factored out, for XLA on any backend: mask[k] is a
+                        1-bit affine function of mask[k-1] —
+                        ``s = a XOR (b AND s_prev)`` with (a, b) determined
+                        by which of the two gaps clears ``keep_warm`` — and
+                        affine maps over GF(2) compose associatively, so the
+                        whole mask is a log-depth parallel (Hillis–Steele)
+                        scan with no per-request loop. The composition runs
+                        under ``lax.while_loop`` keyed on ``any(b)``: the
+                        "flip" bit ``b`` marks requests whose status depends
+                        on the previous one, its true-runs halve every
+                        doubling step, and in the paper's regimes
+                        (interarrival far from ``keep_warm`` on either side)
+                        it is all-false from the start — zero iterations,
+                        mirroring the numpy scan's candidate short-circuit.
+                        This is what the jax simulator backend uses where
+                        Pallas isn't lowered.
+
+The pure-jnp oracle both are validated against is ``ref.cold_scan_ref``
+(tests/test_kernels.py, interpret mode on CPU), which mirrors the numpy
+``WorkflowSimulator._cold_scan`` semantics exactly.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import CompilerParams as _CompilerParams
+
+
+def _kernel(kw_ref, t0_ref, warm_ref, cold_ref, mask_ref, last_scr, *, chunk):
+    ic = pl.program_id(1)
+
+    @pl.when(ic == 0)
+    def _init():
+        last_scr[...] = jnp.full_like(last_scr, -jnp.inf)
+
+    kw = kw_ref[0]
+    t0 = t0_ref[...]  # (chunk, 1)
+    warm = warm_ref[...]  # (chunk, block_b)
+    cold = cold_ref[...]  # (chunk, block_b)
+
+    def body(t, last):
+        m = (t0[t, 0] - last) > kw  # (block_b,)
+        last = jnp.where(m, cold[t], warm[t])
+        mask_ref[t, :] = m.astype(mask_ref.dtype)
+        return last
+
+    last_scr[...] = jax.lax.fori_loop(0, chunk, body, last_scr[...])
+
+
+def cold_scan(
+    t0, warm_end, cold_end, keep_warm, *, chunk=256, block_b=128, interpret=None
+):
+    """Boolean cold mask, request-major. ``t0``: (T,) arrival times shared
+    by every row; ``warm_end``/``cold_end``: (B, T) per-row end times under
+    the warm / cold hypothesis; ``keep_warm``: scalar idle horizon (may be
+    +inf: never cold). Returns (B, T) bool. Computed in f32 (TPU-native);
+    exact since only comparisons and selects touch the values."""
+    B, T = warm_end.shape
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    # pad to tile multiples; the scan runs forward so padded time steps
+    # never influence real outputs, and padded rows are sliced away
+    Tp = -(-T // chunk) * chunk
+    Bp = -(-B // block_b) * block_b
+    f32 = jnp.float32
+    t0p = jnp.zeros((Tp, 1), f32).at[:T, 0].set(t0.astype(f32))
+    wp = jnp.zeros((Tp, Bp), f32).at[:T, :B].set(warm_end.astype(f32).T)
+    cp = jnp.zeros((Tp, Bp), f32).at[:T, :B].set(cold_end.astype(f32).T)
+    kw = jnp.asarray(keep_warm, f32).reshape(1)
+
+    kernel = functools.partial(_kernel, chunk=chunk)
+    mask = pl.pallas_call(
+        kernel,
+        grid=(Bp // block_b, Tp // chunk),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((chunk, 1), lambda b, c: (c, 0)),
+            pl.BlockSpec((chunk, block_b), lambda b, c: (c, b)),
+            pl.BlockSpec((chunk, block_b), lambda b, c: (c, b)),
+        ],
+        out_specs=pl.BlockSpec((chunk, block_b), lambda b, c: (c, b)),
+        out_shape=jax.ShapeDtypeStruct((Tp, Bp), f32),
+        scratch_shapes=[pltpu.VMEM((block_b,), f32)],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(kw, t0p, wp, cp)
+    return mask[:T, :B].T > 0.5
+
+
+def cold_scan_parallel(t0, warm_end, cold_end, keep_warm):
+    """The same mask as ``cold_scan`` as a log-depth parallel scan along
+    the last axis (no Pallas, any backend, any dtype). ``t0``,
+    ``warm_end`` and ``cold_end`` broadcast against each other; the scan
+    runs over the trailing (request) axis; ``keep_warm`` is scalar.
+
+    Derivation: request k can be cold regardless of history iff even the
+    LATE previous end (cold) left a gap past keep_warm; it is warm
+    regardless iff even the EARLY one (warm) did not. In between, the mask
+    flips the previous one. All three cases are ``s = a ^ (b & s_prev)``:
+    definitely-cold (1, 0), definitely-warm (0, 0), flip (1, 1) — affine
+    over GF(2), hence associative under composition. The Hillis–Steele
+    doubling runs under ``while_loop`` gated on ``any(b)``: once no flip
+    bit survives, ``a`` IS the mask and the loop exits — zero iterations
+    in regimes where every request is decidable from its own gap (the
+    batched analogue of the numpy scan walking only its candidate list).
+    Under ``vmap`` the gate becomes "any lane still flipping", so batch
+    members that converge early ride along for free."""
+    t0, warm_end, cold_end = jnp.broadcast_arrays(t0, warm_end, cold_end)
+    warm_gap = t0[..., 1:] - warm_end[..., :-1] > keep_warm
+    cold_gap = t0[..., 1:] - cold_end[..., :-1] > keep_warm
+    # request 0 measures against last = -inf: cold unless keep_warm is inf
+    first = jnp.broadcast_to(keep_warm < jnp.inf, t0[..., :1].shape)
+    a = jnp.concatenate([first, warm_gap], axis=-1)
+    b = jnp.concatenate([jnp.zeros_like(first), warm_gap & ~cold_gap], axis=-1)
+    n = a.shape[-1]
+    idx = jax.lax.broadcasted_iota(jnp.int32, (n,), 0)
+
+    def keep_going(state):
+        _, b, d = state
+        return jnp.any(b) & (d < n)
+
+    def double(state):
+        a, b, d = state
+        # compose each element with the affine map d steps back (elements
+        # with no predecessor that far compose with identity (0, 0))
+        behind = idx >= d
+        a_s = jnp.where(behind, jnp.roll(a, d, axis=-1), False)
+        b_s = jnp.where(behind, jnp.roll(b, d, axis=-1), False)
+        return a ^ (b & a_s), b & b_s, d * 2
+
+    a, _, _ = jax.lax.while_loop(keep_going, double, (a, b, jnp.int32(1)))
+    return a

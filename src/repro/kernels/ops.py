@@ -10,18 +10,18 @@ import functools
 
 import jax
 
+from repro.kernels.cold_scan import cold_scan as _cold_scan
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.rglru_scan import rglru_scan as _rglru
 from repro.kernels.rmsnorm import rmsnorm as _rmsnorm
 from repro.kernels.ssd_scan import ssd_scan as _ssd
 
 
-@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
-                                             "block_k"))
-def flash_attention(q, k, v, *, causal=True, window=None, block_q=128,
-                    block_k=128):
-    return _flash(q, k, v, causal=causal, window=window, block_q=block_q,
-                  block_k=block_k)
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q", "block_k"))
+def flash_attention(q, k, v, *, causal=True, window=None, block_q=128, block_k=128):
+    return _flash(
+        q, k, v, causal=causal, window=window, block_q=block_q, block_k=block_k
+    )
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "block_h"))
@@ -37,3 +37,8 @@ def rglru_scan(log_a, b, chunk=256, block_w=None):
 @functools.partial(jax.jit, static_argnames=("eps", "block_rows"))
 def rmsnorm(x, w, eps=1e-6, block_rows=128):
     return _rmsnorm(x, w, eps=eps, block_rows=block_rows)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "block_b"))
+def cold_scan(t0, warm_end, cold_end, keep_warm, chunk=256, block_b=128):
+    return _cold_scan(t0, warm_end, cold_end, keep_warm, chunk=chunk, block_b=block_b)

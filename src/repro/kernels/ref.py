@@ -14,6 +14,26 @@ from repro.models.griffin import lru_scan as rglru_scan_ref  # noqa: F401
 from repro.models.ssm import ssd_chunked as ssd_scan_ref     # noqa: F401
 
 
+def cold_scan_ref(t0, warm_end, cold_end, keep_warm):
+    """Ground truth for the simulator's cold-start mask: the sequential
+    ``last``-use recurrence, verbatim (mirrors the numpy
+    ``WorkflowSimulator._cold_scan`` semantics). ``t0``: (T,);
+    ``warm_end``/``cold_end``: (..., T); ``keep_warm``: scalar. Bool (..., T)."""
+
+    def step(last, x):
+        t0_k, warm_k, cold_k = x
+        mask_k = (t0_k - last) > keep_warm
+        return jnp.where(mask_k, cold_k, warm_k), mask_k
+
+    init = jnp.full(warm_end.shape[:-1], -jnp.inf, warm_end.dtype)
+    _, mask = jax.lax.scan(
+        step,
+        init,
+        (t0, jnp.moveaxis(warm_end, -1, 0), jnp.moveaxis(cold_end, -1, 0)),
+    )
+    return jnp.moveaxis(mask, 0, -1)
+
+
 def rmsnorm_ref(x, w, eps=1e-6):
     x32 = x.astype(jnp.float32)
     var = jnp.mean(x32 * x32, axis=-1, keepdims=True)

@@ -1,0 +1,149 @@
+"""The redesigned experiment API: ``ExperimentSpec`` + ``simulate(spec,
+backend=...)`` as the one entry point, the legacy wrappers as thin shims
+over it, and the ``vectorized=`` -> ``backend=`` deprecation mapping."""
+
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import simulator as S
+from repro.dag import document_dag_fig4
+
+
+def _sim(seed=0, **kw):
+    return S.WorkflowSimulator(S.paper_platforms(), seed=seed, **kw)
+
+
+# ---------------------------------------------------------------------------
+# the deprecation shim
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("flag,backend", [(True, "numpy"), (False, "scalar")])
+def test_vectorized_kwarg_warns_and_maps(flag, backend):
+    steps = S.document_workflow_fig4()
+    with pytest.warns(DeprecationWarning, match="vectorized"):
+        old = _sim(3).run_experiment(steps, 16, vectorized=flag)
+    new = _sim(3).run_experiment(steps, 16, backend=backend)
+    assert np.array_equal(old, new)
+
+
+def test_vectorized_kwarg_warns_on_dag_and_many():
+    steps, edges = document_dag_fig4()
+    with pytest.warns(DeprecationWarning):
+        old = _sim(7).run_dag_experiment(steps, edges, 8, vectorized=True)
+    assert np.array_equal(
+        old, _sim(7).run_dag_experiment(steps, edges, 8, backend="numpy")
+    )
+    with pytest.warns(DeprecationWarning):
+        old = _sim().run_experiment_many(
+            S.document_workflow_fig4(), [1, 2], n_requests=8, vectorized=True
+        )
+    assert np.array_equal(
+        old,
+        _sim().run_experiment_many(
+            S.document_workflow_fig4(), [1, 2], n_requests=8
+        ),
+    )
+
+
+def test_vectorized_and_backend_together_is_an_error():
+    with pytest.warns(DeprecationWarning):
+        with pytest.raises(TypeError, match="not both"):
+            _sim().run_experiment(
+                S.document_workflow_fig4(), 4, vectorized=True, backend="numpy"
+            )
+
+
+def test_unknown_backend_is_an_error():
+    with pytest.raises(ValueError, match="backend"):
+        _sim().run_experiment(S.document_workflow_fig4(), 4, backend="cuda")
+    with pytest.raises(ValueError, match="backend"):
+        _sim().simulate(
+            S.ExperimentSpec(S.document_workflow_fig4(), n_requests=4),
+            backend="",
+        )
+
+
+# ---------------------------------------------------------------------------
+# ExperimentSpec and simulate()
+# ---------------------------------------------------------------------------
+def test_spec_normalizes_sequences_to_tuples():
+    steps, edges = document_dag_fig4()
+    spec = S.ExperimentSpec(list(steps), edges=list(edges), seeds=[1, 2])
+    assert isinstance(spec.steps, tuple)
+    assert isinstance(spec.edges, tuple)
+    assert spec.seeds == (1, 2)
+    assert (spec.n_requests, spec.interarrival_s, spec.prefetch) == (1800, 1.0, True)
+
+
+def test_simulate_matches_legacy_wrappers():
+    steps = S.document_workflow_fig4()
+    dag_steps, edges = document_dag_fig4()
+    # chain, scalar (the run_experiment default)
+    a = _sim(3).run_experiment(steps, 12)
+    b = _sim(3).simulate(S.ExperimentSpec(steps, n_requests=12), backend="scalar")
+    assert np.array_equal(a, b)
+    # DAG, numpy
+    a = _sim(7).run_dag_experiment(dag_steps, edges, 10, backend="numpy")
+    b = _sim(7).simulate(
+        S.ExperimentSpec(dag_steps, edges=edges, n_requests=10),
+        backend="numpy",
+    )
+    assert np.array_equal(a, b)
+    # seed sweep == stacked fresh single-seed runs
+    m = _sim().simulate(
+        S.ExperimentSpec(steps, n_requests=16, seeds=(4, 5)), backend="numpy"
+    )
+    assert m.shape == (2, 16)
+    solo = _sim(5).run_experiment(steps, 16, backend="numpy")
+    assert np.array_equal(m[1], solo)
+
+
+def test_simulate_seed_sweep_restores_own_rng():
+    sim = _sim()
+    before = sim.rng.bit_generator.state
+    sim.simulate(
+        S.ExperimentSpec(S.document_workflow_fig4(), n_requests=8, seeds=(0, 1)),
+        backend="numpy",
+    )
+    assert sim.rng.bit_generator.state == before
+
+
+def test_spec_drift_overrides_simulator_for_one_experiment():
+    steps = [S.SimStep("a", "gcf", compute=S.Dist(0.3, 0.0), fetch=S.Dist(0.1, 0.0))]
+    drift = S.DriftSchedule([S.DriftEvent(0, "gcf", compute_scale=10.0)])
+    sim = _sim()
+    plain = sim.simulate(
+        S.ExperimentSpec(steps, n_requests=6, seeds=(0,)), backend="numpy"
+    )
+    drifted = sim.simulate(
+        S.ExperimentSpec(steps, n_requests=6, seeds=(0,), drift=drift),
+        backend="numpy",
+    )
+    assert (drifted > plain).all()
+    assert sim.drift is None  # restored after the run
+    again = sim.simulate(
+        S.ExperimentSpec(steps, n_requests=6, seeds=(0,)), backend="numpy"
+    )
+    assert np.array_equal(plain, again)
+
+
+def test_spec_telemetry_overrides_and_restores():
+    from repro.adapt import TelemetryHub
+
+    hub = TelemetryHub()
+    sim = _sim()
+    sim.simulate(
+        S.ExperimentSpec(S.document_workflow_fig4(), n_requests=32, telemetry=hub),
+        backend="numpy",
+    )
+    assert hub.snapshot()["warm_hits"]  # the hub saw the run
+    assert sim.telemetry is None  # and the simulator forgot it
+
+
+def test_simulate_placements_requires_placements():
+    sim = _sim()
+    with pytest.raises(ValueError, match="non-empty"):
+        sim.simulate_placements(
+            S.ExperimentSpec(S.document_workflow_fig4(), n_requests=4), []
+        )

@@ -81,7 +81,7 @@ def test_frozen_reference_chain():
     ]:
         sim = S.WorkflowSimulator(S.paper_platforms(), seed=3)
         out = sim.run_experiment(
-            S.document_workflow_fig4(), 6, prefetch=prefetch, vectorized=True
+            S.document_workflow_fig4(), 6, prefetch=prefetch, backend="numpy"
         )
         assert out.tolist() == pytest.approx(want, abs=1e-9)
 
@@ -89,7 +89,7 @@ def test_frozen_reference_chain():
 def test_frozen_reference_dag():
     steps, edges = document_dag_fig4()
     sim = S.WorkflowSimulator(S.paper_platforms(), seed=7)
-    out = sim.run_dag_experiment(steps, edges, 5, prefetch=True, vectorized=True)
+    out = sim.run_dag_experiment(steps, edges, 5, prefetch=True, backend="numpy")
     assert out.tolist() == pytest.approx(FROZEN_DAG_PREFETCH, abs=1e-9)
 
 
@@ -111,25 +111,25 @@ def test_median_and_p99_agree_within_1pct(name, make_steps, edges):
     1800 requests) medians and p99s within 1%. Seeds are pinned, so this
     is a deterministic regression bound, not a flaky statistical one."""
 
-    def pooled(vectorized):
+    def pooled(backend):
         chunks = []
         for seed in SEEDS:
             sim = S.WorkflowSimulator(S.paper_platforms(), seed=seed)
             if edges is None:
                 chunks.append(
                     sim.run_experiment(
-                        make_steps(), 1800, prefetch=True, vectorized=vectorized
+                        make_steps(), 1800, prefetch=True, backend=backend
                     )
                 )
             else:
                 chunks.append(
                     sim.run_dag_experiment(
-                        make_steps(), edges, 1800, prefetch=True, vectorized=vectorized
+                        make_steps(), edges, 1800, prefetch=True, backend=backend
                     )
                 )
         return np.concatenate(chunks)
 
-    sc, ve = pooled(False), pooled(True)
+    sc, ve = pooled("scalar"), pooled("numpy")
     assert np.median(ve) == pytest.approx(np.median(sc), rel=0.01)
     assert np.percentile(ve, 99) == pytest.approx(np.percentile(sc, 99), rel=0.01)
 
@@ -140,7 +140,7 @@ def test_single_request_is_bitwise_scalar():
     because request 0 is cold on every node here (finite keep_warm_s) —
     a never-cold platform consumes no cold draw on the scalar path."""
     a = S.WorkflowSimulator(S.paper_platforms(), seed=5).run_experiment(
-        S.document_workflow_fig4(), 1, vectorized=True
+        S.document_workflow_fig4(), 1, backend="numpy"
     )
     b = S.WorkflowSimulator(S.paper_platforms(), seed=5).run_experiment(
         S.document_workflow_fig4(), 1
@@ -150,7 +150,7 @@ def test_single_request_is_bitwise_scalar():
 
 def test_zero_requests():
     out = S.WorkflowSimulator(S.paper_platforms(), seed=0).run_experiment(
-        S.document_workflow_fig4(), 0, vectorized=True
+        S.document_workflow_fig4(), 0, backend="numpy"
     )
     assert out.shape == (0,)
 
@@ -164,7 +164,7 @@ def test_sigma0_chain_matches_scalar_exactly(prefetch):
     steps = _deterministic(S.document_workflow_fig4())
     sc = S.WorkflowSimulator(plats, seed=0).run_experiment(steps, 40, prefetch=prefetch)
     ve = S.WorkflowSimulator(plats, seed=0).run_experiment(
-        steps, 40, prefetch=prefetch, vectorized=True
+        steps, 40, prefetch=prefetch, backend="numpy"
     )
     assert np.allclose(sc, ve, atol=1e-12)
 
@@ -178,7 +178,7 @@ def test_sigma0_diamond_matches_scalar_exactly(prefetch):
         steps, edges, 30, prefetch=prefetch
     )
     ve = S.WorkflowSimulator(plats, seed=0).run_dag_experiment(
-        steps, edges, 30, prefetch=prefetch, vectorized=True
+        steps, edges, 30, prefetch=prefetch, backend="numpy"
     )
     assert np.allclose(sc, ve, atol=1e-12)
 
@@ -213,10 +213,10 @@ def test_drift_boundary_request_k_minus_1_vs_k():
         steps, 8, prefetch=True
     )
     ve = S.WorkflowSimulator(plats, seed=0, drift=mk()).run_experiment(
-        steps, 8, prefetch=True, vectorized=True
+        steps, 8, prefetch=True, backend="numpy"
     )
     plain = S.WorkflowSimulator(plats, seed=0).run_experiment(
-        steps, 8, prefetch=True, vectorized=True
+        steps, 8, prefetch=True, backend="numpy"
     )
     assert np.allclose(sc, ve, atol=1e-12)
     assert ve[2] == pytest.approx(plain[2], abs=1e-12)  # k-1: untouched
@@ -270,7 +270,7 @@ def test_cold_scan_alternating_cold_warm_regime():
         steps, 20, interarrival_s=5.0, prefetch=True
     )
     ve = S.WorkflowSimulator(plats, seed=0).run_experiment(
-        steps, 20, interarrival_s=5.0, prefetch=True, vectorized=True
+        steps, 20, interarrival_s=5.0, prefetch=True, backend="numpy"
     )
     assert np.allclose(sc, ve, atol=1e-12)
     assert len(set(np.round(ve, 9))) == 2  # two levels: cold and warm
@@ -291,7 +291,7 @@ def test_cold_scan_every_request_cold():
         steps, 10, interarrival_s=10.0, prefetch=True
     )
     ve = S.WorkflowSimulator(plats, seed=0).run_experiment(
-        steps, 10, interarrival_s=10.0, prefetch=True, vectorized=True
+        steps, 10, interarrival_s=10.0, prefetch=True, backend="numpy"
     )
     assert np.allclose(sc, ve, atol=1e-12)
     assert np.allclose(ve[1:], ve[1], atol=1e-12)  # steady cold level
@@ -309,7 +309,7 @@ def test_cold_scan_infinite_keep_warm_never_cold():
     ]
     steps = [S.SimStep("a", "p", compute=S.Dist(0.2, 0.0))]
     ve = S.WorkflowSimulator(plats, seed=0).run_experiment(
-        steps, 4, prefetch=True, vectorized=True
+        steps, 4, prefetch=True, backend="numpy"
     )
     sc = S.WorkflowSimulator(plats, seed=0).run_experiment(steps, 4, prefetch=True)
     assert np.allclose(sc, ve, atol=1e-12)
@@ -325,7 +325,7 @@ def test_vectorized_rejects_timing_controller():
         S.paper_platforms(), seed=0, timing=PokeTimingController()
     )
     with pytest.raises(ValueError, match="timing"):
-        sim.run_experiment(S.document_workflow_fig4(), 4, vectorized=True)
+        sim.run_experiment(S.document_workflow_fig4(), 4, backend="numpy")
 
 
 def test_vectorized_rejects_duplicate_name_platform_nodes():
@@ -335,7 +335,7 @@ def test_vectorized_rejects_duplicate_name_platform_nodes():
     ]
     sim = S.WorkflowSimulator(S.paper_platforms(), seed=0)
     with pytest.raises(ValueError, match="unique"):
-        sim.run_experiment(steps, 4, vectorized=True)
+        sim.run_experiment(steps, 4, backend="numpy")
     sim.run_experiment(steps, 4)  # the scalar path still serves these
 
 
@@ -349,7 +349,7 @@ def test_run_experiment_many_shapes_and_rng_isolation():
     assert sim.rng.bit_generator.state == before  # own rng untouched
     # per-seed rows are reproducible one-off experiments
     solo = S.WorkflowSimulator(S.paper_platforms(), seed=1).run_experiment(
-        S.document_workflow_fig4(), 64, vectorized=True
+        S.document_workflow_fig4(), 64, backend="numpy"
     )
     assert np.array_equal(m[1], solo)
     # DAG sweep
@@ -364,7 +364,7 @@ def test_vectorized_telemetry_reports_aggregates():
     hub = TelemetryHub()
     sim = S.WorkflowSimulator(S.paper_platforms(), seed=0, telemetry=hub)
     totals = sim.run_experiment(
-        S.document_workflow_fig4(), 200, prefetch=True, vectorized=True
+        S.document_workflow_fig4(), 200, prefetch=True, backend="numpy"
     )
     snap = hub.snapshot()
     assert snap["cold_starts"]["ocr@lambda-us-east-1"] == 1  # request 0 only
@@ -375,7 +375,7 @@ def test_vectorized_telemetry_reports_aggregates():
     assert "europe-west10->us-east-1" in snap["transfer_s"]
     # and the tap is draw-neutral: same totals without the hub
     plain = S.WorkflowSimulator(S.paper_platforms(), seed=0).run_experiment(
-        S.document_workflow_fig4(), 200, prefetch=True, vectorized=True
+        S.document_workflow_fig4(), 200, prefetch=True, backend="numpy"
     )
     assert np.array_equal(totals, plain)
 
@@ -386,5 +386,5 @@ def test_vectorized_with_drift_and_telemetry_sees_drifted_compute():
     hub = TelemetryHub(alpha=1.0)
     drift = S.DriftSchedule([S.DriftEvent(0, "gcf", compute_scale=10.0)])
     sim = S.WorkflowSimulator(S.paper_platforms(), seed=0, telemetry=hub, drift=drift)
-    sim.run_experiment(S.document_workflow_fig4(), 100, vectorized=True)
+    sim.run_experiment(S.document_workflow_fig4(), 100, backend="numpy")
     assert hub.compute_s("virus", "gcf") == pytest.approx(3.0, rel=0.2)  # 10 x 0.30
