@@ -17,6 +17,8 @@
   pipeline_overlap  data-pipeline DoubleBuffer vs sync input
   timing            §5.5 eager vs learned poke timing (beyond-paper)
   roofline          per-cell three-term table from the dry-run artifacts
+  trace_diff        sim-vs-real critical-path diff on the traced document
+                    workflow (repro.obs; writes a Perfetto JSON sample)
 
 Output: CSV-ish ``name,us_per_call,derived`` blocks per bench, plus one
 machine-readable ``experiments/bench/BENCH_<name>.json`` per bench (the
@@ -29,22 +31,57 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import subprocess
 import sys
 import time
 import traceback
+from datetime import datetime, timezone
 
 BENCH_OUT = os.path.join(os.path.dirname(__file__), "..", "experiments", "bench")
 
 
-def _write_bench_json(name: str, wall_s: float, rows) -> None:
+def _git_sha() -> str:
+    """Current commit SHA, or "unknown" outside a repo / without git."""
+    try:
+        return (
+            subprocess.run(
+                ["git", "rev-parse", "HEAD"],
+                capture_output=True,
+                text=True,
+                timeout=5,
+                cwd=os.path.dirname(os.path.abspath(__file__)),
+            )
+            .stdout.strip()
+            or "unknown"
+        )
+    except Exception:
+        return "unknown"
+
+
+def _jax_backend() -> str:
+    try:
+        import jax
+
+        return jax.default_backend()
+    except Exception:
+        return "unknown"
+
+
+def _write_bench_json(name: str, wall_s: float, rows, quick: bool = False) -> None:
     """One JSON artifact per bench: rows (when the bench returned a dict)
-    + wall time. Non-serializable values degrade to strings rather than
-    failing the bench."""
+    + wall time, stamped with the commit SHA, UTC timestamp and run flags
+    so ``scripts/bench_trend.py`` can line artifacts up across commits.
+    Non-serializable values degrade to strings rather than failing the
+    bench."""
     os.makedirs(BENCH_OUT, exist_ok=True)
     payload = {
         "bench": name,
         "wall_s": round(wall_s, 4),
         "rows": rows if isinstance(rows, dict) else None,
+        "git_sha": _git_sha(),
+        "utc": datetime.now(timezone.utc).isoformat(timespec="seconds"),
+        "quick": quick,
+        "jax_backend": _jax_backend(),
     }
     path = os.path.join(BENCH_OUT, f"BENCH_{name}.json")
     with open(path, "w") as f:
@@ -114,13 +151,20 @@ def main(argv=None) -> None:
         ("timing", timing_bench.main),
         ("roofline", roofline.main),
     ]
+
+    # sim-vs-real critical-path diff (repro.obs): a script, not a package
+    # module — import it off the scripts dir like a bench
+    sys.path.insert(0, os.path.join(root, "scripts"))
+    import trace_diff
+
+    benches.append(("trace_diff", lambda: trace_diff.main(quick=args.quick)))
     failed = []
     for name, fn in benches:
         print(f"\n===== bench: {name} =====")
         try:
             t0 = time.perf_counter()
             rows = fn()
-            _write_bench_json(name, time.perf_counter() - t0, rows)
+            _write_bench_json(name, time.perf_counter() - t0, rows, quick=args.quick)
         except Exception:
             failed.append(name)
             traceback.print_exc()

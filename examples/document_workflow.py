@@ -168,6 +168,14 @@ def main():
         ts = [dag.run(placed, pdf).total_s for _ in range(3)]
         print(f"{'dag auto-placed':28s} median {np.median(ts) * 1e3:7.1f} ms")
 
+        # where did the milliseconds go? trace one request and attribute
+        # its critical path to cold/fetch/compute/transfer/poke-slack
+        from repro.obs import Tracer, extract_critical_path, instrument
+
+        tracer = instrument(dag, Tracer())
+        dag.run(dag_spec(True), pdf)
+        print(extract_critical_path(tracer.last()).format())
+
     # --- the chain serialization (a facade over the same dataflow core) ------
     with deploy_all(Deployment(build_platforms())) as chain:
         seed_store(chain.store, np.random.default_rng(11))

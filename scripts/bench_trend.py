@@ -1,0 +1,115 @@
+"""Bench trend: line the stamped ``BENCH_<name>.json`` artifacts up over time.
+
+``benchmarks/run.py`` overwrites one JSON per bench per run, each stamped
+with the commit SHA, UTC timestamp and run flags. This script makes those
+stamps useful:
+
+  1. it APPENDS the current snapshot to ``experiments/bench/trend.jsonl``
+     (one line per bench per run, idempotent per (bench, git_sha, utc)),
+  2. it prints the per-bench wall-time trajectory across every recorded
+     run, so a bench that got 3x slower two commits ago is visible in one
+     table instead of buried in CI logs.
+
+    python scripts/bench_trend.py [--no-append]
+
+Importable: ``main(append=...)`` returns the trend rows as a list of
+dicts.
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+_ROOT = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..")
+BENCH_DIR = os.path.join(_ROOT, "experiments", "bench")
+TREND_PATH = os.path.join(BENCH_DIR, "trend.jsonl")
+
+
+def snapshot_rows(bench_dir: str = BENCH_DIR) -> list:
+    """Current BENCH_*.json artifacts as flat stamped rows."""
+    rows = []
+    for path in sorted(glob.glob(os.path.join(bench_dir, "BENCH_*.json"))):
+        try:
+            with open(path) as f:
+                payload = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            continue
+        rows.append(
+            {
+                "bench": payload.get("bench", os.path.basename(path)),
+                "wall_s": payload.get("wall_s"),
+                "git_sha": payload.get("git_sha", "unknown"),
+                "utc": payload.get("utc", ""),
+                "quick": payload.get("quick", False),
+                "jax_backend": payload.get("jax_backend", "unknown"),
+            }
+        )
+    return rows
+
+
+def load_trend(path: str = TREND_PATH) -> list:
+    rows = []
+    if os.path.exists(path):
+        with open(path) as f:
+            for line in f:
+                line = line.strip()
+                if line:
+                    try:
+                        rows.append(json.loads(line))
+                    except json.JSONDecodeError:
+                        continue
+    return rows
+
+
+def append_snapshot(path: str = TREND_PATH, bench_dir: str = BENCH_DIR) -> int:
+    """Append the current artifacts to the trend log; a (bench, sha, utc)
+    triple already present is skipped, so re-running is idempotent."""
+    have = {(r["bench"], r.get("git_sha"), r.get("utc")) for r in load_trend(path)}
+    fresh = [
+        r
+        for r in snapshot_rows(bench_dir)
+        if (r["bench"], r.get("git_sha"), r.get("utc")) not in have
+    ]
+    if fresh:
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        with open(path, "a") as f:
+            for r in fresh:
+                f.write(json.dumps(r, sort_keys=True) + "\n")
+    return len(fresh)
+
+
+def print_trend(rows: list) -> None:
+    by_bench: dict = {}
+    for r in sorted(rows, key=lambda r: (r.get("utc") or "", r["bench"])):
+        by_bench.setdefault(r["bench"], []).append(r)
+    print(f"{'bench':18s} {'runs':>4s} {'latest_s':>9s}  {'wall_s trajectory'}")
+    for bench in sorted(by_bench):
+        hist = by_bench[bench]
+        walls = [r.get("wall_s") for r in hist if r.get("wall_s") is not None]
+        traj = " -> ".join(f"{w:.2f}" for w in walls[-6:])
+        latest = f"{walls[-1]:9.2f}" if walls else f"{'?':>9s}"
+        sha = (hist[-1].get("git_sha") or "unknown")[:8]
+        flag = " (quick)" if hist[-1].get("quick") else ""
+        print(f"{bench:18s} {len(hist):4d} {latest}  {traj}  @{sha}{flag}")
+
+
+def main(append: bool = True) -> list:
+    if append:
+        n = append_snapshot()
+        print(f"appended {n} new row(s) to {os.path.relpath(TREND_PATH, _ROOT)}")
+    rows = load_trend()
+    if not rows:  # nothing recorded yet: show the live snapshot instead
+        rows = snapshot_rows()
+    print_trend(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--no-append", action="store_true", help="print only, don't record"
+    )
+    main(append=not ap.parse_args().no_append)

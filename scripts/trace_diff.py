@@ -1,0 +1,224 @@
+"""Sim-vs-real critical-path diffing: where does the model disagree?
+
+Runs the §4.2 document workflow twice —
+
+  1. on the REAL dataflow engine (``examples/document_workflow.py``'s
+     deployment) with an ``obs.Tracer`` attached, and
+  2. on the SCALAR simulator, calibrated step by step from what the real
+     trace actually observed (compute/fetch/cold medians, per-edge
+     transfer seconds, estimated poke message latency),
+
+then extracts the critical path of each trace and prints the per-bucket
+latency attribution side by side. A large delta in one bucket is a
+localized statement about the model: "the simulator's transfer model is
+0.3 s optimistic on virus->e_mail", not "the totals differ".
+
+Both traces are also exported as one Chrome/Perfetto JSON
+(``experiments/bench/TRACE_docflow.json``) — load it in ui.perfetto.dev
+to see the real and simulated requests as adjacent process tracks.
+
+    PYTHONPATH=src python scripts/trace_diff.py [--quick]
+
+Importable: ``main(quick=True)`` returns the diff rows as a dict (the
+``benchmarks/run.py --quick`` smoke gate calls it that way).
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+_ROOT = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..")
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+sys.path.insert(0, os.path.join(_ROOT, "examples"))
+
+import numpy as np
+
+OUT_DIR = os.path.join(_ROOT, "experiments", "bench")
+
+
+# -- real engine run ------------------------------------------------------------
+def run_real(warm_runs: int = 1):
+    """One traced request through the real document-workflow DAG (after
+    ``warm_runs`` untraced warm-up requests). Returns (trace, tracer)."""
+    import document_workflow as dw
+    from repro.dag import DagDeployment
+    from repro.obs import MetricsRegistry, Tracer
+
+    tracer = Tracer(metrics=MetricsRegistry())
+    rng = np.random.default_rng(7)
+    pdf = b"%PDF-1.7 " + rng.bytes(int(1.2e6))
+    with dw.deploy_all(DagDeployment(dw.build_platforms(), tracer=tracer)) as dag:
+        dw.seed_store(dag.store, np.random.default_rng(11))
+        spec = dw.dag_spec(True)
+        for _ in range(warm_runs):
+            dag.run(spec, pdf)
+        tracer.clear()  # keep only the measured request
+        dag.run(spec, pdf)
+    return tracer.last(), tracer
+
+
+# -- calibration ----------------------------------------------------------------
+def _full_fetch_s(trace) -> dict:
+    """Full (pre-overlap) fetch seconds per store key, from the component
+    span events. The node span's ``fetch_s`` is only the RESIDUAL the
+    request waited; the prefetch/fetch events carry the modeled duration
+    the simulator should reproduce."""
+    out = {}
+    for span in trace.spans:
+        for _t, name, attrs in span.events:
+            if name in ("prefetch.done", "fetch.cold") and "modeled_s" in attrs:
+                key = attrs.get("key")
+                out[key] = max(out.get(key, 0.0), float(attrs["modeled_s"]))
+    return out
+
+
+def _estimate_msg_s(trace, default: float = 0.005) -> float:
+    """Poke message latency from observed poke times: median of
+    ``(poke_t - t0) / depth`` over nodes with depth >= 1."""
+    nodes = trace.node_spans()
+    preds = {n: set(s.attrs.get("preds") or ()) for n, s in nodes.items()}
+    depth, frontier, d = {}, {n for n, p in preds.items() if not p}, 0
+    while frontier:
+        for n in frontier:
+            depth[n] = d
+        frontier = {
+            n for n in preds if n not in depth and preds[n] <= set(depth)
+        }
+        d += 1
+    ests = [
+        (nodes[n].attrs["poke_t"] - trace.root.t_start) / depth[n]
+        for n in nodes
+        if depth.get(n, 0) >= 1 and nodes[n].attrs.get("poke_t") is not None
+    ]
+    return float(np.median(ests)) if ests else default
+
+
+def calibrated_sim_trace(real_trace):
+    """Simulate the same DAG with every draw pinned to what the real trace
+    observed. Returns (trace, simulator)."""
+    import document_workflow as dw
+    from repro.core import simulator as sm
+    from repro.obs import Tracer
+
+    dag = dw.dag_spec(True)
+    nodes = real_trace.node_spans()
+    fetch_by_key = _full_fetch_s(real_trace)
+
+    reg = dw.build_platforms()
+    platforms = []
+    for pname in reg.names():
+        plat = reg.get(pname)
+        colds = [
+            nodes[s.name].attrs.get("cold_s", 0.0)
+            for s in dag.steps
+            if s.platform == pname and s.name in nodes
+        ]
+        platforms.append(
+            sm.SimPlatform(
+                pname,
+                plat.region,
+                native_prefetch=plat.native_prefetch,
+                allows_sync=getattr(plat, "allows_sync", True),
+                cold_start=sm.Dist(max(colds, default=0.0), 0.0),
+            )
+        )
+
+    steps = []
+    for s in dag.steps:
+        span = nodes[s.name]
+        fetch = sum(fetch_by_key.get(ref.key, 0.0) for ref in s.data_deps)
+        # residual fetch the prefetcher could not hide is a lower bound
+        fetch = max(fetch, span.attrs.get("fetch_s", 0.0))
+        steps.append(
+            sm.SimStep(
+                s.name,
+                s.platform,
+                compute=sm.Dist(span.attrs.get("compute_s", 0.0), 0.0),
+                fetch=sm.Dist(fetch, 0.0),
+                prefetch=True,
+            )
+        )
+
+    edge_table = {}
+    for name, span in nodes.items():
+        for pred, tr_s in (span.attrs.get("transfer_s") or {}).items():
+            edge_table[(pred, name)] = float(tr_s)
+
+    class _CalibratedSim(sm.WorkflowSimulator):
+        def _edge_transfer_s(self, src_step, dst_step):
+            key = (src_step.name, dst_step.name)
+            if key in edge_table:
+                return edge_table[key]
+            return super()._edge_transfer_s(src_step, dst_step)
+
+    tracer = Tracer()
+    simulator = _CalibratedSim(
+        platforms, msg_latency_s=_estimate_msg_s(real_trace), seed=0
+    )
+    spec = sm.ExperimentSpec(
+        steps, edges=dag.edges, n_requests=1, prefetch=True, tracer=tracer
+    )
+    simulator.simulate(spec, backend="scalar")
+    return tracer.last(), simulator
+
+
+# -- diff -----------------------------------------------------------------------
+def diff_rows(real_trace, sim_trace) -> dict:
+    from repro.obs import BUCKETS, extract_critical_path
+
+    real_cp = extract_critical_path(real_trace)
+    sim_cp = extract_critical_path(sim_trace)
+    rows = {
+        "real_total_s": round(real_cp.total_s, 6),
+        "sim_total_s": round(sim_cp.total_s, 6),
+        "real_path": "->".join(real_cp.nodes),
+        "sim_path": "->".join(sim_cp.nodes),
+    }
+    ra, sa = real_cp.attribution, sim_cp.attribution
+    for bucket in BUCKETS:
+        rows[f"real_{bucket}_s"] = round(ra.get(bucket, 0.0), 6)
+        rows[f"sim_{bucket}_s"] = round(sa.get(bucket, 0.0), 6)
+        rows[f"delta_{bucket}_s"] = round(
+            sa.get(bucket, 0.0) - ra.get(bucket, 0.0), 6
+        )
+    return rows
+
+
+def print_table(rows: dict) -> None:
+    from repro.obs import BUCKETS
+
+    print(f"{'bucket':12s} {'real_s':>9s} {'sim_s':>9s} {'delta_s':>9s}")
+    for bucket in BUCKETS:
+        print(
+            f"{bucket:12s} {rows[f'real_{bucket}_s']:9.4f}"
+            f" {rows[f'sim_{bucket}_s']:9.4f}"
+            f" {rows[f'delta_{bucket}_s']:+9.4f}"
+        )
+    print(
+        f"{'total':12s} {rows['real_total_s']:9.4f} {rows['sim_total_s']:9.4f}"
+        f" {rows['sim_total_s'] - rows['real_total_s']:+9.4f}"
+    )
+    print(f"real path: {rows['real_path']}")
+    print(f"sim path:  {rows['sim_path']}")
+
+
+def main(quick: bool = False, out_dir: str = OUT_DIR) -> dict:
+    from repro.obs import write_chrome_trace
+
+    real_trace, tracer = run_real(warm_runs=1 if quick else 2)
+    sim_trace, _ = calibrated_sim_trace(real_trace)
+    rows = diff_rows(real_trace, sim_trace)
+    print_table(rows)
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, "TRACE_docflow.json")
+    write_chrome_trace(path, [real_trace, sim_trace], tracer=tracer)
+    print(f"perfetto trace: {path}")
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true", help="single warm-up run")
+    main(quick=ap.parse_args().quick)

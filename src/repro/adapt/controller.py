@@ -114,6 +114,7 @@ class RecompositionController:
         cooldown_requests: int = 0,
         min_improvement: float = 0.0,
         scorer=None,
+        tracer=None,
     ):
         self.hub = hub
         self.fallback = fallback
@@ -126,6 +127,10 @@ class RecompositionController:
         self.cooldown_requests = cooldown_requests
         self.min_improvement = min_improvement
         self.scorer = scorer
+        # duck-typed obs.Tracer: every recompute decision (trigger, old/new
+        # placement, predicted vs. current cost, outcome) lands in its
+        # control-plane event ring — adapt behavior becomes auditable
+        self.tracer = tracer
         self._lock = threading.Lock()
         self._n = 0
         self._cooldown_until = 0  # tick count before which recomputes pause
@@ -167,11 +172,15 @@ class RecompositionController:
             if drifted:
                 self.stats["drift_triggers"] += 1
             self.stats["recomputes"] += 1
+        trigger = "drift" if drifted else "boundary"
         new_placement = place_dag(nodes, edges, self.candidates, costs, self.prefetch)
         new_cost = dag_cost(nodes, edges, new_placement, costs, self.prefetch)
         if new_placement == placement:
             with self._lock:
                 self._placed_cost = new_cost
+            self._record(
+                trigger, n, "no_change", placement, None, new_cost, current_cost
+            )
             return None
         if current_cost is None:
             current_cost = dag_cost(nodes, edges, placement, costs, self.prefetch)
@@ -183,12 +192,37 @@ class RecompositionController:
             with self._lock:
                 self.stats["improvement_vetoes"] += 1
                 self._placed_cost = current_cost
+            self._record(
+                trigger, n, "veto", placement, new_placement, new_cost, current_cost
+            )
             return None
         with self._lock:
             self._placed_cost = new_cost
             self.stats["swaps"] += 1
             self._cooldown_until = n + self.cooldown_requests
+        self._record(
+            trigger, n, "swap", placement, new_placement, new_cost, current_cost
+        )
         return new_placement
+
+    def _record(
+        self, trigger, n, outcome, placement, new_placement, new_cost, current_cost
+    ):
+        """Mirror one recompute decision into the tracer's event ring."""
+        if self.tracer is None:
+            return
+        self.tracer.record_event(
+            "recompose.decision",
+            {
+                "trigger": trigger,
+                "tick": n,
+                "outcome": outcome,
+                "placement": dict(placement),
+                "new_placement": dict(new_placement) if new_placement else None,
+                "predicted_cost_s": new_cost,
+                "current_cost_s": current_cost,
+            },
+        )
 
     def _improves(
         self, nodes, edges, new_placement, placement, new_cost, current_cost, costs
@@ -234,9 +268,18 @@ class AdaptiveDeployment:
         cooldown_requests: int = 0,
         min_improvement: float = 0.0,
         scorer=None,
+        tracer=None,
     ):
         self.deployment = deployment
         self.hub = attach(deployment, hub)
+        self.tracer = tracer
+        if tracer is not None:
+            # same duck-typed hook pattern as telemetry.attach: request
+            # traces come from the wrapped deployment, decision events from
+            # the controller below
+            from repro.obs import instrument
+
+            instrument(deployment, tracer)
         self.prewarm = prewarm
         for step in spec.steps:  # fail fast: candidates must be deployed
             for platform in candidates.get(step.name, ()):
@@ -257,6 +300,7 @@ class AdaptiveDeployment:
             cooldown_requests=cooldown_requests,
             min_improvement=min_improvement,
             scorer=scorer,
+            tracer=tracer,
         )
         self.routes = RouteTable(spec)
         self._cut_lock = threading.Lock()
@@ -296,6 +340,10 @@ class AdaptiveDeployment:
                         )
             version = self.routes.swap(new_spec)
             self.swaps.append({"version": version, "moved": moved, "at": time.time()})
+            if self.tracer is not None:
+                self.tracer.record_event(
+                    "recompose.cutover", {"version": version, "moved": moved}
+                )
             return version
 
     # -- reporting / lifecycle -------------------------------------------------

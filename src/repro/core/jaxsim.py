@@ -108,11 +108,19 @@ def _cold_mask(t0s, warm_end, cold_end, keep_warm, use_pallas):
     return cold_scan_parallel(t0s, warm_end, cold_end, keep_warm)
 
 
-def _simulate_one(placed, factors, graph, t0s, msg, prefetch, use_drift, use_pallas):
+def _simulate_one(
+    placed, factors, graph, t0s, msg, prefetch, use_drift, use_pallas,
+    sample_idx=None,
+):
     """One (seed, placement) request stream: the node-major recurrence of
     ``_run_graph_vectorized`` as a scan over topo order. ``factors`` are
     the seed's three lognormal tables ``exp(sigma_u * z)``, each (U, V, n).
-    Returns the (n,) per-request totals."""
+    Returns the (n,) per-request totals — plus, when ``sample_idx`` (a
+    (k,) request-index array) is given, the per-node scan ys at those
+    columns (payload, effective cold, fetch, compute, end; each (V, k)) so
+    the host can rebuild ``obs`` traces for the sampled requests. The
+    gather rides the existing scan outputs: the totals arithmetic is
+    untouched, and no extra randomness is drawn."""
     f_cold, f_fetch, f_compute = factors
     V, n = f_cold.shape[1:]
     dtype = t0s.dtype
@@ -194,15 +202,34 @@ def _simulate_one(placed, factors, graph, t0s, msg, prefetch, use_drift, use_pal
         cold_end = cold_start + compute_v
         mask = _cold_mask(t0s, warm_end, cold_end, kw, use_pallas)
         end_v = jnp.where(mask, cold_end, warm_end)
-        return end_all.at[v].set(end_v), jnp.where(is_sink, end_v, -inf)
+        sink_row = jnp.where(is_sink, end_v, -inf)
+        if sample_idx is not None:
+            cold_eff = jnp.where(mask, cold_v, jnp.zeros_like(cold_v))
+            sampled = (
+                payload[sample_idx],
+                cold_eff[sample_idx],
+                fetch_v[sample_idx],
+                compute_v[sample_idx],
+                end_v[sample_idx],
+            )
+            return end_all.at[v].set(end_v), (sink_row, sampled)
+        return end_all.at[v].set(end_v), sink_row
 
-    _, sink_ends = jax.lax.scan(body, jnp.zeros((V, n), dtype), xs)
-    return jnp.max(sink_ends, axis=0) - t0s
+    _, ys = jax.lax.scan(body, jnp.zeros((V, n), dtype), xs)
+    if sample_idx is not None:
+        sink_ends, sampled = ys
+        return jnp.max(sink_ends, axis=0) - t0s, sampled
+    return jnp.max(ys, axis=0) - t0s
 
 
 @partial(jax.jit, static_argnames=("prefetch", "use_drift", "use_pallas"))
-def _sweep(keys, placed, sigmas, graph, t0s, msg, *, prefetch, use_drift, use_pallas):
-    """(seeds, placements, requests) totals in one compiled program."""
+def _sweep(
+    keys, placed, sigmas, graph, t0s, msg, sample_idx=None,
+    *, prefetch, use_drift, use_pallas,
+):
+    """(seeds, placements, requests) totals in one compiled program. With
+    ``sample_idx``, also the sampled per-node ys pytree (leaves gain the
+    (seeds, placements) leading axes)."""
     V = graph.pred_idx.shape[0]
     n = t0s.shape[0]
     f32 = jnp.float32
@@ -225,7 +252,7 @@ def _sweep(keys, placed, sigmas, graph, t0s, msg, *, prefetch, use_drift, use_pa
         )
         return jax.vmap(
             lambda p: _simulate_one(p, factors, graph, t0s, msg, prefetch,
-                                    use_drift, use_pallas)
+                                    use_drift, use_pallas, sample_idx)
         )(placed)
 
     return jax.vmap(per_seed)(keys)
@@ -348,7 +375,7 @@ def _build(sim, order, step_sets, preds, succs, t0s, drift, dtype):
 
 
 def run_batched(sim, order, step_sets, preds, succs, t0s, prefetch, seeds,
-                drift=None, dtype=np.float64):
+                drift=None, dtype=np.float64, sample_idx=None):
     """The jax backend's one entry point: simulate every (seed, placement)
     pair of one workflow graph in a single compiled call.
 
@@ -365,6 +392,13 @@ def run_batched(sim, order, step_sets, preds, succs, t0s, prefetch, seeds,
     memory-bound — and is statistically indistinguishable (the medians
     the scorer and benches consume move by ~1e-7 relative), so bulk
     candidate scoring uses it.
+
+    ``sample_idx``: optional (k,) request indices. When given, the return
+    value becomes ``(totals, sampled)`` where ``sampled`` is a 5-tuple of
+    ``(seeds, placements, V, k)`` numpy arrays (payload, effective cold,
+    fetch, compute, end at the sampled requests) for host-side ``obs``
+    trace reconstruction. The totals are computed by the identical
+    arithmetic either way.
     """
     if drift is None:
         drift = sim.drift
@@ -384,7 +418,12 @@ def run_batched(sim, order, step_sets, preds, succs, t0s, prefetch, seeds,
     seeds = [int(s) for s in seeds]
     n = len(t0s)
     if n == 0 or not step_sets or not seeds:
-        return np.empty((len(seeds), len(step_sets), n))
+        empty = np.empty((len(seeds), len(step_sets), n))
+        if sample_idx is not None:
+            V = len(order)
+            z = np.empty((len(seeds), len(step_sets), V, 0))
+            return empty, (z, z, z, z, z)
+        return empty
     dtype = np.dtype(dtype).type
     with enable_x64():
         placed, sigmas, graph = _build(
@@ -396,15 +435,21 @@ def run_batched(sim, order, step_sets, preds, succs, t0s, prefetch, seeds,
         keys = np.stack(
             [sarr >> np.uint64(32), sarr & np.uint64(0xFFFFFFFF)], axis=-1
         ).astype(np.uint32)
-        totals = _sweep(
+        out = _sweep(
             keys,
             placed,
             sigmas,
             graph,
             jnp.asarray(np.asarray(t0s, dtype)),
             jnp.asarray(dtype(sim.msg)),
+            jnp.asarray(np.asarray(sample_idx, np.int32))
+            if sample_idx is not None
+            else None,
             prefetch=bool(prefetch),
             use_drift=drift is not None,
             use_pallas=jax.default_backend() == "tpu",
         )
-        return np.asarray(totals)
+        if sample_idx is not None:
+            totals, sampled = out
+            return np.asarray(totals), tuple(np.asarray(a) for a in sampled)
+        return np.asarray(out)

@@ -38,6 +38,7 @@ class Prefetcher:
         }
         self._lock = threading.Lock()
         self.telemetry = None  # duck-typed TelemetryHub (repro.adapt)
+        self.tracer = None  # duck-typed obs.Tracer (span events)
 
     def stats_snapshot(self) -> dict:
         """Copy of ``stats`` under the lock (joins land on pool threads)."""
@@ -46,8 +47,14 @@ class Prefetcher:
 
     def start(self, deps: Iterable[DataRef], to_region: str, device=None) -> dict:
         """Kick off async fetches. Returns {key: Future[(value, modeled_s)]}."""
+        tr = self.tracer
+        # capture the caller's bound span (the poke span): the job runs on
+        # a pool thread, so rebind there to attach fetch events to it
+        span = tr.current_span() if tr is not None else None
         futs = {}
         for ref in deps:
+            if tr is not None:
+                tr.event("prefetch.start", {"key": ref.key, "to_region": to_region})
 
             def job(r=ref):
                 value, dt = self.store.get(r.key, to_region)
@@ -55,6 +62,12 @@ class Prefetcher:
                     value = jax.device_put(value, device)
                 if self.telemetry is not None:
                     self.telemetry.record_fetch(r.key, to_region, dt)
+                if tr is not None and span is not None:
+                    with tr.bind(span):
+                        tr.event(
+                            "prefetch.done",
+                            {"key": r.key, "to_region": to_region, "modeled_s": dt},
+                        )
                 return value, dt
 
             futs[ref.key] = self._pool.submit(job)
@@ -80,6 +93,7 @@ class Prefetcher:
         self, deps: Iterable[DataRef], to_region: str, device=None
     ) -> tuple:
         """The baseline (no pre-fetch) path: sequential download."""
+        tr = self.tracer
         out, total = {}, 0.0
         for ref in deps:
             value, dt = self.store.get(ref.key, to_region)
@@ -87,6 +101,11 @@ class Prefetcher:
                 value = jax.device_put(value, device)
             if self.telemetry is not None:
                 self.telemetry.record_fetch(ref.key, to_region, dt)
+            if tr is not None:
+                tr.event(
+                    "fetch.cold",
+                    {"key": ref.key, "to_region": to_region, "modeled_s": dt},
+                )
             out[ref.key] = value
             total += dt
         with self._lock:

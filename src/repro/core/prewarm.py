@@ -53,6 +53,7 @@ class CompileCache:
             "hidden_compile_s": 0.0,
         }
         self.telemetry = None  # duck-typed TelemetryHub (repro.adapt)
+        self.tracer = None  # duck-typed obs.Tracer (span events)
 
     def stats_snapshot(self) -> dict:
         """Copy of ``stats`` under the cache lock (safe to read while
@@ -74,13 +75,22 @@ class CompileCache:
     ) -> Future:
         """Start compiling in the background (the poke path). Idempotent."""
         key = self._key(name, platform, abstract_args)
+        tr = self.tracer
+        # capture the caller's bound span (the poke span) so the compile
+        # completion event lands on it even though the job runs on a pool
+        # thread
+        span = tr.current_span() if tr is not None else None
         with self._lock:
             if key in self._cache:
+                if tr is not None:
+                    tr.event("prewarm.already_warm", {"fn": name, "platform": platform})
                 f = Future()
                 f.set_result(self._cache[key])
                 return f
             if key in self._inflight:
                 return self._inflight[key]
+            if tr is not None:
+                tr.event("prewarm.start", {"fn": name, "platform": platform})
 
             def job():
                 compiled, dt = self._compile(fn, abstract_args, donate)
@@ -89,6 +99,12 @@ class CompileCache:
                     self._inflight.pop(key, None)
                     self.stats["prewarms"] += 1
                     self.stats["hidden_compile_s"] += dt
+                if tr is not None and span is not None:
+                    with tr.bind(span):
+                        tr.event(
+                            "prewarm.done",
+                            {"fn": name, "platform": platform, "compile_s": dt},
+                        )
                 return compiled
 
             fut = self._pool.submit(job)
@@ -100,6 +116,7 @@ class CompileCache:
         compile cold (a cold start — counted in stats)."""
         key = self._key(name, platform, args)
         tel = self.telemetry
+        tr = self.tracer
         with self._lock:
             hit = self._cache.get(key)
             if hit is not None:
@@ -108,6 +125,8 @@ class CompileCache:
         if hit is not None:
             if tel is not None:
                 tel.record_warm_hit(name, platform)
+            if tr is not None:
+                tr.event("compile.hit", {"fn": name, "platform": platform})
             return hit
         if fut is not None:
             compiled = fut.result()
@@ -115,6 +134,8 @@ class CompileCache:
                 self.stats["hits"] += 1
             if tel is not None:
                 tel.record_warm_hit(name, platform)
+            if tr is not None:
+                tr.event("compile.joined_inflight", {"fn": name, "platform": platform})
             return compiled
         compiled, dt = self._compile(fn, args, donate)
         with self._lock:
@@ -124,6 +145,10 @@ class CompileCache:
         if tel is not None:
             # the compile wall time is the cold-start cost placement wants
             tel.record_cold_start(name, platform, dt)
+        if tr is not None:
+            tr.event(
+                "compile.cold", {"fn": name, "platform": platform, "compile_s": dt}
+            )
         return compiled
 
     def is_warm(self, name: str, platform: str, args) -> bool:

@@ -273,10 +273,10 @@ class ExperimentSpec:
     ``n_requests`` arrivals spaced ``interarrival_s`` apart. ``seeds`` is
     None for a single run on the simulator's own rng stream, or a sequence
     of seeds for a replicated sweep (one fresh stream per seed — rows of
-    the result). ``drift`` / ``telemetry`` override the simulator's
-    attached ``DriftSchedule`` / ``TelemetryHub`` for this experiment only
-    (None inherits). Execute with ``WorkflowSimulator.simulate(spec,
-    backend=...)``."""
+    the result). ``drift`` / ``telemetry`` / ``tracer`` override the
+    simulator's attached ``DriftSchedule`` / ``TelemetryHub`` /
+    ``obs.Tracer`` for this experiment only (None inherits). Execute with
+    ``WorkflowSimulator.simulate(spec, backend=...)``."""
 
     steps: tuple
     edges: Optional[tuple] = None
@@ -286,6 +286,7 @@ class ExperimentSpec:
     seeds: Optional[tuple] = None
     drift: Optional[DriftSchedule] = None
     telemetry: object = None
+    tracer: object = None
 
     def __post_init__(self):
         object.__setattr__(self, "steps", tuple(self.steps))
@@ -340,6 +341,7 @@ class WorkflowSimulator:
         self.timing = timing  # optional PokeTimingController (per-edge)
         self.telemetry = telemetry  # optional TelemetryHub (repro.adapt)
         self.drift = drift  # optional DriftSchedule (mid-run injection)
+        self.tracer = None  # optional obs.Tracer (per-request span trees)
         self._req_k = 0  # running request index (feeds the drift schedule)
         self._last_use: dict = {}
 
@@ -380,10 +382,18 @@ class WorkflowSimulator:
         return tr
 
     # -- the one dataflow recurrence -------------------------------------------
-    def _run_graph(self, order, steps, preds, succs, t0: float, prefetch: bool):
+    def _run_graph(
+        self, order, steps, preds, succs, t0: float, prefetch: bool, trace: bool = True
+    ):
         """``order``: topo-sorted node ids; ``steps``: {id: SimStep};
         ``preds``/``succs``: {id: [ids]}. Ids are arbitrary hashables so the
-        chain path can key positionally (duplicate step names allowed)."""
+        chain path can key positionally (duplicate step names allowed).
+
+        When a ``tracer`` is attached (and ``trace`` is True — the stream
+        path samples), the request is also emitted as an ``obs`` trace in
+        the same span schema the real engine produces. Trace assembly reads
+        the recurrence variables AFTER the loop and consumes no randomness,
+        so tracing on/off never changes the draw stream (pinned by test)."""
         poke = {v: math.inf for v in order}
         poke0 = {v: math.inf for v in order}  # the undelayed (eager) cascade
         if prefetch:
@@ -404,6 +414,8 @@ class WorkflowSimulator:
         payload, start, end = {}, {}, {}
         double_billed = 0.0
         exposed_fetch = 0.0
+        tracing = trace and self.tracer is not None
+        draws: dict = {}  # v -> (cold, fetch, compute, edge_tr) when tracing
         for v in order:
             step = steps[v]
             cold = self._cold(step, t0)
@@ -417,6 +429,8 @@ class WorkflowSimulator:
             # payload join, the telemetry tap, and the timing feedback
             # (deterministic given the endpoints, so reuse is exact)
             edge_tr = {u: self._edge_transfer_s(steps[u], step) for u in preds[v]}
+            if tracing:
+                draws[v] = (cold, fetch, compute, edge_tr)
             if not preds[v]:
                 payload[v] = t0 + self.msg / 2
             else:
@@ -467,7 +481,82 @@ class WorkflowSimulator:
                             steps[u].name, steps[v].name, arrival - prepare0
                         )
         total = max(end[v] for v in order if not succs[v]) - t0
+        if tracing:
+            self._emit_trace(
+                order, steps, preds, t0, prefetch, poke, prepare, payload,
+                start, end, draws, total,
+            )
         return prepare, payload, start, end, total, double_billed, exposed_fetch
+
+    def _emit_trace(
+        self, order, steps, preds, t0, prefetch, poke, prepare, payload,
+        start, end, draws, total,
+    ):
+        """Assemble one finished request into the obs span schema (sim
+        clock). Chains may invoke the same step twice — positional ids get
+        ``name@id`` labels then, so node names stay unique per trace."""
+        names = [steps[v].name for v in order]
+        dup = len(set(names)) != len(names)
+
+        def label(v):
+            return f"{steps[v].name}@{v}" if dup else steps[v].name
+
+        tr = self.tracer
+        trace = tr.begin(
+            name="sim-request",
+            t0=t0,
+            attrs={"backend": "scalar", "request_k": self._req_k},
+        )
+        for v in order:
+            step = steps[v]
+            cold, fetch, compute, edge_tr = draws[v]
+            poked = prefetch and poke[v] < math.inf
+            p0 = poke[v] if poked else payload[v]
+            p1 = prepare[v] if poked else (payload[v] + cold + fetch)
+            payload_t = {label(u): end[u] + edge_tr[u] for u in preds[v]}
+            transfer_s = {label(u): edge_tr[u] for u in preds[v]}
+            node_span = trace.span(
+                label(v),
+                "node",
+                t_start=min(p0, payload[v]),
+                attrs={
+                    "node": label(v),
+                    "platform": step.platform,
+                    "preds": [label(u) for u in preds[v]],
+                    "poke_t": poke[v] if poked else None,
+                    "prepare_t0": p0,
+                    "prepare_t1": p1,
+                    "cold_s": cold,
+                    "fetch_s": fetch,
+                    "compute_t0": start[v],
+                    "compute_s": compute,
+                    "payload_t": payload_t,
+                    "transfer_s": transfer_s,
+                },
+            )
+            node_span.end(end[v])
+            for phase, a, b in (
+                ("warm", p0, p0 + cold),
+                ("fetch", p0 + cold, p1),
+                ("compute", start[v], end[v]),
+            ):
+                ps = trace.span(
+                    f"{phase}:{label(v)}",
+                    phase,
+                    parent=node_span,
+                    t_start=a,
+                    attrs={"node": label(v), "platform": step.platform},
+                )
+                ps.end(b)
+            for u in preds[v]:
+                ts = trace.span(
+                    f"transfer:{label(u)}->{label(v)}",
+                    "transfer",
+                    t_start=end[u],
+                    attrs={"src": label(u), "dst": label(v), "platform": step.platform},
+                )
+                ts.end(end[u] + edge_tr[u])
+        tr.finish(trace, t_end=t0 + total)
 
     # -- the batched fast path (request axis vectorized) -----------------------
     def _cold_scan(
@@ -550,6 +639,8 @@ class WorkflowSimulator:
 
         inf = np.full(n, math.inf)
         tel = self.telemetry
+        tracing = self.tracer is not None
+        rec: dict = {}  # v -> per-request arrays, retained only when tracing
         poke: dict = {}
         end: dict = {}
         total = np.full(n, -math.inf)
@@ -574,6 +665,7 @@ class WorkflowSimulator:
                 poke_v = inf
             poke[v] = poke_v
             # payload join (max over in-edges of upstream end + transfer)
+            edge_tr: dict = {}
             if not preds[v]:
                 payload = t0s + self.msg / 2
             else:
@@ -586,6 +678,8 @@ class WorkflowSimulator:
                             scales_for(step.platform)[1],
                         )
                     arrivals.append(end[u] + tr)
+                    if tracing:
+                        edge_tr[u] = np.broadcast_to(np.asarray(tr, float), (n,))
                     if tel is not None:
                         tel.record_transfer_batch(
                             self.platforms[steps[u].platform].region,
@@ -606,6 +700,8 @@ class WorkflowSimulator:
             mask = self._cold_scan(t0s, warm_end, cold_end, plat.keep_warm_s)
             end_v = np.where(mask, cold_end, warm_end)
             end[v] = end_v
+            if tracing:
+                rec[v] = (poke_v, payload, mask, cold_draw, fetch, compute, edge_tr)
             self._last_use[(step.name, step.platform)] = float(end_v[-1])
             if tel is not None:
                 tel.record_compute_batch(step.name, step.platform, compute)
@@ -623,8 +719,70 @@ class WorkflowSimulator:
                 )
             if not succs[v]:
                 total = np.maximum(total, end_v)
+        if tracing:
+            self._emit_traces_vectorized(order, steps, preds, prefetch, t0s, rec, end)
         self._req_k = n
         return total - t0s
+
+    def _emit_traces_vectorized(self, order, steps, preds, prefetch, t0s, rec, end):
+        """Sampled per-request traces from the retained vectorized arrays:
+        ``tracer.sample`` evenly spaced requests become ``obs`` traces in
+        the same schema as the scalar path — pure array indexing after the
+        fact, so the draw stream is untouched."""
+        names = [steps[v].name for v in order]
+        dup = len(set(names)) != len(names)
+
+        def label(v):
+            return f"{steps[v].name}@{v}" if dup else steps[v].name
+
+        tr = self.tracer
+        for k in self._trace_sample_idx(len(t0s)).tolist():
+            t0 = float(t0s[k])
+            trace = tr.begin(
+                name="sim-request",
+                t0=t0,
+                attrs={"backend": "numpy", "request_k": k},
+            )
+            t_sink = t0
+            for v in order:
+                step = steps[v]
+                poke_v, payload, mask, cold_draw, fetch, compute, edge_tr = rec[v]
+                poked = prefetch and not math.isinf(float(poke_v[k]))
+                cold = float(cold_draw[k]) if mask[k] else 0.0
+                fetch_k = float(fetch[k])
+                compute_k = float(compute[k])
+                end_k = float(end[v][k])
+                pay_k = float(payload[k])
+                p0 = float(poke_v[k]) if poked else pay_k
+                p1 = p0 + cold + fetch_k
+                start_k = end_k - compute_k
+                payload_t = {
+                    label(u): float(end[u][k]) + float(edge_tr[u][k])
+                    for u in preds[v]
+                }
+                transfer_s = {label(u): float(edge_tr[u][k]) for u in preds[v]}
+                node_span = trace.span(
+                    label(v),
+                    "node",
+                    t_start=min(p0, pay_k),
+                    attrs={
+                        "node": label(v),
+                        "platform": step.platform,
+                        "preds": [label(u) for u in preds[v]],
+                        "poke_t": p0 if poked else None,
+                        "prepare_t0": p0,
+                        "prepare_t1": p1,
+                        "cold_s": cold,
+                        "fetch_s": fetch_k,
+                        "compute_t0": start_k,
+                        "compute_s": compute_k,
+                        "payload_t": payload_t,
+                        "transfer_s": transfer_s,
+                    },
+                )
+                node_span.end(end_k)
+                t_sink = max(t_sink, end_k)
+            tr.finish(trace, t_end=t_sink)
 
     # -- one chain request (degenerate DAG, positional keys) -------------------
     def run_request(self, steps, t0: float, prefetch: bool) -> RequestTrace:
@@ -675,17 +833,23 @@ class WorkflowSimulator:
         simulator's construction seed rather than continuing the numpy
         stream)."""
         if backend == "jax":
-            totals = self.simulate_placements(spec, [spec.steps])[:, 0, :]
+            tracer = spec.tracer if spec.tracer is not None else self.tracer
+            totals = self.simulate_placements(spec, [spec.steps], _tracer=tracer)[
+                :, 0, :
+            ]
             return totals if spec.seeds is not None else totals[0]
         if backend not in _BACKENDS:
             raise ValueError(
                 f"unknown backend {backend!r}: expected one of {_BACKENDS}"
             )
         saved_drift, saved_tel = self.drift, self.telemetry
+        saved_tracer = self.tracer
         if spec.drift is not None:
             self.drift = spec.drift
         if spec.telemetry is not None:
             self.telemetry = spec.telemetry
+        if spec.tracer is not None:
+            self.tracer = spec.tracer
         try:
             order, smap, preds, succs = _spec_graph(spec.steps, spec.edges)
             t0s = np.arange(spec.n_requests) * spec.interarrival_s
@@ -706,6 +870,16 @@ class WorkflowSimulator:
             return out
         finally:
             self.drift, self.telemetry = saved_drift, saved_tel
+            self.tracer = saved_tracer
+
+    def _trace_sample_idx(self, n: int) -> np.ndarray:
+        """Which request indices of an n-request stream get a trace:
+        ``tracer.sample`` evenly spaced requests, chosen deterministically
+        (never from the experiment rng — sampling stays draw-neutral)."""
+        k = getattr(self.tracer, "sample", 8) or 0
+        if n == 0 or k <= 0:
+            return np.empty(0, dtype=int)
+        return np.unique(np.linspace(0, n - 1, min(k, n)).round().astype(int))
 
     def _run_stream(self, order, smap, preds, succs, t0s, prefetch, backend):
         """One request stream on the current rng: the scalar loop or the
@@ -715,14 +889,21 @@ class WorkflowSimulator:
         self._req_k = 0
         if backend == "numpy":
             return self._run_graph_vectorized(order, smap, preds, succs, t0s, prefetch)
+        sampled = (
+            frozenset(self._trace_sample_idx(len(t0s)).tolist())
+            if self.tracer is not None
+            else frozenset()
+        )
         out = np.empty(len(t0s))
         for k, t0 in enumerate(t0s):
-            out[k] = self._run_graph(order, smap, preds, succs, float(t0), prefetch)[4]
+            out[k] = self._run_graph(
+                order, smap, preds, succs, float(t0), prefetch, trace=k in sampled
+            )[4]
             self._req_k += 1
         return out
 
     def simulate_placements(
-        self, spec: ExperimentSpec, placements, dtype=np.float64
+        self, spec: ExperimentSpec, placements, dtype=np.float64, _tracer=None
     ) -> np.ndarray:
         """Score a whole candidate placement set under common random
         numbers in ONE jitted jax call: ``placements`` is a sequence of
@@ -733,7 +914,13 @@ class WorkflowSimulator:
         simulator's construction seed. Every placement sees the same
         per-seed draws, so differences between rows are placement effects,
         not sampling noise (the scorer's CRN property). ``dtype=np.float32``
-        halves memory traffic for big sweeps at ~1e-7 relative cost."""
+        halves memory traffic for big sweeps at ~1e-7 relative cost.
+
+        ``_tracer`` is the private hand-off from ``simulate(backend="jax",
+        tracer=...)``: sampled per-request ``obs`` traces are rebuilt
+        host-side for the FIRST seed and FIRST placement (the spec's own
+        steps when called through ``simulate``). Public placement-scoring
+        callers never pass it, so the scorer path stays pure."""
         from repro.core import jaxsim  # deferred: jax pays init cost
 
         telemetry = spec.telemetry if spec.telemetry is not None else self.telemetry
@@ -753,10 +940,115 @@ class WorkflowSimulator:
         seeds = spec.seeds if spec.seeds is not None else (self.seed,)
         drift = spec.drift if spec.drift is not None else self.drift
         t0s = np.arange(spec.n_requests) * spec.interarrival_s
-        return jaxsim.run_batched(
-            self, order, step_sets, preds, succs, t0s, spec.prefetch,
-            list(seeds), drift=drift, dtype=dtype,
+        if _tracer is None:
+            return jaxsim.run_batched(
+                self, order, step_sets, preds, succs, t0s, spec.prefetch,
+                list(seeds), drift=drift, dtype=dtype,
+            )
+        sample_idx = np.unique(
+            np.linspace(
+                0,
+                max(spec.n_requests - 1, 0),
+                min(getattr(_tracer, "sample", 8) or 0, spec.n_requests),
+            )
+            .round()
+            .astype(int)
         )
+        totals, sampled = jaxsim.run_batched(
+            self, order, step_sets, preds, succs, t0s, spec.prefetch,
+            list(seeds), drift=drift, dtype=dtype, sample_idx=sample_idx,
+        )
+        self._emit_traces_jax(
+            order,
+            step_sets[0],
+            preds,
+            spec.prefetch,
+            t0s,
+            sample_idx,
+            tuple(a[0, 0] for a in sampled),  # first seed, first placement
+            drift,
+            _tracer,
+            seed=seeds[0],
+        )
+        return totals
+
+    def _emit_traces_jax(
+        self, order, steps, preds, prefetch, t0s, sample_idx, sampled,
+        drift, tracer, seed,
+    ):
+        """Rebuild ``obs`` traces from the jax sweep's sampled scan ys
+        (payload / effective cold / fetch / compute / end, each (V, k)).
+        The draw-free pieces are recomputed host-side: the poke cascade is
+        ``t0 + depth * msg`` (static hop depths) and the transfer model is
+        deterministic given the endpoints (+ drift scales at the sampled
+        request index) — the exact arrays ``jaxsim._build`` feeds the
+        device."""
+        from repro.core import jaxsim
+
+        payload_a, cold_a, fetch_a, compute_a, end_a = sampled
+        depth = jaxsim._poke_depths(order, steps, preds)
+        idx = {v: i for i, v in enumerate(order)}
+        names = [steps[v].name for v in order]
+        dup = len(set(names)) != len(names)
+
+        def label(v):
+            return f"{steps[v].name}@{v}" if dup else steps[v].name
+
+        for j, k in enumerate(np.asarray(sample_idx).tolist()):
+            t0 = float(t0s[k])
+            trace = tracer.begin(
+                name="sim-request",
+                t0=t0,
+                attrs={"backend": "jax", "request_k": int(k), "seed": int(seed)},
+            )
+            t_sink = t0
+            for i, v in enumerate(order):
+                step = steps[v]
+                poked = prefetch and math.isfinite(depth[i])
+                poke_t = t0 + depth[i] * self.msg if poked else None
+                cold = float(cold_a[i, j])
+                fetch = float(fetch_a[i, j])
+                compute = float(compute_a[i, j])
+                end_k = float(end_a[i, j])
+                pay_k = float(payload_a[i, j])
+                p0 = poke_t if poked else pay_k
+                p1 = p0 + cold + fetch
+                start_k = end_k - compute
+                payload_t, transfer_s = {}, {}
+                for u in preds[v]:
+                    tr = self._transfer_s(
+                        self.platforms[steps[u].platform],
+                        self.platforms[step.platform],
+                    )
+                    if drift is not None:
+                        tr *= max(
+                            drift.scales(k, steps[u].platform)[1],
+                            drift.scales(k, step.platform)[1],
+                        )
+                    payload_t[label(u)] = float(end_a[idx[u], j]) + tr
+                    transfer_s[label(u)] = tr
+                node_span = trace.span(
+                    label(v),
+                    "node",
+                    t_start=min(p0, pay_k),
+                    attrs={
+                        "node": label(v),
+                        "platform": step.platform,
+                        "preds": [label(u) for u in preds[v]],
+                        "poke_t": poke_t,
+                        "prepare_t0": p0,
+                        "prepare_t1": p1,
+                        "cold_s": cold,
+                        "fetch_s": fetch,
+                        "compute_t0": start_k,
+                        "compute_s": compute,
+                        "payload_t": payload_t,
+                        "transfer_s": transfer_s,
+                    },
+                )
+                node_span.end(end_k)
+                t_sink = max(t_sink, end_k)
+            tracer.finish(trace, t_end=t_sink)
 
     # -- legacy wrappers (paper: 1 req/s for 30 min) ----------------------------
     def _shim_backend(self, vectorized, backend, default):

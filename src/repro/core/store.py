@@ -51,6 +51,7 @@ class ObjectStore:
         self._objects: dict = {}
         self._lock = threading.Lock()
         self.telemetry = None  # duck-typed TelemetryHub (repro.adapt)
+        self.tracer = None  # duck-typed obs.Tracer (span events)
         self.stats = {
             "puts": 0,
             "gets": 0,  # successful GETs (hits; a missing key raises)
@@ -79,6 +80,11 @@ class ObjectStore:
             time.sleep(dt)
         if self.telemetry is not None:
             self.telemetry.record_transfer(from_region or region, region, size, dt)
+        if self.tracer is not None:
+            self.tracer.event(
+                "store.put",
+                {"key": key, "region": region, "size_bytes": size, "modeled_s": dt},
+            )
         return dt
 
     def get(self, key: str, to_region: str) -> tuple:
@@ -113,6 +119,17 @@ class ObjectStore:
             time.sleep(dt)
         if self.telemetry is not None:
             self.telemetry.record_transfer(obj.region, to_region, obj.size_bytes, dt)
+        if self.tracer is not None:
+            self.tracer.event(
+                "store.get",
+                {
+                    "key": key,
+                    "from_region": obj.region,
+                    "to_region": to_region,
+                    "size_bytes": obj.size_bytes,
+                    "modeled_s": dt,
+                },
+            )
         return obj.value, dt
 
     def head(self, key: str) -> Optional[StoredObject]:

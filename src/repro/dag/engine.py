@@ -33,6 +33,7 @@ from __future__ import annotations
 import threading
 import time
 import uuid
+from contextlib import nullcontext
 from dataclasses import dataclass
 from typing import Callable, Optional
 
@@ -82,6 +83,10 @@ class _RunState:
         self.pending_sinks = set(spec.sinks())
         self.error: Optional[BaseException] = None
         self.done = threading.Event()
+        self.t0 = 0.0  # request clock zero (perf_counter, set by run)
+        self.trace = None  # obs.Trace when the deployment has a tracer
+        self.poke_t: dict = {}  # node -> absolute poke time
+        self.transfer_s: dict = {n.name: {} for n in spec.steps}  # dst->{src: s}
 
     def fail(self, exc: BaseException):
         with self.lock:
@@ -106,6 +111,7 @@ class DagDeployment:
         store: Optional[ObjectStore] = None,
         timing_mode: str = "eager",
         telemetry=None,
+        tracer=None,
     ):
         self.registry = registry or PlatformRegistry()
         self.store = store or ObjectStore(self.registry.network)
@@ -123,6 +129,12 @@ class DagDeployment:
             self.cache.telemetry = telemetry
             self.prefetcher.telemetry = telemetry
             self.store.telemetry = telemetry
+        # duck-typed obs.Tracer: same propagation, per-request span trees
+        self.tracer = tracer
+        if tracer is not None:
+            self.cache.tracer = tracer
+            self.prefetcher.tracer = tracer
+            self.store.tracer = tracer
 
     # -- deployer --------------------------------------------------------------
     def deploy(
@@ -167,6 +179,13 @@ class DagDeployment:
             self._resolve_step(s)
         state = _RunState(spec, payload)
         t0 = time.perf_counter()
+        state.t0 = t0
+        if self.tracer is not None:
+            # trace_id == request_id: one root span per request, carried by
+            # the state object through the whole poke/payload cascade
+            state.trace = self.tracer.begin(
+                name=f"request:{state.rid}", trace_id=state.rid, t0=t0
+            )
         for source in spec.sources():
             self._deliver(state, None, source, payload)
         if not state.done.wait(timeout_s):
@@ -174,12 +193,16 @@ class DagDeployment:
                 f"request {state.rid} stalled; fired={sorted(state.fired)}"
             )
         if state.error is not None:
+            if state.trace is not None:
+                state.trace.root.attrs["error"] = repr(state.error)
+                self.tracer.finish(state.trace)
             raise state.error
         outs = state.outputs
         outputs = outs[next(iter(outs))] if len(outs) == 1 else dict(outs)
-        return DagResult(
-            state.rid, outputs, dict(state.timeline), time.perf_counter() - t0
-        )
+        t_end = time.perf_counter()
+        if state.trace is not None:
+            self.tracer.finish(state.trace, t_end=t_end)
+        return DagResult(state.rid, outputs, dict(state.timeline), t_end - t0)
 
     def report(self) -> dict:
         """ONE merged runtime-stats surface (locked snapshots throughout):
@@ -201,6 +224,9 @@ class DagDeployment:
         }
         if self.telemetry is not None:
             out["telemetry"] = self.telemetry.snapshot()
+        metrics = getattr(self.tracer, "metrics", None)
+        if metrics is not None:
+            out["metrics"] = metrics.snapshot()
         return out
 
     def shutdown(self):
@@ -228,14 +254,38 @@ class DagDeployment:
             t0 = time.perf_counter()
             step = state.spec.node(node)
             fn = self._resolve_step(step)
-            warm_fut = None
-            if fn.compile_fn is not None and fn.abstract_args is not None:
-                warm_fut = self.cache.warm(
-                    fn.name, fn.platform.name, fn.compile_fn, fn.abstract_args
+            with state.lock:
+                state.poke_t[node] = t0
+            poke_span = None
+            if state.trace is not None:
+                poke_span = state.trace.span(
+                    f"poke:{node}",
+                    "poke",
+                    t_start=t0,
+                    attrs={
+                        "node": node,
+                        "platform": step.platform,
+                        "delay_applied_s": delay_applied,
+                    },
                 )
-            fetch_futs = {}
-            if step.data_deps:
-                fetch_futs = self.prefetcher.start(step.data_deps, fn.platform.region)
+            ctx = (
+                self.tracer.bind(poke_span)
+                if self.tracer is not None and poke_span is not None
+                else nullcontext()
+            )
+            with ctx:
+                warm_fut = None
+                if fn.compile_fn is not None and fn.abstract_args is not None:
+                    warm_fut = self.cache.warm(
+                        fn.name, fn.platform.name, fn.compile_fn, fn.abstract_args
+                    )
+                fetch_futs = {}
+                if step.data_deps:
+                    fetch_futs = self.prefetcher.start(
+                        step.data_deps, fn.platform.region
+                    )
+            if poke_span is not None:
+                poke_span.end()
             with state.lock:
                 state.poked[node] = (warm_fut, fetch_futs, t0, delay_applied)
             with self._stats_lock:
@@ -283,15 +333,37 @@ class DagDeployment:
         try:
             dst_plat = self.registry.get(state.spec.node(dst).platform)
             src_plat = self.registry.get(state.spec.node(src).platform)
-            if not (dst_plat.allows_sync and dst_plat.native_prefetch):
-                # public-cloud path: buffer through the object store, one
-                # key per edge; delete after the GET (no fan-in leak)
-                key = f"__payload__/{state.rid}/{src}->{dst}"
-                self.store.put(key, value, dst_plat.region, from_region=src_plat.region)
-                value, _ = self.store.get(key, dst_plat.region)
-                self.store.delete(key)
-                with self._stats_lock:
-                    self.stats["buffered_edges"] += 1
+            t0 = time.perf_counter()
+            span = None
+            if state.trace is not None:
+                span = state.trace.span(
+                    f"transfer:{src}->{dst}",
+                    "transfer",
+                    t_start=t0,
+                    attrs={"src": src, "dst": dst, "platform": dst_plat.name},
+                )
+            ctx = (
+                self.tracer.bind(span)
+                if self.tracer is not None and span is not None
+                else nullcontext()
+            )
+            with ctx:
+                if not (dst_plat.allows_sync and dst_plat.native_prefetch):
+                    # public-cloud path: buffer through the object store, one
+                    # key per edge; delete after the GET (no fan-in leak)
+                    key = f"__payload__/{state.rid}/{src}->{dst}"
+                    self.store.put(
+                        key, value, dst_plat.region, from_region=src_plat.region
+                    )
+                    value, _ = self.store.get(key, dst_plat.region)
+                    self.store.delete(key)
+                    with self._stats_lock:
+                        self.stats["buffered_edges"] += 1
+            dt = time.perf_counter() - t0
+            if span is not None:
+                span.end()
+            with state.lock:
+                state.transfer_s[dst][src] = dt
             self._deliver(state, src, dst, value)
         except BaseException as exc:
             state.fail(exc)
@@ -302,6 +374,22 @@ class DagDeployment:
         fn = self._resolve_step(step)
         preds = spec.predecessors(node)
         timeline = {}
+        t_fire = time.perf_counter()
+        node_span = None
+        if state.trace is not None:
+            with state.lock:
+                poke_t = state.poke_t.get(node)
+            node_span = state.trace.span(
+                node,
+                "node",
+                t_start=t_fire,
+                attrs={
+                    "node": node,
+                    "platform": step.platform,
+                    "preds": list(preds),
+                    "poke_t": poke_t,
+                },
+            )
 
         # poke successors NOW (as early as possible; the learned controller
         # may delay, per edge). The cascade usually got there first — _poke
@@ -318,42 +406,95 @@ class DagDeployment:
 
             self.registry.executor(step.platform).submit(do_poke)
 
-        # cold start (compile) — hidden iff this node was poked
-        t0 = time.perf_counter()
+        # cold start (compile) — hidden iff this node was poked. The warm
+        # and fetch windows here are the EXPOSED waits: the background work
+        # started at the poke, so joining it measures exactly what the
+        # critical path saw.
+        prepare_t0 = time.perf_counter()
+        t0 = prepare_t0
         with state.lock:
             poked = state.poked.pop(node, None)
-        if fn.compile_fn is not None and fn.abstract_args is not None:
-            self.cache.get(fn.name, fn.platform.name, fn.compile_fn, fn.abstract_args)
+        warm_span = None
+        if node_span is not None:
+            warm_span = state.trace.span(
+                f"warm:{node}",
+                "warm",
+                parent=node_span,
+                t_start=t0,
+                attrs={"node": node, "platform": step.platform},
+            )
+        ctx = (
+            self.tracer.bind(warm_span)
+            if self.tracer is not None and warm_span is not None
+            else nullcontext()
+        )
+        with ctx:
+            if fn.compile_fn is not None and fn.abstract_args is not None:
+                self.cache.get(
+                    fn.name, fn.platform.name, fn.compile_fn, fn.abstract_args
+                )
         timeline["warm_s"] = time.perf_counter() - t0
+        if warm_span is not None:
+            warm_span.end()
 
         # data deps: join prefetch futures, or fetch cold
         t0 = time.perf_counter()
-        if poked is not None and poked[1]:
-            data, exposed, modeled = self.prefetcher.join(poked[1])
-            # per-edge slack: each predecessor's payload arrival stamp vs
-            # this node's prepare, shifted back by the applied poke delay so
-            # the controller sees the gap relative to the undelayed poke
-            now = time.perf_counter()
-            with state.lock:
-                arrivals = dict(state.arrivals.get(node, {}))
-            for u in preds:
-                self.timing.record_slack(
-                    u,
-                    node,
-                    (arrivals.get(u, now) - poked[2]) - modeled + poked[3],
+        fetch_span = None
+        if node_span is not None:
+            fetch_span = state.trace.span(
+                f"fetch:{node}",
+                "fetch",
+                parent=node_span,
+                t_start=t0,
+                attrs={"node": node, "platform": step.platform},
+            )
+        ctx = (
+            self.tracer.bind(fetch_span)
+            if self.tracer is not None and fetch_span is not None
+            else nullcontext()
+        )
+        with ctx:
+            if poked is not None and poked[1]:
+                data, exposed, modeled = self.prefetcher.join(poked[1])
+                # per-edge slack: each predecessor's payload arrival stamp vs
+                # this node's prepare, shifted back by the applied poke delay
+                # so the controller sees the gap relative to the undelayed
+                # poke
+                now = time.perf_counter()
+                with state.lock:
+                    arrivals = dict(state.arrivals.get(node, {}))
+                for u in preds:
+                    self.timing.record_slack(
+                        u,
+                        node,
+                        (arrivals.get(u, now) - poked[2]) - modeled + poked[3],
+                    )
+            elif step.data_deps:
+                data, _ = self.prefetcher.fetch_blocking(
+                    step.data_deps, fn.platform.region
                 )
-        elif step.data_deps:
-            data, _ = self.prefetcher.fetch_blocking(step.data_deps, fn.platform.region)
-        else:
-            data = {}
-        timeline["fetch_s"] = time.perf_counter() - t0
+            else:
+                data = {}
+        prepare_t1 = time.perf_counter()
+        timeline["fetch_s"] = prepare_t1 - t0
+        if fetch_span is not None:
+            fetch_span.end(prepare_t1)
         self.timing.record_prepare(step.name, timeline["warm_s"] + timeline["fetch_s"])
 
         # assemble the input: client payload / unwrapped single pred /
         # fan-in dict keyed by predecessor name
         with state.lock:
             buf = state.buffers.pop(node, {})
-            state.arrivals.pop(node, None)
+            payload_t = state.arrivals.pop(node, {})
+            edge_transfer = dict(state.transfer_s.get(node, {}))
+            poke_ref = state.poke_t.get(node)
+        # per-edge poke-to-payload wait: how long after this node's poke
+        # (request start when never poked) each predecessor payload landed
+        wait_ref = poke_ref if poke_ref is not None else state.t0
+        timeline["payload_wait_s"] = {
+            u: payload_t[u] - wait_ref for u in preds if u in payload_t
+        }
+        timeline["transfer_s"] = edge_transfer
         if not preds:
             payload = state.payload
         elif len(preds) == 1:
@@ -365,9 +506,35 @@ class DagDeployment:
 
         # handler
         t0 = time.perf_counter()
+        compute_span = None
+        if node_span is not None:
+            compute_span = state.trace.span(
+                f"compute:{node}",
+                "compute",
+                parent=node_span,
+                t_start=t0,
+                attrs={"node": node, "platform": step.platform},
+            )
         out = fn.wrapper(payload, data)
-        dt = time.perf_counter() - t0
+        t1 = time.perf_counter()
+        dt = t1 - t0
         timeline["compute_s"] = dt
+        if compute_span is not None:
+            compute_span.end(t1)
+        if node_span is not None:
+            node_span.attrs.update(
+                {
+                    "prepare_t0": prepare_t0,
+                    "prepare_t1": prepare_t1,
+                    "cold_s": timeline["warm_s"],
+                    "fetch_s": timeline["fetch_s"],
+                    "compute_t0": t0,
+                    "compute_s": dt,
+                    "payload_t": dict(payload_t),
+                    "transfer_s": dict(edge_transfer),
+                }
+            )
+            node_span.end(t1)
         self.timing.record_compute(step.name, dt)
         if self.telemetry is not None:
             self.telemetry.record_compute(step.name, fn.platform.name, dt)

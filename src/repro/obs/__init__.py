@@ -1,0 +1,37 @@
+"""repro.obs — per-request tracing, histogram metrics, critical-path
+attribution, and Perfetto export.
+
+The observability layer over the GeoFF engine and simulator: a ``Tracer``
+collects per-request span trees from the real DAG engine and from all
+three simulator backends in one schema, ``MetricsRegistry`` keeps bounded
+log-bucketed latency histograms (p50/p95/p99), ``extract_critical_path``
+attributes end-to-end latency to cold/fetch/compute/transfer/poke-slack,
+and ``write_chrome_trace`` exports ``chrome://tracing`` / Perfetto JSON.
+``instrument(deployment)`` wires a tracer into a live deployment the same
+way ``repro.adapt.attach`` wires telemetry.
+"""
+
+from repro.obs.critical_path import (
+    BUCKETS,
+    CriticalPath,
+    Segment,
+    extract_critical_path,
+)
+from repro.obs.metrics import LogHistogram, MetricsRegistry
+from repro.obs.perfetto import to_chrome_trace, write_chrome_trace
+from repro.obs.trace import Span, Trace, Tracer, instrument
+
+__all__ = [
+    "BUCKETS",
+    "CriticalPath",
+    "LogHistogram",
+    "MetricsRegistry",
+    "Segment",
+    "Span",
+    "Trace",
+    "Tracer",
+    "extract_critical_path",
+    "instrument",
+    "to_chrome_trace",
+    "write_chrome_trace",
+]

@@ -1,0 +1,140 @@
+"""Bounded log-bucketed latency histograms (the tail side of telemetry).
+
+``repro.adapt.TelemetryHub`` keeps EWMAs — the right shape for placement
+cost cells, and the wrong shape for "why was request #4812 slow?": an EWMA
+cannot say p99. The FaaS measurement literature (Characterizing FaaS
+Workflows on Public Clouds, PAPERS.md) attributes tail latency per
+percentile, so ``repro.obs`` keeps full distributions — as histograms with
+geometrically spaced buckets, which cost a fixed few hundred ints per
+series no matter how many observations land (a long-lived deployment must
+never grow per-request state).
+
+``LogHistogram`` covers 1 microsecond to ~1 hour in 160 buckets at 15%
+relative width: quantiles interpolate inside the winning bucket, so a
+reported p99 is within one bucket width (~15%) of the true order
+statistic — tight enough to rank and alert on, bounded enough to keep
+forever. ``MetricsRegistry`` is the named collection the engine, simulator
+and tracer feed; ``DagDeployment.report()`` merges its snapshot next to the
+counter/EWMA surfaces.
+"""
+
+from __future__ import annotations
+
+import math
+import threading
+
+
+class LogHistogram:
+    """Fixed-size histogram with geometrically spaced bucket edges.
+
+    Bucket ``i`` (0-based) covers ``[min_value * base**i,
+    min_value * base**(i+1))``; one underflow and one overflow bucket
+    bracket the range, so ``observe`` never fails and memory never grows.
+    """
+
+    __slots__ = ("base", "min_value", "n_buckets", "counts", "count", "sum", "max")
+
+    def __init__(
+        self, base: float = 1.15, min_value: float = 1e-6, n_buckets: int = 160
+    ):
+        self.base = base
+        self.min_value = min_value
+        self.n_buckets = n_buckets
+        self.counts = [0] * (n_buckets + 2)  # [underflow, buckets..., overflow]
+        self.count = 0
+        self.sum = 0.0
+        self.max = 0.0
+
+    def _bucket(self, x: float) -> int:
+        if x < self.min_value:
+            return 0
+        i = int(math.log(x / self.min_value) / math.log(self.base))
+        return min(i, self.n_buckets) + 1
+
+    def observe(self, x: float):
+        x = float(x)
+        self.counts[self._bucket(x)] += 1
+        self.count += 1
+        self.sum += x
+        if x > self.max:
+            self.max = x
+
+    def _edge(self, i: int) -> float:
+        """Lower edge of bucket slot ``i`` (slot 0 is the underflow)."""
+        if i <= 0:
+            return 0.0
+        return self.min_value * self.base ** (i - 1)
+
+    def quantile(self, q: float) -> float:
+        """The q-quantile by rank walk + geometric interpolation inside the
+        winning bucket — exact to one bucket width (~``base - 1`` relative).
+        0.0 before any observation."""
+        if self.count == 0:
+            return 0.0
+        rank = q * (self.count - 1)
+        seen = 0
+        for i, c in enumerate(self.counts):
+            if c == 0:
+                continue
+            if seen + c > rank:
+                frac = (rank - seen + 0.5) / c
+                lo = self._edge(i)
+                hi = self._edge(i + 1) if i <= self.n_buckets else self.max
+                if lo <= 0.0:
+                    return min(hi, self.max)
+                return min(lo * (hi / lo) ** min(max(frac, 0.0), 1.0), self.max)
+            seen += c
+        return self.max
+
+    def snapshot(self) -> dict:
+        return {
+            "count": self.count,
+            "sum_s": self.sum,
+            "mean_s": self.sum / self.count if self.count else 0.0,
+            "p50_s": self.quantile(0.50),
+            "p95_s": self.quantile(0.95),
+            "p99_s": self.quantile(0.99),
+            "max_s": self.max,
+        }
+
+
+class MetricsRegistry:
+    """Thread-safe named histogram collection, bounded in series count.
+
+    Producers call ``observe(name, seconds)``; the name vocabulary is
+    ``<signal>/<where>`` (e.g. ``compute_s/ocr@gcf``,
+    ``transfer_s/eu->us``). Beyond ``max_series`` distinct names, new
+    series are dropped and counted in ``dropped_series`` — a runaway label
+    cardinality must degrade reporting, never memory.
+    """
+
+    def __init__(self, max_series: int = 512):
+        self.max_series = max_series
+        self._lock = threading.Lock()
+        self._hists: dict = {}
+        self.dropped_series = 0
+
+    def observe(self, name: str, value: float):
+        with self._lock:
+            h = self._hists.get(name)
+            if h is None:
+                if len(self._hists) >= self.max_series:
+                    self.dropped_series += 1
+                    return
+                h = self._hists[name] = LogHistogram()
+            h.observe(value)
+
+    def quantiles(self, name: str) -> tuple:
+        """(p50, p95, p99) for one series — zeros when unobserved."""
+        with self._lock:
+            h = self._hists.get(name)
+            if h is None:
+                return (0.0, 0.0, 0.0)
+            return (h.quantile(0.50), h.quantile(0.95), h.quantile(0.99))
+
+    def snapshot(self) -> dict:
+        with self._lock:
+            out = {name: h.snapshot() for name, h in sorted(self._hists.items())}
+            if self.dropped_series:
+                out["__dropped_series__"] = self.dropped_series
+            return out

@@ -1,0 +1,279 @@
+"""repro.obs: histograms, tracer structure, critical-path extraction,
+Perfetto export, and the simulator's trace emission on all three backends
+— including the draw-neutrality guarantee (tracing must never consume or
+reorder a single rng draw)."""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import simulator as sm
+from repro.obs import (
+    BUCKETS,
+    LogHistogram,
+    MetricsRegistry,
+    Tracer,
+    extract_critical_path,
+    to_chrome_trace,
+)
+
+
+# ---------------------------------------------------------------------------
+# LogHistogram / MetricsRegistry
+# ---------------------------------------------------------------------------
+def test_histogram_quantiles_within_bucket_error():
+    h = LogHistogram()
+    rng = np.random.default_rng(0)
+    xs = rng.lognormal(mean=-2.0, sigma=0.8, size=4000)
+    for x in xs:
+        h.observe(float(x))
+    for q in (0.5, 0.95, 0.99):
+        exact = float(np.quantile(xs, q))
+        got = h.quantile(q)
+        # log-bucketed: relative error bounded by one bucket width (15%)
+        assert abs(got - exact) / exact < 0.16, (q, got, exact)
+    snap = h.snapshot()
+    assert snap["count"] == 4000
+    assert snap["sum_s"] == pytest.approx(float(xs.sum()), rel=1e-9)
+    assert snap["p99_s"] <= snap["max_s"] == pytest.approx(float(xs.max()))
+
+
+def test_histogram_empty_and_tiny_values():
+    h = LogHistogram()
+    assert h.quantile(0.5) == 0.0
+    h.observe(0.0)  # underflow slot, not a crash
+    h.observe(1e-9)
+    assert h.snapshot()["count"] == 2
+
+
+def test_registry_caps_series_and_reports_drops():
+    reg = MetricsRegistry(max_series=4)
+    for i in range(8):
+        reg.observe(f"s/{i}", 0.1)
+    snap = reg.snapshot()
+    assert snap["__dropped_series__"] == 4
+    assert len([k for k in snap if not k.startswith("__")]) == 4
+    p50, p95, p99 = reg.quantiles("s/0")
+    assert p50 > 0 and p50 <= p95 <= p99
+
+
+# ---------------------------------------------------------------------------
+# Tracer structure
+# ---------------------------------------------------------------------------
+def test_tracer_span_tree_and_events():
+    tr = Tracer(metrics=MetricsRegistry())
+    t = tr.begin(name="req", t0=0.0)
+    node = t.span("node:a", kind="node", t_start=0.0, attrs={"node": "a"})
+    assert tr.current_span() is None
+    tr.event("ignored", {})  # unbound: silent no-op
+    with tr.bind(node):
+        assert tr.current_span() is node
+        tr.event("prefetch.done", {"key": "k"})
+    assert tr.current_span() is None
+    node.end(0.5)
+    tr.finish(t, t_end=0.5)
+    assert tr.last() is t
+    assert t.root.trace_id == node.trace_id
+    assert node.parent_id == t.root.span_id
+    assert [name for _t, name, _a in node.events] == ["prefetch.done"]
+    # finish fed the span durations into the metrics registry
+    assert tr.metrics.quantiles("node_s/a")[0] > 0
+    tr.record_event("recompose.decision", {"outcome": "swap"})
+    assert tr.events[-1][1] == "recompose.decision"
+
+
+def test_tracer_ring_is_bounded():
+    tr = Tracer(max_traces=4)
+    for k in range(10):
+        tr.finish(tr.begin(name=f"r{k}", t0=0.0), t_end=1.0)
+    assert len(tr.traces()) == 4
+    assert tr.last().root.name == "r9"
+
+
+# ---------------------------------------------------------------------------
+# critical path: hand-built exact case
+# ---------------------------------------------------------------------------
+def _node(trace, name, **attrs):
+    base = {
+        "node": name,
+        "platform": "p",
+        "preds": tuple(attrs.get("payload_t") or ()),
+        "poke_t": None,
+        "prepare_t0": None,
+        "prepare_t1": None,
+        "cold_s": 0.0,
+        "fetch_s": 0.0,
+        "compute_s": 0.0,
+        "compute_t0": None,
+        "payload_t": {},
+        "transfer_s": {},
+    }
+    base.update(attrs)
+    s = trace.span(
+        f"node:{name}", kind="node", t_start=base.get("t_start", 0.0), attrs=base
+    )
+    s.end(base["t_end"])
+    return s
+
+
+def test_critical_path_exact_two_node_chain():
+    tr = Tracer()
+    t = tr.begin(name="req", t0=0.0)
+    _node(
+        t, "a", poke_t=0.0, prepare_t0=0.0, prepare_t1=0.3, cold_s=0.1,
+        fetch_s=0.2, compute_t0=0.3, compute_s=0.2, t_start=0.0, t_end=0.5,
+    )
+    _node(
+        t, "b", poke_t=0.0, prepare_t0=0.0, prepare_t1=0.25, cold_s=0.05,
+        fetch_s=0.2, compute_t0=0.7, compute_s=0.3,
+        payload_t={"a": 0.7}, transfer_s={"a": 0.2}, t_start=0.0, t_end=1.0,
+    )
+    tr.finish(t, t_end=1.0)
+    cp = extract_critical_path(t)
+    assert cp.nodes == ["a", "b"]
+    att = cp.attribution
+    assert att["compute"] == pytest.approx(0.5)
+    assert att["transfer"] == pytest.approx(0.2)
+    assert att["fetch"] == pytest.approx(0.2)
+    assert att["cold"] == pytest.approx(0.1)
+    assert att["poke_slack"] == pytest.approx(0.0, abs=1e-12)
+    assert sum(att.values()) == pytest.approx(cp.total_s) == pytest.approx(1.0)
+    # segments tile [t0, sink_end] without gaps or overlaps
+    segs = sorted(cp.segments, key=lambda s: s.t0)
+    for s0, s1 in zip(segs, segs[1:]):
+        assert s1.t0 == pytest.approx(s0.t1, abs=1e-12)
+
+
+def test_critical_path_prepare_bound_terminates_in_poke_slack():
+    """A node whose prepare window gates the start and began at its poke
+    time attributes the pre-poke idle to poke_slack and stops walking."""
+    tr = Tracer()
+    t = tr.begin(name="req", t0=0.0)
+    _node(
+        t, "x", poke_t=0.2, prepare_t0=0.2, prepare_t1=0.8, cold_s=0.4,
+        fetch_s=0.2, compute_t0=0.8, compute_s=0.2, t_start=0.2, t_end=1.0,
+    )
+    tr.finish(t, t_end=1.0)
+    att = extract_critical_path(t).attribution
+    assert att["compute"] == pytest.approx(0.2)
+    assert att["cold"] == pytest.approx(0.4)
+    assert att["fetch"] == pytest.approx(0.2)
+    assert att["poke_slack"] == pytest.approx(0.2)  # t0 -> poke_t idle
+
+
+# ---------------------------------------------------------------------------
+# simulator trace emission, all three backends
+# ---------------------------------------------------------------------------
+def _spec(n=6, seeds=None, tracer=None, edges="dag"):
+    steps = sm.document_workflow_fig4()
+    e = (
+        (("check", "virus"), ("check", "ocr"), ("virus", "e_mail"), ("ocr", "e_mail"))
+        if edges == "dag"
+        else None
+    )
+    return sm.ExperimentSpec(
+        steps, edges=e, n_requests=n, seeds=seeds, tracer=tracer
+    )
+
+
+def _assert_trace_consistent(trace, rel=1e-6):
+    cp = extract_critical_path(trace)
+    assert cp.nodes, "empty critical path"
+    assert sum(cp.attribution.values()) == pytest.approx(cp.total_s, rel=1e-9)
+    assert cp.total_s == pytest.approx(trace.total_s, rel=rel)
+
+
+def test_scalar_traces_sum_to_total():
+    tracer = Tracer(sample=4)
+    simulator = sm.WorkflowSimulator(sm.paper_platforms(), seed=3)
+    totals = simulator.simulate(_spec(n=10, tracer=tracer), backend="scalar")
+    traces = tracer.traces()
+    assert 1 <= len(traces) <= 4
+    for trace in traces:
+        assert trace.root.attrs["backend"] == "scalar"
+        _assert_trace_consistent(trace)
+    ks = [t.root.attrs["request_k"] for t in traces]
+    assert any(
+        trace.total_s == pytest.approx(totals[k], rel=1e-12)
+        for k, trace in zip(ks, traces)
+    )
+
+
+def test_numpy_traces_sum_to_total():
+    tracer = Tracer(sample=4)
+    simulator = sm.WorkflowSimulator(sm.paper_platforms(), seed=3)
+    totals = simulator.simulate(_spec(n=12, tracer=tracer), backend="numpy")
+    traces = tracer.traces()
+    assert 1 <= len(traces) <= 4
+    for trace in traces:
+        assert trace.root.attrs["backend"] == "numpy"
+        k = trace.root.attrs["request_k"]
+        assert trace.total_s == pytest.approx(totals[k], rel=1e-9)
+        _assert_trace_consistent(trace)
+
+
+def test_jax_traces_sum_to_total():
+    tracer = Tracer(sample=3)
+    simulator = sm.WorkflowSimulator(sm.paper_platforms(), seed=3)
+    totals = simulator.simulate(
+        _spec(n=10, seeds=(0,), tracer=tracer), backend="jax"
+    )
+    traces = tracer.traces()
+    assert 1 <= len(traces) <= 3
+    for trace in traces:
+        assert trace.root.attrs["backend"] == "jax"
+        k = trace.root.attrs["request_k"]
+        assert trace.total_s == pytest.approx(totals[0, k], rel=1e-6)
+        _assert_trace_consistent(trace, rel=1e-5)
+
+
+@pytest.mark.parametrize("backend", ["scalar", "numpy", "jax"])
+def test_tracing_is_draw_neutral(backend):
+    """The load-bearing guarantee: attaching a tracer must not consume,
+    reorder, or perturb a single rng draw — totals are bit-for-bit
+    identical with tracing on and off."""
+    seeds = (0, 1) if backend == "jax" else None
+    off = sm.WorkflowSimulator(sm.paper_platforms(), seed=7).simulate(
+        _spec(n=16, seeds=seeds), backend=backend
+    )
+    sim = sm.WorkflowSimulator(sm.paper_platforms(), seed=7)
+    on = sim.simulate(_spec(n=16, seeds=seeds, tracer=Tracer()), backend=backend)
+    assert off.dtype == on.dtype
+    assert np.array_equal(off, on), "tracing perturbed the draws"
+    assert sim.tracer is None  # spec override restored after simulate
+
+
+def test_chain_spec_traces_too():
+    tracer = Tracer(sample=2)
+    simulator = sm.WorkflowSimulator(sm.paper_platforms(), seed=0)
+    simulator.simulate(_spec(n=4, tracer=tracer, edges=None), backend="scalar")
+    for trace in tracer.traces():
+        _assert_trace_consistent(trace)
+
+
+# ---------------------------------------------------------------------------
+# Perfetto export
+# ---------------------------------------------------------------------------
+def test_chrome_trace_is_valid_and_complete():
+    tracer = Tracer(sample=2)
+    simulator = sm.WorkflowSimulator(sm.paper_platforms(), seed=1)
+    simulator.simulate(_spec(n=4, tracer=tracer), backend="scalar")
+    tracer.record_event("recompose.decision", {"outcome": "swap"})
+    doc = to_chrome_trace(tracer.traces(), tracer=tracer)
+    text = json.dumps(doc)  # must be serializable as-is
+    doc2 = json.loads(text)
+    events = doc2["traceEvents"]
+    assert events and doc2["displayTimeUnit"] == "ms"
+    assert {e["ph"] for e in events} <= {"X", "i", "M"}
+    xs = [e for e in events if e["ph"] == "X"]
+    assert all(e["ts"] >= 0 and e["dur"] >= 0 for e in xs)
+    assert any(e["name"] == "recompose.decision" for e in events)
+    # one process per trace, metadata names present
+    pids = {e["pid"] for e in xs}
+    assert len(pids) == len(tracer.traces())
+    assert any(e["ph"] == "M" and e["name"] == "process_name" for e in events)
+
+
+def test_buckets_constant_matches_attribution_keys():
+    assert set(BUCKETS) == {"cold", "fetch", "compute", "transfer", "poke_slack"}

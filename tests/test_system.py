@@ -88,7 +88,13 @@ def test_timelines_cover_all_steps(system):
     r = dep.run(spec(), np.arange(8))
     assert set(r.timeline) == {"preprocess", "forward", "postprocess"}
     for t in r.timeline.values():
-        assert set(t) == {"warm_s", "fetch_s", "compute_s"}
+        assert set(t) == {
+            "warm_s",
+            "fetch_s",
+            "compute_s",
+            "payload_wait_s",
+            "transfer_s",
+        }
 
 
 def test_prefetch_stats_accumulate(system):

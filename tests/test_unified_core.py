@@ -71,9 +71,10 @@ def test_chain_api_matches_explicit_from_chain_run():
         r_dag = dag.run(DagSpec.from_chain(CHAIN), 2.0)
     assert r_chain.outputs == pytest.approx(r_dag.outputs)
     assert set(r_chain.timeline) == set(r_dag.timeline) == {"a", "b", "c"}
+    keys = {"warm_s", "fetch_s", "compute_s", "payload_wait_s", "transfer_s"}
     for step in r_chain.timeline:
-        assert set(r_chain.timeline[step]) == {"warm_s", "fetch_s", "compute_s"}
-        assert set(r_dag.timeline[step]) == {"warm_s", "fetch_s", "compute_s"}
+        assert set(r_chain.timeline[step]) == keys
+        assert set(r_dag.timeline[step]) == keys
 
 
 def test_chain_facade_records_per_edge_slack():
