@@ -15,6 +15,9 @@
   wrapper_overhead  §4.1 wrapper < 1 ms (real wall-clock)
   real_overlap      real-JAX latency hiding on this host (not simulated)
   pipeline_overlap  data-pipeline DoubleBuffer vs sync input
+  streaming         chunked pipelined data plane vs whole-object transfers
+                    (sim + real engine; asserts >= 20% p50 reduction on
+                    both, plus the P2P bypass beating the buffered path)
   timing            §5.5 eager vs learned poke timing (beyond-paper)
   roofline          per-cell three-term table from the dry-run artifacts
   trace_diff        sim-vs-real critical-path diff on the traced document
@@ -110,6 +113,7 @@ def main(argv=None) -> None:
         placement_bench,
         real_overlap,
         roofline,
+        streaming_bench,
         timing_bench,
         vecsim_bench,
         wrapper_overhead,
@@ -148,6 +152,7 @@ def main(argv=None) -> None:
             "pipeline_overlap",
             lambda: pipeline_overlap.main(steps=4 if args.quick else 8),
         ),
+        ("streaming", lambda: streaming_bench.main(quick=args.quick)),
         ("timing", timing_bench.main),
         ("roofline", roofline.main),
     ]

@@ -37,6 +37,7 @@ def observed_costs(
     regions: Optional[dict] = None,
     min_samples: int = 2,
     cold_starts: bool = True,
+    chunks: Optional[int] = None,
 ) -> PlacementCosts:
     """A ``PlacementCosts`` that prefers measurements over the model.
 
@@ -57,6 +58,16 @@ def observed_costs(
       ``TelemetryHub.transfer_s``: the observations are the workflow's own
       traffic, and linear rescaling explodes latency-dominated links) —
       else ``fallback.transfer_s``.
+    - ``transfer_fl(a, b, size)`` (only when ``chunks`` resolves > 1):
+      first/last-byte seconds for a pipelined edge, priced from the hub's
+      latency+bandwidth fit (``TelemetryHub.transfer_fit``) — first byte
+      pays latency + one chunk of bandwidth, last byte latency + the whole
+      object — falling back to ``fallback.transfer_fl`` then to the
+      degenerate ``(t, t)`` whole-transfer pair.
+
+    ``chunks`` defaults to ``fallback.chunks``; when the resolved value is
+    <= 1 no ``transfer_fl`` is attached, so existing callers get exactly
+    the costs they always did.
 
     ``regions`` defaults to the identity (platform name IS the region),
     which is what the simulator benches use.
@@ -92,9 +103,25 @@ def observed_costs(
         obs = hub.transfer_s(region(a), region(b), size_bytes, min_samples)
         return obs if obs is not None else fallback.transfer_s(a, b, size_bytes)
 
+    n_chunks = chunks if chunks is not None else fallback.chunks
+
+    def transfer_fl(a, b, size_bytes):
+        fit = hub.transfer_fit(region(a), region(b), max(min_samples, 4))
+        if fit is not None:
+            lat, per_byte = fit
+            first = lat + (size_bytes / n_chunks) * per_byte
+            last = lat + size_bytes * per_byte
+            return first, last
+        if fallback.transfer_fl is not None:
+            return fallback.transfer_fl(a, b, size_bytes)
+        t = transfer_s(a, b, size_bytes)
+        return t, t
+
     return PlacementCosts(
         fetch_s=fetch_s,
         compute_s=compute_s,
         transfer_s=transfer_s,
         payload_size=fallback.payload_size,
+        transfer_fl=transfer_fl if n_chunks > 1 else None,
+        chunks=n_chunks,
     )

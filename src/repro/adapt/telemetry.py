@@ -27,11 +27,17 @@ update one EWMA, so instrumentation stays off the critical path.
 from __future__ import annotations
 
 import threading
+from collections import deque
 from typing import Optional
 
 import numpy as np
 
 from repro.core.timing import EWMA
+
+# per-pair (bytes, seconds) sample window for the latency+bandwidth fit:
+# big enough to span the byte spread chunked + whole transfers produce,
+# small enough that the fit tracks drift
+_FIT_WINDOW = 64
 
 
 class TelemetryHub:
@@ -49,6 +55,8 @@ class TelemetryHub:
         self._cold: dict = {}  # (step, platform) -> cold-start count
         self._warm: dict = {}  # (step, platform) -> warm-hit count
         self._cold_s: dict = {}  # (step, platform) -> EWMA cold seconds
+        self._transfer_pts: dict = {}  # pair -> deque[(bytes, seconds)]
+        self._edge_b: dict = {}  # (src_step, dst_step) -> EWMA payload bytes
 
     def _ewma(self, table: dict, key) -> EWMA:
         # callers hold self._lock
@@ -73,6 +81,17 @@ class TelemetryHub:
         with self._lock:
             self._ewma(self._transfer_s, pair).update(seconds)
             self._ewma(self._transfer_b, pair).update(float(size_bytes))
+            pts = self._transfer_pts.get(pair)
+            if pts is None:
+                pts = self._transfer_pts[pair] = deque(maxlen=_FIT_WINDOW)
+            pts.append((float(size_bytes), float(seconds)))
+
+    def record_edge_bytes(self, src_step: str, dst_step: str, nbytes: float):
+        """Observed payload bytes on a DAG edge (EWMA). The engine's direct
+        P2P path consults this to decide, per edge, whether the payload is
+        small enough to skip the store round-trip."""
+        with self._lock:
+            self._ewma(self._edge_b, (src_step, dst_step)).update(float(nbytes))
 
     def record_cold_start(
         self, step: str, platform: str, seconds: Optional[float] = None
@@ -125,6 +144,10 @@ class TelemetryHub:
             self._ewma(self._transfer_b, pair).update_many(
                 float(size_bytes), seconds.size
             )
+            pts = self._transfer_pts.get(pair)
+            if pts is None:
+                pts = self._transfer_pts[pair] = deque(maxlen=_FIT_WINDOW)
+            pts.append((float(size_bytes), float(seconds.mean())))
 
     def record_cold_start_batch(
         self, step: str, platform: str, n_cold: int, n_warm: int, cold_seconds=()
@@ -170,6 +193,35 @@ class TelemetryHub:
             es = self._transfer_s.get(pair)
             return es.value if es is not None and es.n >= min_samples else None
 
+    def transfer_fit(
+        self, src_region: str, dst_region: str, min_samples: int = 4
+    ) -> Optional[tuple]:
+        """Latency + bandwidth decomposition of the pair's link, fit from
+        the recorded (bytes, seconds) points: returns ``(latency_s,
+        per_byte_s)`` with both terms clamped >= 0, or None when fewer than
+        ``min_samples`` points exist or the points carry no byte spread (a
+        degree-1 fit needs at least two distinct sizes). Chunked transfers
+        feed chunk-sized points alongside whole-object ones, which is what
+        gives the fit its spread — the same telemetry that prices whole
+        transfers prices pipelined first/last bytes."""
+        with self._lock:
+            pts = self._transfer_pts.get((src_region, dst_region))
+            if pts is None or len(pts) < min_samples:
+                return None
+            xs = np.array([p[0] for p in pts])
+            ys = np.array([p[1] for p in pts])
+        if float(xs.max() - xs.min()) <= 0.0:
+            return None
+        per_byte, lat = np.polyfit(xs, ys, 1)
+        return max(0.0, float(lat)), max(0.0, float(per_byte))
+
+    def edge_bytes(self, src_step: str, dst_step: str, min_samples: int = 1):
+        """Observed payload-bytes EWMA for a DAG edge, or None below
+        ``min_samples``."""
+        with self._lock:
+            e = self._edge_b.get((src_step, dst_step))
+            return e.value if e is not None and e.n >= min_samples else None
+
     def cold_start_rate(self, step: str, platform: str):
         """cold / (cold + warm) — None before any observation."""
         with self._lock:
@@ -208,6 +260,9 @@ class TelemetryHub:
                 },
                 "transfer_bytes": {
                     f"{a}->{b}": e.value for (a, b), e in self._transfer_b.items()
+                },
+                "edge_bytes": {
+                    f"{a}->{b}": e.value for (a, b), e in self._edge_b.items()
                 },
                 "cold_starts": {f"{s}@{p}": n for (s, p), n in self._cold.items()},
                 "warm_hits": {f"{s}@{p}": n for (s, p), n in self._warm.items()},

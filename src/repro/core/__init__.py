@@ -32,7 +32,7 @@ from repro.core.platform import (  # noqa: F401
     PlatformWrapper,
     bind_sharding,
 )
-from repro.core.store import ObjectStore  # noqa: F401
+from repro.core.store import ObjectStore, StreamConfig  # noqa: F401
 from repro.core.choreographer import Deployment, StepResult  # noqa: F401
 from repro.core.prewarm import CompileCache  # noqa: F401
 from repro.core.prefetch import DoubleBuffer, Prefetcher  # noqa: F401

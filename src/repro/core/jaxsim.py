@@ -98,7 +98,10 @@ class _Placement(NamedTuple):
     compute_sig: jax.Array  # (V,)
     poke_depth: jax.Array  # (V,) hops from a source via poke-enabled nodes
     #   (0.0 at sources, +inf where the cascade never reaches)
-    transfer: jax.Array  # (V, maxP) per-edge payload transfer (no drift)
+    transfer: jax.Array  # (V, maxP) per-edge payload FIRST-byte transfer
+    #   (== the whole-object transfer when streaming is off)
+    transfer_last: jax.Array  # (V, maxP) per-edge LAST-byte transfer
+    #   (only read by the recurrence when use_stream; == transfer otherwise)
     plat_idx: jax.Array  # (V,) int32 rows into the drift scale arrays
 
 
@@ -109,8 +112,8 @@ def _cold_mask(t0s, warm_end, cold_end, keep_warm, use_pallas):
 
 
 def _simulate_one(
-    placed, factors, graph, t0s, msg, prefetch, use_drift, use_pallas,
-    sample_idx=None,
+    placed, factors, graph, t0s, msg, inv_chunks, prefetch, use_drift,
+    use_pallas, use_stream, sample_idx=None,
 ):
     """One (seed, placement) request stream: the node-major recurrence of
     ``_run_graph_vectorized`` as a scan over topo order. ``factors`` are
@@ -140,6 +143,7 @@ def _simulate_one(
     fetch = draws(f_fetch, placed.fetch_sig, placed.fetch_median)
     compute = draws(f_compute, placed.compute_sig, placed.compute_median)
     transfer = placed.transfer[:, :, None]  # (V, maxP, 1)
+    transfer_last = placed.transfer_last[:, :, None] if use_stream else None
     if use_drift:
         # drift rescales AFTER sampling (the draw-neutral contract); a
         # degraded platform slows every link it terminates (max endpoint)
@@ -147,7 +151,10 @@ def _simulate_one(
         fetch = fetch * graph.fetch_scale[placed.plat_idx]
         tr_dst = graph.transfer_scale[placed.plat_idx]  # (V, n)
         tr_src = graph.transfer_scale[placed.plat_idx[graph.pred_idx]]
-        transfer = transfer * jnp.maximum(tr_src, tr_dst[:, None, :])
+        tr_sc = jnp.maximum(tr_src, tr_dst[:, None, :])
+        transfer = transfer * tr_sc
+        if use_stream:
+            transfer_last = transfer_last * tr_sc
 
     inf = jnp.array(jnp.inf, dtype)
     xs = (
@@ -163,8 +170,16 @@ def _simulate_one(
         compute,
         jnp.broadcast_to(transfer, (V,) + transfer.shape[1:]),
     )
+    if use_stream:
+        xs = xs + (
+            jnp.broadcast_to(transfer_last, (V,) + transfer_last.shape[1:]),
+        )
 
     def body(end_all, x):
+        # use_stream is static: the traced program is literally unchanged
+        # when it is False (no extra scan input, no extra ops)
+        if use_stream:
+            *x, tr_last_v = x
         (
             v,
             pidx,
@@ -178,9 +193,18 @@ def _simulate_one(
             compute_v,
             tr_v,
         ) = x
-        # payload join (max over in-edges of upstream end + transfer)
+        # payload join (max over in-edges of upstream end + transfer);
+        # with streaming the join gates on FIRST bytes and the last bytes
+        # bound the compute tail below
         arrivals = jnp.where(pmask[:, None], end_all[pidx] + tr_v, -inf)
         payload = jnp.where(is_src, t0s + msg / 2, jnp.max(arrivals, axis=0))
+        if use_stream:
+            arrivals_last = jnp.where(
+                pmask[:, None], end_all[pidx] + tr_last_v, -inf
+            )
+            payload_last = jnp.where(
+                is_src, t0s + msg / 2, jnp.max(arrivals_last, axis=0)
+            )
         # start/end under both cold hypotheses, then the cold scan
         if prefetch:
             poke_v = t0s + depth * msg
@@ -200,6 +224,12 @@ def _simulate_one(
             cold_start = warm_start + cold_v
         warm_end = warm_start + compute_v
         cold_end = cold_start + compute_v
+        if use_stream:
+            # per-chunk pipeline tail (closed form, matching the numpy
+            # path); sources have no in-edges, so their tail never binds
+            tail = jnp.where(is_src, -inf, payload_last + compute_v * inv_chunks)
+            warm_end = jnp.maximum(warm_end, tail)
+            cold_end = jnp.maximum(cold_end, tail)
         mask = _cold_mask(t0s, warm_end, cold_end, kw, use_pallas)
         end_v = jnp.where(mask, cold_end, warm_end)
         sink_row = jnp.where(is_sink, end_v, -inf)
@@ -222,10 +252,13 @@ def _simulate_one(
     return jnp.max(ys, axis=0) - t0s
 
 
-@partial(jax.jit, static_argnames=("prefetch", "use_drift", "use_pallas"))
+@partial(
+    jax.jit,
+    static_argnames=("prefetch", "use_drift", "use_pallas", "use_stream"),
+)
 def _sweep(
-    keys, placed, sigmas, graph, t0s, msg, sample_idx=None,
-    *, prefetch, use_drift, use_pallas,
+    keys, placed, sigmas, graph, t0s, msg, inv_chunks, sample_idx=None,
+    *, prefetch, use_drift, use_pallas, use_stream,
 ):
     """(seeds, placements, requests) totals in one compiled program. With
     ``sample_idx``, also the sampled per-node ys pytree (leaves gain the
@@ -251,8 +284,9 @@ def _sweep(
             table(key_compute, sigmas.compute),
         )
         return jax.vmap(
-            lambda p: _simulate_one(p, factors, graph, t0s, msg, prefetch,
-                                    use_drift, use_pallas, sample_idx)
+            lambda p: _simulate_one(p, factors, graph, t0s, msg, inv_chunks,
+                                    prefetch, use_drift, use_pallas,
+                                    use_stream, sample_idx)
         )(placed)
 
     return jax.vmap(per_seed)(keys)
@@ -275,10 +309,12 @@ def _poke_depths(order, steps, preds):
     return np.array([depth[v] for v in order])
 
 
-def _build(sim, order, step_sets, preds, succs, t0s, drift, dtype):
+def _build(sim, order, step_sets, preds, succs, t0s, drift, dtype, stream=None):
     """Host-side array construction (numpy). The transfer model is
-    evaluated through ``sim._transfer_s`` so subclasses that override it
-    (e.g. the scorer's cost-model simulator) feed this backend unchanged."""
+    evaluated through ``sim._transfer_s`` — or ``sim._transfer_fl`` when a
+    StreamConfig is given — so subclasses that override the whole-object
+    model (e.g. the scorer's cost-model simulator) feed this backend
+    unchanged."""
     f64 = dtype
     V = len(order)
     n = len(t0s)
@@ -312,6 +348,7 @@ def _build(sim, order, step_sets, preds, succs, t0s, drift, dtype):
             "compute_sigma": np.empty(V, f64),
             "poke_depth": _poke_depths(order, steps, preds).astype(f64),
             "transfer": np.zeros((V, max_p), f64),
+            "transfer_last": np.zeros((V, max_p), f64),
             "plat_idx": np.zeros(V, np.int32),
         }
         for i, v in enumerate(order):
@@ -326,12 +363,23 @@ def _build(sim, order, step_sets, preds, succs, t0s, drift, dtype):
             row["compute_sigma"][i] = step.compute.sigma
             row["plat_idx"][i] = plat_row[step.platform]
             for j, u in enumerate(preds[v]):
-                row["transfer"][i, j] = sim._transfer_s(
-                    sim.platforms[steps[u].platform], plat
-                )
+                src_plat = sim.platforms[steps[u].platform]
+                if stream is None:
+                    first = last = sim._transfer_s(src_plat, plat)
+                else:
+                    first, last = sim._transfer_fl(src_plat, plat)
+                row["transfer"][i, j] = first
+                row["transfer_last"][i, j] = last
         return row
 
-    all_rows = [placement_arrays(steps) for steps in step_sets]
+    # _transfer_fl reads sim.stream; pin it to THIS call's config for the
+    # duration of the host-side build (spec-level overrides), then restore
+    saved_stream = sim.stream
+    sim.stream = stream
+    try:
+        all_rows = [placement_arrays(steps) for steps in step_sets]
+    finally:
+        sim.stream = saved_stream
 
     def dedup_sigmas(name):
         """Distinct sigma values across ALL placements for one stream +
@@ -360,6 +408,7 @@ def _build(sim, order, step_sets, preds, succs, t0s, drift, dtype):
         compute_sig=comp_i,
         poke_depth=np.stack([r["poke_depth"] for r in all_rows]),
         transfer=np.stack([r["transfer"] for r in all_rows]),
+        transfer_last=np.stack([r["transfer_last"] for r in all_rows]),
         plat_idx=np.stack([r["plat_idx"] for r in all_rows]),
     )
     graph = _Graph(
@@ -375,7 +424,7 @@ def _build(sim, order, step_sets, preds, succs, t0s, drift, dtype):
 
 
 def run_batched(sim, order, step_sets, preds, succs, t0s, prefetch, seeds,
-                drift=None, dtype=np.float64, sample_idx=None):
+                drift=None, dtype=np.float64, sample_idx=None, stream=None):
     """The jax backend's one entry point: simulate every (seed, placement)
     pair of one workflow graph in a single compiled call.
 
@@ -399,6 +448,12 @@ def run_batched(sim, order, step_sets, preds, succs, t0s, prefetch, seeds,
     fetch, compute, end at the sampled requests) for host-side ``obs``
     trace reconstruction. The totals are computed by the identical
     arithmetic either way.
+
+    ``stream``: optional ``StreamConfig``. Splits every edge into a
+    (first_byte, last_byte) transfer pair host-side and — when chunks > 1
+    — adds the per-chunk pipeline tail to the recurrence (a static branch:
+    with ``stream=None`` the compiled program is unchanged). ``chunks=1``
+    keeps the whole-object recurrence, so totals stay bit-for-bit.
     """
     if drift is None:
         drift = sim.drift
@@ -425,9 +480,14 @@ def run_batched(sim, order, step_sets, preds, succs, t0s, prefetch, seeds,
             return empty, (z, z, z, z, z)
         return empty
     dtype = np.dtype(dtype).type
+    # the recurrence only changes when first != last bytes is possible;
+    # chunks=1 (even with P2P rerouting the transfer VALUES) keeps the
+    # whole-object scan — first == last there, so the tail never binds
+    use_stream = stream is not None and stream.chunks > 1
     with enable_x64():
         placed, sigmas, graph = _build(
-            sim, order, step_sets, preds, succs, t0s, drift, dtype
+            sim, order, step_sets, preds, succs, t0s, drift, dtype,
+            stream=stream,
         )
         # raw threefry key layout ([hi, lo] uint32 words of the seed) —
         # identical to stacking jax.random.PRNGKey(s), minus S dispatches
@@ -442,12 +502,14 @@ def run_batched(sim, order, step_sets, preds, succs, t0s, prefetch, seeds,
             graph,
             jnp.asarray(np.asarray(t0s, dtype)),
             jnp.asarray(dtype(sim.msg)),
+            jnp.asarray(dtype(1.0 / stream.chunks) if use_stream else dtype(1.0)),
             jnp.asarray(np.asarray(sample_idx, np.int32))
             if sample_idx is not None
             else None,
             prefetch=bool(prefetch),
             use_drift=drift is not None,
             use_pallas=jax.default_backend() == "tpu",
+            use_stream=use_stream,
         )
         if sample_idx is not None:
             totals, sampled = out

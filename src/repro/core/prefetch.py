@@ -20,13 +20,19 @@ from typing import Callable, Iterable, Optional
 
 import jax
 
-from repro.core.store import ObjectStore
+from repro.core.store import ObjectStore, StreamConfig
 from repro.core.workflow import DataRef
 
 
 class Prefetcher:
-    def __init__(self, store: ObjectStore, max_workers: int = 8):
+    def __init__(
+        self,
+        store: ObjectStore,
+        max_workers: int = 8,
+        stream: Optional[StreamConfig] = None,
+    ):
         self.store = store
+        self.stream = stream  # chunked fetches when set with chunks > 1
         self._pool = ThreadPoolExecutor(
             max_workers=max_workers, thread_name_prefix="prefetch"
         )
@@ -35,6 +41,8 @@ class Prefetcher:
             "cold_fetches": 0,
             "hidden_s": 0.0,
             "exposed_s": 0.0,
+            "streamed": 0,  # fetches that went through get_stream
+            "first_byte_s": 0.0,  # summed modeled time-to-first-chunk
         }
         self._lock = threading.Lock()
         self.telemetry = None  # duck-typed TelemetryHub (repro.adapt)
@@ -57,7 +65,26 @@ class Prefetcher:
                 tr.event("prefetch.start", {"key": ref.key, "to_region": to_region})
 
             def job(r=ref):
-                value, dt = self.store.get(r.key, to_region)
+                stream = self.stream
+                if stream is not None and stream.chunks > 1:
+                    # chunked fetch: the generator paces per wire chunk
+                    # (sleeping when the store enforces latency), so the
+                    # fetch overlaps whatever else runs on this pool —
+                    # same total seconds, earlier first byte
+                    value, dt, first = None, 0.0, None
+                    for v, cdt in self.store.get_stream(
+                        r.key, to_region, chunks=stream.chunks
+                    ):
+                        dt += cdt
+                        if first is None:
+                            first = dt
+                        if v is not None:
+                            value = v
+                    with self._lock:
+                        self.stats["streamed"] += 1
+                        self.stats["first_byte_s"] += first or 0.0
+                else:
+                    value, dt = self.store.get(r.key, to_region)
                 if device is not None and hasattr(value, "shape"):
                     value = jax.device_put(value, device)
                 if self.telemetry is not None:

@@ -30,7 +30,7 @@ from __future__ import annotations
 import itertools
 from collections import defaultdict
 from dataclasses import dataclass
-from typing import Callable
+from typing import Callable, Optional
 
 from repro.core.graph import graph_views
 from repro.core.workflow import StepSpec, WorkflowSpec
@@ -44,12 +44,22 @@ _EXHAUSTIVE_LIMIT = 20_000
 @dataclass(frozen=True)
 class PlacementCosts:
     """Cost model callbacks — wired to NetworkModel/ObjectLatency (sim) or
-    measured EWMA stats (runtime, core/timing.py)."""
+    measured EWMA stats (runtime, core/timing.py).
+
+    ``transfer_fl`` (optional) splits an edge into latency + bandwidth
+    terms: ``(platform_a, platform_b, size_bytes) -> (first_byte_s,
+    last_byte_s)``. When set, the cost recurrence and the placement DP
+    price pipelined edges — a successor starts on the first byte, and the
+    last byte only bounds the tail ``compute / chunks``. When None, both
+    components are ``transfer_s`` and every cost is exactly the
+    whole-object model's."""
 
     fetch_s: Callable  # (step_name, platform, data_deps) -> seconds
     compute_s: Callable  # (step_name, platform) -> seconds
     transfer_s: Callable  # (platform_a, platform_b, size_bytes) -> seconds
     payload_size: float = 1.5e6
+    transfer_fl: Optional[Callable] = None  # (a, b, size) -> (first, last)
+    chunks: int = 1  # wire chunks per edge (the streaming data plane)
 
 
 def exposed_fetch(fetch_s: float, window_s: float, prefetch: bool) -> float:
@@ -57,6 +67,19 @@ def exposed_fetch(fetch_s: float, window_s: float, prefetch: bool) -> float:
     if not prefetch:
         return fetch_s
     return max(0.0, fetch_s - window_s)
+
+
+def _edge_fl(costs: PlacementCosts, a, b) -> tuple:
+    """(first_byte_s, last_byte_s) of one placed edge — collapsing to the
+    whole-object transfer twice when no split model is attached."""
+    if costs.transfer_fl is not None:
+        return costs.transfer_fl(a, b, costs.payload_size)
+    t = costs.transfer_s(a, b, costs.payload_size)
+    return t, t
+
+
+def _inv_chunks(costs: PlacementCosts) -> float:
+    return 1.0 / max(1, costs.chunks)
 
 
 def _topo(nodes, edges):
@@ -69,6 +92,7 @@ def _topo(nodes, edges):
 def _dag_cost_views(nodes, pred, order, placement, costs, prefetch):
     """The critical-path recurrence over precomputed graph views (hoisted
     out of ``dag_cost`` so the exhaustive search sorts the graph once)."""
+    inv = _inv_chunks(costs)
     finish = {}
     total = 0.0
     for v in order:
@@ -76,13 +100,19 @@ def _dag_cost_views(nodes, pred, order, placement, costs, prefetch):
         s = nodes[v]
         f = costs.fetch_s(v, p, s.data_deps)
         c = costs.compute_s(v, p)
-        ready = 0.0
+        ready = 0.0  # first-byte join: gates prepare + start
+        ready_last = 0.0  # last-byte join: bounds the compute tail
         window = 0.0
         for u in pred[v]:
-            t = costs.transfer_s(placement[u], p, costs.payload_size)
-            ready = max(ready, finish[u] + t)
-            window = max(window, costs.compute_s(u, placement[u]) + t)
+            first, last = _edge_fl(costs, placement[u], p)
+            ready = max(ready, finish[u] + first)
+            ready_last = max(ready_last, finish[u] + last)
+            window = max(window, costs.compute_s(u, placement[u]) + first)
         finish[v] = ready + exposed_fetch(f, window, prefetch) + c
+        if pred[v]:
+            # per-chunk pipeline tail (never binds when first == last and
+            # chunks == 1: ready_last + c <= finish[v])
+            finish[v] = max(finish[v], ready_last + c * inv)
         total = max(total, finish[v])
     return total
 
@@ -90,14 +120,19 @@ def _dag_cost_views(nodes, pred, order, placement, costs, prefetch):
 def dag_cost(nodes, edges, placement, costs: PlacementCosts, prefetch=True) -> float:
     """Modeled end-to-end cost of a placed DAG: the critical-path recurrence
 
-        ready[v]  = max over preds u of finish[u] + transfer(p_u, p_v)
-        window[v] = max over preds u of compute_u + transfer(p_u, p_v)
-        finish[v] = ready[v] + exposed_fetch(fetch_v, window[v]) + compute_v
+        ready[v]  = max over preds u of finish[u] + first_byte(p_u, p_v)
+        window[v] = max over preds u of compute_u + first_byte(p_u, p_v)
+        finish[v] = max(ready[v] + exposed_fetch(fetch_v, window[v])
+                                 + compute_v,
+                        ready_last[v] + compute_v / chunks)
 
-    The window is the guaranteed poke-to-payload overlap for ``v``'s
-    pre-fetch (the cascade makes the true window larger, so this is the
-    same conservative criterion the chain DP used). ``chain_cost`` is this
-    recurrence on the degenerate chain graph."""
+    where ``ready_last`` joins last bytes. Without ``transfer_fl`` both
+    byte marks are ``transfer_s`` and the tail never binds, so this is
+    exactly the whole-object recurrence. The window is the guaranteed
+    poke-to-payload overlap for ``v``'s pre-fetch (the cascade makes the
+    true window larger, so this is the same conservative criterion the
+    chain DP used). ``chain_cost`` is this recurrence on the degenerate
+    chain graph."""
     pred, order = _topo(nodes, edges)
     return _dag_cost_views(nodes, pred, order, placement, costs, prefetch)
 
@@ -106,22 +141,27 @@ def dag_cost(nodes, edges, placement, costs: PlacementCosts, prefetch=True) -> f
 # exact placement: series-parallel DP with exhaustive fallback
 # ---------------------------------------------------------------------------
 # A table maps (source_platform, sink_platform) -> Pareto list of
-# (D, W, placement): D = max over s->t paths of transfers + INTERNAL node
-# costs (terminal node costs excluded; internal windows are fully determined
-# inside the subgraph), W = max over t's in-edges of compute_u + transfer
-# (t's prepare window contribution), placement = internal node assignments.
-# The final cost is increasing in D and nonincreasing in W, so an entry is
-# dominated iff another has D' <= D and W' >= W.
+# (D, W, R, placement): D = max over s->t paths of FIRST-byte transfers +
+# INTERNAL node costs (terminal node costs excluded; internal windows are
+# fully determined inside the subgraph), W = max over t's in-edges of
+# compute_u + first-byte transfer (t's prepare window contribution), R =
+# the same path max as D but joining LAST bytes into t (it bounds t's
+# compute tail under streaming; R == D whenever transfer_fl is unset),
+# placement = internal node assignments. The final cost is increasing in D
+# and R and nonincreasing in W, so an entry is dominated iff another has
+# D' <= D, R' <= R and W' >= W.
 
 
 def _pareto(entries):
-    entries.sort(key=lambda e: (e[0], -e[1]))
+    # dominance sweep: after sorting by (D, R, -W), an entry can only be
+    # dominated by an already-kept one (later entries never have both a
+    # smaller-or-equal D and R without sorting earlier)
+    entries.sort(key=lambda e: (e[0], e[2], -e[1]))
     kept = []
-    best_w = -float("inf")
-    for d, w, pl in entries:
-        if w > best_w:
-            kept.append((d, w, pl))
-            best_w = w
+    for d, w, r, pl in entries:
+        if any(kd <= d and kr <= r and kw >= w for kd, kw, kr, _ in kept):
+            continue
+        kept.append((d, w, r, pl))
     return kept
 
 
@@ -135,37 +175,44 @@ def _base_table(u, v, cand, costs):
     for pu in cand[u]:
         cu = costs.compute_s(u, pu)
         for pv in cand[v]:
-            tr = costs.transfer_s(pu, pv, costs.payload_size)
-            t[(pu, pv)] = [(tr, cu + tr, {})]
+            first, last = _edge_fl(costs, pu, pv)
+            t[(pu, pv)] = [(first, cu + first, last, {})]
     return t
 
 
 def _series(t1, t2, m, nodes, costs, prefetch):
     """Compose in-table ``t1`` (u->m) and out-table ``t2`` (m->w) over the
-    eliminated internal node ``m``; m's cost (with its window from t1's W)
-    joins the path term."""
+    eliminated internal node ``m``; m's finish — the max of the prepared
+    start plus compute (window from t1's W) and the last-byte tail — joins
+    both path terms. With R == D and chunks == 1 the tail never binds and
+    this is the classic 2-component fold."""
+    inv = _inv_chunks(costs)
     out = defaultdict(list)
     by_pm = defaultdict(list)
     for (pm, pw), entries in t2.items():
         by_pm[pm].append((pw, entries))
     for (pu, pm), e1 in t1.items():
         for pw, e2 in by_pm.get(pm, ()):
-            for d1, w1, pl1 in e1:
+            for d1, w1, r1, pl1 in e1:
                 cm = _node_cost(m, pm, w1, nodes, costs, prefetch)
-                for d2, w2, pl2 in e2:
-                    out[(pu, pw)].append((d1 + cm + d2, w2, {**pl1, **pl2, m: pm}))
+                fin = max(d1 + cm, r1 + costs.compute_s(m, pm) * inv)
+                for d2, w2, r2, pl2 in e2:
+                    out[(pu, pw)].append(
+                        (fin + d2, w2, fin + r2, {**pl1, **pl2, m: pm})
+                    )
     return {k: _pareto(v) for k, v in out.items()}
 
 
 def _parallel(t1, t2):
-    """Merge two tables between the same terminals: paths and window
-    contributions both combine by max (branches are disjoint)."""
+    """Merge two tables between the same terminals: paths (both byte
+    marks) and window contributions all combine by max (branches are
+    disjoint, and D/R are offsets from the same source finish)."""
     out = {}
     for key in t1.keys() & t2.keys():
         entries = [
-            (max(d1, d2), max(w1, w2), {**pl1, **pl2})
-            for d1, w1, pl1 in t1[key]
-            for d2, w2, pl2 in t2[key]
+            (max(d1, d2), max(w1, w2), max(r1, r2), {**pl1, **pl2})
+            for d1, w1, r1, pl1 in t1[key]
+            for d2, w2, r2, pl2 in t2[key]
         ]
         out[key] = _pareto(entries)
     return out
@@ -281,12 +328,16 @@ def place_dag(
         tables = [_base_table(a, b, cand, costs) for a, b in edges]
         table = _sp_reduce(list(edges), tables, s, t, graph_nodes, costs, prefetch)
         if table is not None:
+            inv = _inv_chunks(costs)
             best = None
             for (ps, pt), entries in table.items():
                 head = _node_cost(s, ps, 0.0, graph_nodes, costs, prefetch)
-                for d, w, pl in entries:
-                    tail = _node_cost(t, pt, w, graph_nodes, costs, prefetch)
-                    total = head + d + tail
+                for d, w, r, pl in entries:
+                    fin_t = max(
+                        d + _node_cost(t, pt, w, graph_nodes, costs, prefetch),
+                        r + costs.compute_s(t, pt) * inv,
+                    )
+                    total = head + fin_t
                     if best is None or total < best[0]:
                         best = (total, {**pl, s: ps, t: pt})
             placement.update(best[1])
@@ -324,6 +375,8 @@ def _chain_graph(spec: WorkflowSpec):
             compute_s=lambda i, p: costs.compute_s(steps[i].name, p),
             transfer_s=costs.transfer_s,
             payload_size=costs.payload_size,
+            transfer_fl=costs.transfer_fl,
+            chunks=costs.chunks,
         )
 
     return nodes, edges, by_name

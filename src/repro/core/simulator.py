@@ -22,6 +22,21 @@ chain deployer is a facade over the dataflow engine). Per request, with
     end[v]     = start[v] + compute_v
     total      = max over sinks of end[sink] - t0
 
+With a ``StreamConfig`` attached (the streaming data plane), each edge's
+transfer splits into a (first_byte, last_byte) pair: ``payload[v]`` —
+and therefore ``start[v]`` — gates on first bytes, while the last bytes
+bound the compute tail:
+
+    end[v] = max(start[v] + compute_v,
+                 payload_last[v] + compute_v / chunks)
+
+which is the closed form of the per-chunk pipeline (chunk i usable only
+after it arrives AND the previous chunk is processed, with the join's
+chunk arrivals evenly spaced between first and last byte) — the chunk
+inner loop is algebra, not a Python loop, so it vectorizes for free. At
+``chunks=1`` first == last and the recurrence is bit-for-bit the one
+above.
+
 ``run_request`` executes this on the degenerate chain graph — positionally,
 so the sampled trace is draw-for-draw what the pre-unification chain
 simulator produced. ``run_dag_request`` executes it on an explicit edge
@@ -89,6 +104,8 @@ from typing import Optional
 import numpy as np
 
 from repro.core.graph import graph_views
+from repro.core.store import StreamConfig  # noqa: F401  (re-export: the
+#   streaming data plane config is part of the simulator's surface too)
 
 
 # ---------------------------------------------------------------------------
@@ -233,21 +250,66 @@ class DriftSchedule:
 class ObjectLatency:
     """Object-store GET/PUT between regions: fixed per-op overhead + size/bw.
     Captures the paper's §4.4 observation that even a 256 KB cross-provider
-    S3 GET costs ~0.8 s (TLS + cross-region + S3 service latency)."""
+    S3 GET costs ~0.8 s (TLS + cross-region + S3 service latency).
+
+    ``p2p_overhead_*`` price the direct peer-to-peer payload path (one
+    function streaming to another over a socket, no store round-trip): the
+    per-op overhead drops to connection setup, the bandwidth terms stay."""
 
     def __init__(
-        self, overhead_same=0.03, overhead_cross=0.35, bw_same=50e6, bw_cross=8e6
+        self,
+        overhead_same=0.03,
+        overhead_cross=0.35,
+        bw_same=50e6,
+        bw_cross=8e6,
+        p2p_overhead_same=0.004,
+        p2p_overhead_cross=0.12,
     ):
         self.overhead_same = overhead_same
         self.overhead_cross = overhead_cross
         self.bw_same = bw_same
         self.bw_cross = bw_cross
+        self.p2p_overhead_same = p2p_overhead_same
+        self.p2p_overhead_cross = p2p_overhead_cross
 
     def op_s(self, src_region, dst_region, size_bytes):
         same = src_region == dst_region
         oh = self.overhead_same if same else self.overhead_cross
         bw = self.bw_same if same else self.bw_cross
         return oh + size_bytes / bw
+
+    def stream_pair_s(self, src_region, dst_region, size_bytes, chunks: int):
+        """(first_byte_s, last_byte_s) of a chunked store round-trip
+        (PUT src->dst + GET within dst). The first byte pays both hops'
+        per-op overheads on one chunk; the residual chunks then pipeline
+        through the bottleneck hop, so last = first + (chunks-1) * chunk /
+        min(bw). At ``chunks=1`` both components are exactly the
+        whole-object round-trip (same expression, same bits)."""
+        if chunks <= 1:
+            whole = self.op_s(src_region, dst_region, size_bytes) + self.op_s(
+                dst_region, dst_region, size_bytes
+            )
+            return whole, whole
+        chunk = size_bytes / chunks
+        first = self.op_s(src_region, dst_region, chunk) + self.op_s(
+            dst_region, dst_region, chunk
+        )
+        bw_hop1 = self.bw_same if src_region == dst_region else self.bw_cross
+        last = first + (chunks - 1) * chunk / min(bw_hop1, self.bw_same)
+        return first, last
+
+    def p2p_pair_s(self, src_region, dst_region, size_bytes, chunks: int):
+        """(first_byte_s, last_byte_s) of the direct peer-to-peer path:
+        one hop, connection-setup overhead instead of two store ops."""
+        same = src_region == dst_region
+        oh = self.p2p_overhead_same if same else self.p2p_overhead_cross
+        bw = self.bw_same if same else self.bw_cross
+        if chunks <= 1:
+            whole = oh + size_bytes / bw
+            return whole, whole
+        chunk = size_bytes / chunks
+        first = oh + chunk / bw
+        return first, first + (chunks - 1) * chunk / bw
 
 
 def _graph(steps, edges):
@@ -273,9 +335,10 @@ class ExperimentSpec:
     ``n_requests`` arrivals spaced ``interarrival_s`` apart. ``seeds`` is
     None for a single run on the simulator's own rng stream, or a sequence
     of seeds for a replicated sweep (one fresh stream per seed — rows of
-    the result). ``drift`` / ``telemetry`` / ``tracer`` override the
-    simulator's attached ``DriftSchedule`` / ``TelemetryHub`` /
-    ``obs.Tracer`` for this experiment only (None inherits). Execute with
+    the result). ``drift`` / ``telemetry`` / ``tracer`` / ``stream``
+    override the simulator's attached ``DriftSchedule`` /
+    ``TelemetryHub`` / ``obs.Tracer`` / ``StreamConfig`` for this
+    experiment only (None inherits). Execute with
     ``WorkflowSimulator.simulate(spec, backend=...)``."""
 
     steps: tuple
@@ -287,6 +350,7 @@ class ExperimentSpec:
     drift: Optional[DriftSchedule] = None
     telemetry: object = None
     tracer: object = None
+    stream: Optional[StreamConfig] = None  # chunked data plane (None = off)
 
     def __post_init__(self):
         object.__setattr__(self, "steps", tuple(self.steps))
@@ -331,6 +395,7 @@ class WorkflowSimulator:
         timing=None,
         telemetry=None,
         drift: Optional[DriftSchedule] = None,
+        stream: Optional[StreamConfig] = None,
     ):
         self.platforms = {p.name: p for p in platforms}
         self.msg = msg_latency_s
@@ -341,6 +406,7 @@ class WorkflowSimulator:
         self.timing = timing  # optional PokeTimingController (per-edge)
         self.telemetry = telemetry  # optional TelemetryHub (repro.adapt)
         self.drift = drift  # optional DriftSchedule (mid-run injection)
+        self.stream = stream  # optional StreamConfig (chunked data plane)
         self.tracer = None  # optional obs.Tracer (per-request span trees)
         self._req_k = 0  # running request index (feeds the drift schedule)
         self._last_use: dict = {}
@@ -352,6 +418,29 @@ class WorkflowSimulator:
         # public-cloud path: buffer via object store (PUT at src + GET at dst)
         return self.obj.op_s(src.region, dst.region, self.payload_size) + self.obj.op_s(
             dst.region, dst.region, self.payload_size
+        )
+
+    def _transfer_fl(self, src: SimPlatform, dst: SimPlatform) -> tuple:
+        """(first_byte_s, last_byte_s) for one edge under the attached
+        ``StreamConfig`` (callers check ``self.stream is not None``).
+        Direct local calls and whole-object edges (chunks=1, no P2P hit)
+        delegate to ``_transfer_s`` — preserving both bit-for-bit equality
+        and any scorer subclass override of the whole-object model."""
+        stream = self.stream
+        local = dst.native_prefetch and dst.allows_sync and src.region == dst.region
+        if (
+            not local
+            and stream.p2p_threshold_bytes > 0
+            and self.payload_size <= stream.p2p_threshold_bytes
+        ):
+            return self.obj.p2p_pair_s(
+                src.region, dst.region, self.payload_size, stream.chunks
+            )
+        if local or stream.chunks <= 1:
+            t = self._transfer_s(src, dst)
+            return t, t
+        return self.obj.stream_pair_s(
+            src.region, dst.region, self.payload_size, stream.chunks
         )
 
     def _cold(self, step: SimStep, t: float) -> float:
@@ -380,6 +469,26 @@ class WorkflowSimulator:
                 self._scales(dst_step.platform)[1],
             )
         return tr
+
+    def _edge_transfer_fl(self, src_step: SimStep, dst_step: SimStep) -> tuple:
+        """``_edge_transfer_s`` split into (first_byte, last_byte): the
+        payload join gates on the first component, the compute tail on the
+        last. With no ``StreamConfig`` both components are the whole-object
+        transfer (the exact value ``_edge_transfer_s`` returns)."""
+        if self.stream is None:
+            tr = self._edge_transfer_s(src_step, dst_step)
+            return tr, tr
+        first, last = self._transfer_fl(
+            self.platforms[src_step.platform], self.platforms[dst_step.platform]
+        )
+        if self.drift is not None:
+            sc = max(
+                self._scales(src_step.platform)[1],
+                self._scales(dst_step.platform)[1],
+            )
+            first *= sc
+            last *= sc
+        return first, last
 
     # -- the one dataflow recurrence -------------------------------------------
     def _run_graph(
@@ -427,14 +536,17 @@ class WorkflowSimulator:
                 fetch *= fsc
             # one transfer evaluation per edge per request, shared by the
             # payload join, the telemetry tap, and the timing feedback
-            # (deterministic given the endpoints, so reuse is exact)
-            edge_tr = {u: self._edge_transfer_s(steps[u], step) for u in preds[v]}
+            # (deterministic given the endpoints, so reuse is exact);
+            # streaming splits it into a (first_byte, last_byte) pair —
+            # identical components when no StreamConfig is attached
+            edge_fl = {u: self._edge_transfer_fl(steps[u], step) for u in preds[v]}
             if tracing:
-                draws[v] = (cold, fetch, compute, edge_tr)
+                draws[v] = (cold, fetch, compute, edge_fl)
             if not preds[v]:
-                payload[v] = t0 + self.msg / 2
+                payload[v] = payload_last_v = t0 + self.msg / 2
             else:
-                payload[v] = max(end[u] + edge_tr[u] for u in preds[v])
+                payload[v] = max(end[u] + edge_fl[u][0] for u in preds[v])
+                payload_last_v = max(end[u] + edge_fl[u][1] for u in preds[v])
             if prefetch and poke[v] < math.inf:
                 prepare[v] = poke[v] + cold + fetch
                 start[v] = max(payload[v], prepare[v])
@@ -444,6 +556,14 @@ class WorkflowSimulator:
                 start[v] = payload[v] + cold + fetch
                 exposed_fetch += fetch
             end[v] = start[v] + compute
+            if self.stream is not None and preds[v]:
+                # per-chunk pipeline, closed form: the last chunk needs its
+                # arrival plus one chunk's compute; never binds at chunks=1
+                # (payload_last == payload <= start, so tail <= end). The
+                # reciprocal multiply matches the numpy/jax backends' ops.
+                tail = payload_last_v + compute * (1.0 / self.stream.chunks)
+                if tail > end[v]:
+                    end[v] = tail
             self._last_use[(step.name, step.platform)] = end[v]
             if self.telemetry is not None:
                 region = self.platforms[step.platform].region
@@ -459,7 +579,7 @@ class WorkflowSimulator:
                         self.platforms[steps[u].platform].region,
                         region,
                         self.payload_size,
-                        edge_tr[u],
+                        edge_fl[u][1],  # last byte: the whole transfer
                     )
                 if cold > 0:
                     self.telemetry.record_cold_start(step.name, step.platform, cold)
@@ -476,7 +596,7 @@ class WorkflowSimulator:
                     # not each recorded edge's)
                     prepare0 = poke0[v] + cold + fetch
                     for u in preds[v]:
-                        arrival = end[u] + edge_tr[u]
+                        arrival = end[u] + edge_fl[u][1]
                         self.timing.record_slack(
                             steps[u].name, steps[v].name, arrival - prepare0
                         )
@@ -509,37 +629,45 @@ class WorkflowSimulator:
         )
         for v in order:
             step = steps[v]
-            cold, fetch, compute, edge_tr = draws[v]
+            cold, fetch, compute, edge_fl = draws[v]
             poked = prefetch and poke[v] < math.inf
             p0 = poke[v] if poked else payload[v]
             p1 = prepare[v] if poked else (payload[v] + cold + fetch)
-            payload_t = {label(u): end[u] + edge_tr[u] for u in preds[v]}
-            transfer_s = {label(u): edge_tr[u] for u in preds[v]}
+            payload_t = {label(u): end[u] + edge_fl[u][0] for u in preds[v]}
+            transfer_s = {label(u): edge_fl[u][0] for u in preds[v]}
+            attrs = {
+                "node": label(v),
+                "platform": step.platform,
+                "preds": [label(u) for u in preds[v]],
+                "poke_t": poke[v] if poked else None,
+                "prepare_t0": p0,
+                "prepare_t1": p1,
+                "cold_s": cold,
+                "fetch_s": fetch,
+                "compute_t0": start[v],
+                "compute_s": compute,
+                "payload_t": payload_t,
+                "transfer_s": transfer_s,
+            }
+            if self.stream is not None:
+                # exposed last-byte time: the compute tail past start+compute
+                attrs["stream_wait_t0"] = start[v] + compute
+                attrs["stream_wait_t1"] = end[v]
             node_span = trace.span(
                 label(v),
                 "node",
                 t_start=min(p0, payload[v]),
-                attrs={
-                    "node": label(v),
-                    "platform": step.platform,
-                    "preds": [label(u) for u in preds[v]],
-                    "poke_t": poke[v] if poked else None,
-                    "prepare_t0": p0,
-                    "prepare_t1": p1,
-                    "cold_s": cold,
-                    "fetch_s": fetch,
-                    "compute_t0": start[v],
-                    "compute_s": compute,
-                    "payload_t": payload_t,
-                    "transfer_s": transfer_s,
-                },
+                attrs=attrs,
             )
             node_span.end(end[v])
-            for phase, a, b in (
+            phases = [
                 ("warm", p0, p0 + cold),
                 ("fetch", p0 + cold, p1),
-                ("compute", start[v], end[v]),
-            ):
+                ("compute", start[v], start[v] + compute),
+            ]
+            if self.stream is not None and end[v] > start[v] + compute:
+                phases.append(("stream_wait", start[v] + compute, end[v]))
+            for phase, a, b in phases:
                 ps = trace.span(
                     f"{phase}:{label(v)}",
                     phase,
@@ -555,7 +683,7 @@ class WorkflowSimulator:
                     t_start=end[u],
                     attrs={"src": label(u), "dst": label(v), "platform": step.platform},
                 )
-                ts.end(end[u] + edge_tr[u])
+                ts.end(end[u] + edge_fl[u][0])
         tr.finish(trace, t_end=t0 + total)
 
     # -- the batched fast path (request axis vectorized) -----------------------
@@ -664,30 +792,50 @@ class WorkflowSimulator:
             else:
                 poke_v = inf
             poke[v] = poke_v
-            # payload join (max over in-edges of upstream end + transfer)
+            # payload join (max over in-edges of upstream end + transfer);
+            # streaming gates it on first bytes and tracks last bytes too
+            stream_on = self.stream is not None
             edge_tr: dict = {}
+            payload_last = None
             if not preds[v]:
                 payload = t0s + self.msg / 2
+                if stream_on:
+                    payload_last = payload
             else:
                 arrivals = []
+                arrivals_last = []
                 for u in preds[v]:
-                    tr = self._transfer_s(self.platforms[steps[u].platform], plat)
+                    if stream_on:
+                        first, last = self._transfer_fl(
+                            self.platforms[steps[u].platform], plat
+                        )
+                    else:
+                        first = self._transfer_s(
+                            self.platforms[steps[u].platform], plat
+                        )
+                        last = first
                     if self.drift is not None:
-                        tr = tr * np.maximum(
+                        sc = np.maximum(
                             scales_for(steps[u].platform)[1],
                             scales_for(step.platform)[1],
                         )
-                    arrivals.append(end[u] + tr)
+                        first = first * sc
+                        last = last * sc if stream_on else first
+                    arrivals.append(end[u] + first)
+                    if stream_on:
+                        arrivals_last.append(end[u] + last)
                     if tracing:
-                        edge_tr[u] = np.broadcast_to(np.asarray(tr, float), (n,))
+                        edge_tr[u] = np.broadcast_to(np.asarray(first, float), (n,))
                     if tel is not None:
                         tel.record_transfer_batch(
                             self.platforms[steps[u].platform].region,
                             plat.region,
                             self.payload_size,
-                            np.broadcast_to(tr, (n,)),
+                            np.broadcast_to(last, (n,)),
                         )
                 payload = np.maximum.reduce(arrivals)
+                if stream_on:
+                    payload_last = np.maximum.reduce(arrivals_last)
             # start/end under both cold hypotheses, then the cold scan
             if prefetch and not math.isinf(poke_v[0]):
                 warm_start = np.maximum(payload, poke_v + fetch)
@@ -697,11 +845,20 @@ class WorkflowSimulator:
                 cold_start = warm_start + cold_draw
             warm_end = warm_start + compute
             cold_end = cold_start + compute
+            if stream_on and preds[v]:
+                # per-chunk pipeline tail (closed form; see _run_graph) —
+                # applied to both hypotheses, so cold_end >= warm_end holds
+                tail = payload_last + compute * (1.0 / self.stream.chunks)
+                warm_end = np.maximum(warm_end, tail)
+                cold_end = np.maximum(cold_end, tail)
             mask = self._cold_scan(t0s, warm_end, cold_end, plat.keep_warm_s)
             end_v = np.where(mask, cold_end, warm_end)
             end[v] = end_v
             if tracing:
-                rec[v] = (poke_v, payload, mask, cold_draw, fetch, compute, edge_tr)
+                rec[v] = (
+                    poke_v, payload, mask, cold_draw, fetch, compute, edge_tr,
+                    payload_last,
+                )
             self._last_use[(step.name, step.platform)] = float(end_v[-1])
             if tel is not None:
                 tel.record_compute_batch(step.name, step.platform, compute)
@@ -746,7 +903,10 @@ class WorkflowSimulator:
             t_sink = t0
             for v in order:
                 step = steps[v]
-                poke_v, payload, mask, cold_draw, fetch, compute, edge_tr = rec[v]
+                (
+                    poke_v, payload, mask, cold_draw, fetch, compute, edge_tr,
+                    payload_last,
+                ) = rec[v]
                 poked = prefetch and not math.isinf(float(poke_v[k]))
                 cold = float(cold_draw[k]) if mask[k] else 0.0
                 fetch_k = float(fetch[k])
@@ -755,30 +915,39 @@ class WorkflowSimulator:
                 pay_k = float(payload[k])
                 p0 = float(poke_v[k]) if poked else pay_k
                 p1 = p0 + cold + fetch_k
-                start_k = end_k - compute_k
+                if payload_last is None:
+                    start_k = end_k - compute_k
+                else:
+                    # end may carry a streaming tail past start + compute,
+                    # so recompute start from the gating quantities
+                    start_k = max(pay_k, p1) if poked else p1
                 payload_t = {
                     label(u): float(end[u][k]) + float(edge_tr[u][k])
                     for u in preds[v]
                 }
                 transfer_s = {label(u): float(edge_tr[u][k]) for u in preds[v]}
+                attrs = {
+                    "node": label(v),
+                    "platform": step.platform,
+                    "preds": [label(u) for u in preds[v]],
+                    "poke_t": p0 if poked else None,
+                    "prepare_t0": p0,
+                    "prepare_t1": p1,
+                    "cold_s": cold,
+                    "fetch_s": fetch_k,
+                    "compute_t0": start_k,
+                    "compute_s": compute_k,
+                    "payload_t": payload_t,
+                    "transfer_s": transfer_s,
+                }
+                if payload_last is not None:
+                    attrs["stream_wait_t0"] = start_k + compute_k
+                    attrs["stream_wait_t1"] = end_k
                 node_span = trace.span(
                     label(v),
                     "node",
                     t_start=min(p0, pay_k),
-                    attrs={
-                        "node": label(v),
-                        "platform": step.platform,
-                        "preds": [label(u) for u in preds[v]],
-                        "poke_t": p0 if poked else None,
-                        "prepare_t0": p0,
-                        "prepare_t1": p1,
-                        "cold_s": cold,
-                        "fetch_s": fetch_k,
-                        "compute_t0": start_k,
-                        "compute_s": compute_k,
-                        "payload_t": payload_t,
-                        "transfer_s": transfer_s,
-                    },
+                    attrs=attrs,
                 )
                 node_span.end(end_k)
                 t_sink = max(t_sink, end_k)
@@ -843,13 +1012,15 @@ class WorkflowSimulator:
                 f"unknown backend {backend!r}: expected one of {_BACKENDS}"
             )
         saved_drift, saved_tel = self.drift, self.telemetry
-        saved_tracer = self.tracer
+        saved_tracer, saved_stream = self.tracer, self.stream
         if spec.drift is not None:
             self.drift = spec.drift
         if spec.telemetry is not None:
             self.telemetry = spec.telemetry
         if spec.tracer is not None:
             self.tracer = spec.tracer
+        if spec.stream is not None:
+            self.stream = spec.stream
         try:
             order, smap, preds, succs = _spec_graph(spec.steps, spec.edges)
             t0s = np.arange(spec.n_requests) * spec.interarrival_s
@@ -870,7 +1041,7 @@ class WorkflowSimulator:
             return out
         finally:
             self.drift, self.telemetry = saved_drift, saved_tel
-            self.tracer = saved_tracer
+            self.tracer, self.stream = saved_tracer, saved_stream
 
     def _trace_sample_idx(self, n: int) -> np.ndarray:
         """Which request indices of an n-request stream get a trace:
@@ -939,11 +1110,12 @@ class WorkflowSimulator:
             step_sets = [{s.name: s for s in p} for p in placements]
         seeds = spec.seeds if spec.seeds is not None else (self.seed,)
         drift = spec.drift if spec.drift is not None else self.drift
+        stream = spec.stream if spec.stream is not None else self.stream
         t0s = np.arange(spec.n_requests) * spec.interarrival_s
         if _tracer is None:
             return jaxsim.run_batched(
                 self, order, step_sets, preds, succs, t0s, spec.prefetch,
-                list(seeds), drift=drift, dtype=dtype,
+                list(seeds), drift=drift, dtype=dtype, stream=stream,
             )
         sample_idx = np.unique(
             np.linspace(
@@ -957,6 +1129,7 @@ class WorkflowSimulator:
         totals, sampled = jaxsim.run_batched(
             self, order, step_sets, preds, succs, t0s, spec.prefetch,
             list(seeds), drift=drift, dtype=dtype, sample_idx=sample_idx,
+            stream=stream,
         )
         self._emit_traces_jax(
             order,
@@ -969,12 +1142,13 @@ class WorkflowSimulator:
             drift,
             _tracer,
             seed=seeds[0],
+            stream=stream,
         )
         return totals
 
     def _emit_traces_jax(
         self, order, steps, preds, prefetch, t0s, sample_idx, sampled,
-        drift, tracer, seed,
+        drift, tracer, seed, stream=None,
     ):
         """Rebuild ``obs`` traces from the jax sweep's sampled scan ys
         (payload / effective cold / fetch / compute / end, each (V, k)).
@@ -986,6 +1160,22 @@ class WorkflowSimulator:
         from repro.core import jaxsim
 
         payload_a, cold_a, fetch_a, compute_a, end_a = sampled
+        saved_stream = self.stream
+        self.stream = stream  # _transfer_fl reads it (restored in finally)
+        try:
+            self._emit_traces_jax_inner(
+                jaxsim, order, steps, preds, prefetch, t0s, sample_idx,
+                payload_a, cold_a, fetch_a, compute_a, end_a, drift, tracer,
+                seed, stream,
+            )
+        finally:
+            self.stream = saved_stream
+
+    def _emit_traces_jax_inner(
+        self, jaxsim, order, steps, preds, prefetch, t0s, sample_idx,
+        payload_a, cold_a, fetch_a, compute_a, end_a, drift, tracer, seed,
+        stream,
+    ):
         depth = jaxsim._poke_depths(order, steps, preds)
         idx = {v: i for i, v in enumerate(order)}
         names = [steps[v].name for v in order]
@@ -1013,13 +1203,23 @@ class WorkflowSimulator:
                 pay_k = float(payload_a[i, j])
                 p0 = poke_t if poked else pay_k
                 p1 = p0 + cold + fetch
-                start_k = end_k - compute
+                if stream is None:
+                    start_k = end_k - compute
+                else:
+                    # end may carry a streaming tail past start + compute
+                    start_k = max(pay_k, p1) if poked else p1
                 payload_t, transfer_s = {}, {}
                 for u in preds[v]:
-                    tr = self._transfer_s(
-                        self.platforms[steps[u].platform],
-                        self.platforms[step.platform],
-                    )
+                    if stream is None:
+                        tr = self._transfer_s(
+                            self.platforms[steps[u].platform],
+                            self.platforms[step.platform],
+                        )
+                    else:
+                        tr = self._transfer_fl(
+                            self.platforms[steps[u].platform],
+                            self.platforms[step.platform],
+                        )[0]
                     if drift is not None:
                         tr *= max(
                             drift.scales(k, steps[u].platform)[1],
@@ -1027,24 +1227,28 @@ class WorkflowSimulator:
                         )
                     payload_t[label(u)] = float(end_a[idx[u], j]) + tr
                     transfer_s[label(u)] = tr
+                attrs = {
+                    "node": label(v),
+                    "platform": step.platform,
+                    "preds": [label(u) for u in preds[v]],
+                    "poke_t": poke_t,
+                    "prepare_t0": p0,
+                    "prepare_t1": p1,
+                    "cold_s": cold,
+                    "fetch_s": fetch,
+                    "compute_t0": start_k,
+                    "compute_s": compute,
+                    "payload_t": payload_t,
+                    "transfer_s": transfer_s,
+                }
+                if stream is not None:
+                    attrs["stream_wait_t0"] = start_k + compute
+                    attrs["stream_wait_t1"] = end_k
                 node_span = trace.span(
                     label(v),
                     "node",
                     t_start=min(p0, pay_k),
-                    attrs={
-                        "node": label(v),
-                        "platform": step.platform,
-                        "preds": [label(u) for u in preds[v]],
-                        "poke_t": poke_t,
-                        "prepare_t0": p0,
-                        "prepare_t1": p1,
-                        "cold_s": cold,
-                        "fetch_s": fetch,
-                        "compute_t0": start_k,
-                        "compute_s": compute,
-                        "payload_t": payload_t,
-                        "transfer_s": transfer_s,
-                    },
+                    attrs=attrs,
                 )
                 node_span.end(end_k)
                 t_sink = max(t_sink, end_k)

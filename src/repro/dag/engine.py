@@ -40,7 +40,7 @@ from typing import Callable, Optional
 from repro.core.platform import Platform, PlatformRegistry, PlatformWrapper
 from repro.core.prefetch import Prefetcher
 from repro.core.prewarm import CompileCache
-from repro.core.store import ObjectStore
+from repro.core.store import ObjectStore, StreamConfig, _sizeof
 from repro.core.timing import PokeTimingController
 from repro.dag.spec import DagSpec
 
@@ -77,6 +77,10 @@ class _RunState:
         self.poked: dict = {}  # node -> (warm_fut, fetch_futs, t0, delay)
         self.buffers: dict = {n.name: {} for n in spec.steps}  # fan-in joins
         self.arrivals: dict = {n.name: {} for n in spec.steps}  # edge stamps
+        # streaming: predecessors whose FIRST chunk has landed (fires the
+        # node early) and the event set when the FULL payload set is in
+        self.first_seen: dict = {n.name: set() for n in spec.steps}
+        self.payload_done: dict = {n.name: threading.Event() for n in spec.steps}
         self.fired: set = set()
         self.timeline: dict = {}
         self.outputs: dict = {}
@@ -112,16 +116,33 @@ class DagDeployment:
         timing_mode: str = "eager",
         telemetry=None,
         tracer=None,
+        stream: Optional[StreamConfig] = None,
+        payload_region: Optional[str] = None,
     ):
         self.registry = registry or PlatformRegistry()
         self.store = store or ObjectStore(self.registry.network)
         self.cache = CompileCache()
-        self.prefetcher = Prefetcher(self.store)
+        # chunked data plane: None keeps every path exactly as before;
+        # chunks > 1 pipelines payload edges (successor fires on the first
+        # chunk) and chunked-fetches data deps
+        self.stream = stream
+        # where buffered payloads are homed: None = the destination's own
+        # region (the store GET is then intra-region); a staging region
+        # makes both hops pay wire time — the setting under which the
+        # streamed cut-through and the P2P bypass earn their keep
+        self.payload_region = payload_region
+        self.prefetcher = Prefetcher(self.store, stream=stream)
         self.timing = PokeTimingController(timing_mode)
         self._functions: dict = {}  # (name, platform) -> DeployedFn
         self._stats_lock = threading.Lock()
         self._shut = False
-        self.stats = {"pokes": {}, "joins": 0, "buffered_edges": 0}
+        self.stats = {
+            "pokes": {},
+            "joins": 0,
+            "buffered_edges": 0,
+            "streamed_edges": 0,  # edges moved chunk-by-chunk (cut-through)
+            "p2p_edges": 0,  # edges that skipped the store entirely
+        }
         # duck-typed TelemetryHub (repro.adapt): propagated to every piece
         # so one hub sees compute + warm/cold + fetch + transfer events
         self.telemetry = telemetry
@@ -214,6 +235,8 @@ class DagDeployment:
                 "pokes": dict(self.stats["pokes"]),
                 "joins": self.stats["joins"],
                 "buffered_edges": self.stats["buffered_edges"],
+                "streamed_edges": self.stats["streamed_edges"],
+                "p2p_edges": self.stats["p2p_edges"],
             }
         out = {
             "engine": engine,
@@ -309,13 +332,38 @@ class DagDeployment:
 
     # -- phase 2: payload (dataflow firing) ------------------------------------
     def _deliver(self, state: _RunState, pred: Optional[str], node: str, value):
-        """Record one predecessor payload; fire when the LAST one lands."""
+        """Record one predecessor payload; fire when the LAST one lands.
+
+        Streamed edges fire earlier — ``_deliver_first`` marks the edge on
+        its first chunk — so by the time the full payload gets here the
+        node is usually already preparing; this then just completes the
+        buffer and releases ``payload_done``."""
         n_preds = len(state.spec.predecessors(node))
         with state.lock:
             if pred is not None:
                 state.buffers[node][pred] = value
                 state.arrivals[node][pred] = time.perf_counter()
-            fire = len(state.buffers[node]) == n_preds and node not in state.fired
+                state.first_seen[node].add(pred)
+            full = len(state.buffers[node]) == n_preds
+            fire = len(state.first_seen[node]) == n_preds and node not in state.fired
+            if fire:
+                state.fired.add(node)
+        if full:
+            state.payload_done[node].set()
+        if fire:
+            step = state.spec.node(node)
+            self.registry.executor(step.platform).submit(self._fire, state, node)
+
+    def _deliver_first(self, state: _RunState, pred: str, node: str):
+        """A streamed edge's FIRST chunk landed: fire the node as soon as
+        every in-edge has shown its first chunk, overlapping the node's
+        prepare (warm + fetch) with the residual chunks still in flight."""
+        with state.lock:
+            state.first_seen[node].add(pred)
+            fire = (
+                len(state.first_seen[node]) == len(state.spec.predecessors(node))
+                and node not in state.fired
+            )
             if fire:
                 state.fired.add(node)
         if fire:
@@ -349,16 +397,37 @@ class DagDeployment:
             )
             with ctx:
                 if not (dst_plat.allows_sync and dst_plat.native_prefetch):
-                    # public-cloud path: buffer through the object store, one
-                    # key per edge; delete after the GET (no fan-in leak)
-                    key = f"__payload__/{state.rid}/{src}->{dst}"
-                    self.store.put(
-                        key, value, dst_plat.region, from_region=src_plat.region
-                    )
-                    value, _ = self.store.get(key, dst_plat.region)
-                    self.store.delete(key)
-                    with self._stats_lock:
-                        self.stats["buffered_edges"] += 1
+                    nbytes = _sizeof(value)
+                    home = self.payload_region or dst_plat.region
+                    if self._p2p_eligible(src, dst, nbytes):
+                        # direct P2P path: one src->dst hop, no store
+                        p2p_dt = self.registry.network.transfer_s(
+                            src_plat.region, dst_plat.region, nbytes
+                        )
+                        if self.store.enforce_latency:
+                            time.sleep(p2p_dt)
+                        if self.telemetry is not None:
+                            self.telemetry.record_transfer(
+                                src_plat.region, dst_plat.region, nbytes, p2p_dt
+                            )
+                        with self._stats_lock:
+                            self.stats["p2p_edges"] += 1
+                    elif self.stream is not None and self.stream.chunks > 1:
+                        value = self._transfer_streamed(
+                            state, src, dst, value, src_plat, dst_plat, home
+                        )
+                    else:
+                        # public-cloud path: buffer through the object
+                        # store, one key per edge; delete after the GET
+                        # (no fan-in leak)
+                        key = f"__payload__/{state.rid}/{src}->{dst}"
+                        self.store.put(key, value, home, from_region=src_plat.region)
+                        value, _ = self.store.get(key, dst_plat.region)
+                        self.store.delete(key)
+                        with self._stats_lock:
+                            self.stats["buffered_edges"] += 1
+                    if self.telemetry is not None:
+                        self.telemetry.record_edge_bytes(src, dst, nbytes)
             dt = time.perf_counter() - t0
             if span is not None:
                 span.end()
@@ -367,6 +436,69 @@ class DagDeployment:
             self._deliver(state, src, dst, value)
         except BaseException as exc:
             state.fail(exc)
+
+    def _p2p_eligible(self, src: str, dst: str, nbytes: int) -> bool:
+        """Direct payload path decision: learned per edge from the
+        TelemetryHub byte EWMA (so a normally-small edge with one outlier
+        payload keeps its fast path), falling back to the live payload's
+        actual size before any observation exists."""
+        stream = self.stream
+        if stream is None or stream.p2p_threshold_bytes <= 0:
+            return False
+        est = None
+        if self.telemetry is not None:
+            est = self.telemetry.edge_bytes(src, dst)
+        size = est if est is not None else nbytes
+        return size <= stream.p2p_threshold_bytes
+
+    def _transfer_streamed(
+        self, state: _RunState, src: str, dst: str, value, src_plat, dst_plat, home
+    ):
+        """Cut-through edge transfer: the payload moves as ``chunks`` wire
+        pieces, PUT chunks pacing on the SOURCE platform's executor while
+        this (destination-executor) thread drives the matching GET chunks
+        one semaphore release behind — so the destination holds chunk i
+        after it crossed BOTH hops, and the node fires on chunk 0 while
+        the rest pipeline (``_deliver_first``)."""
+        chunks = self.stream.chunks
+        key = f"__payload__/{state.rid}/{src}->{dst}"
+        sem = threading.Semaphore(0)
+        errs: list = []
+        put_iter = self.store.put_stream(
+            key, value, home, from_region=src_plat.region, chunks=chunks
+        )
+
+        def producer():
+            try:
+                for _ in put_iter:
+                    sem.release()
+            except BaseException as exc:
+                errs.append(exc)
+                for _ in range(chunks):
+                    sem.release()
+
+        self.registry.executor(src_plat.name).submit(producer)
+        get_iter = self.store.get_stream(key, dst_plat.region, chunks=chunks)
+        out = None
+        for i in range(chunks):
+            # wait for wire chunk i to clear the first hop; poll so a
+            # failed producer (or failed request) can't strand this thread
+            while not sem.acquire(timeout=0.1):
+                if errs:
+                    raise errs[0]
+                if state.error is not None:
+                    raise state.error
+            if errs:
+                raise errs[0]
+            v, _ = next(get_iter)
+            if i == 0:
+                self._deliver_first(state, src, dst)
+            if v is not None:
+                out = v
+        self.store.delete(key)
+        with self._stats_lock:
+            self.stats["streamed_edges"] += 1
+        return out
 
     def _run_node(self, state: _RunState, node: str):
         spec = state.spec
@@ -481,6 +613,18 @@ class DagDeployment:
             fetch_span.end(prepare_t1)
         self.timing.record_prepare(step.name, timeline["warm_s"] + timeline["fetch_s"])
 
+        # streamed edges fire this node on FIRST chunks, so the prepare
+        # above overlapped the residual chunks; whatever tail is still in
+        # flight is waited out here and surfaced as its own bucket
+        t_wait0 = t_wait1 = None
+        if self.stream is not None:
+            t_wait0 = time.perf_counter()
+            while not state.payload_done[node].wait(0.05):
+                if state.error is not None:
+                    return
+            t_wait1 = time.perf_counter()
+            timeline["stream_wait_s"] = t_wait1 - t_wait0
+
         # assemble the input: client payload / unwrapped single pred /
         # fan-in dict keyed by predecessor name
         with state.lock:
@@ -534,6 +678,9 @@ class DagDeployment:
                     "transfer_s": dict(edge_transfer),
                 }
             )
+            if t_wait0 is not None:
+                node_span.attrs["stream_wait_t0"] = t_wait0
+                node_span.attrs["stream_wait_t1"] = t_wait1
             node_span.end(t1)
         self.timing.record_compute(step.name, dt)
         if self.telemetry is not None:

@@ -6,13 +6,16 @@ backward walk here asks, at every instant of a finished request, *which
 constraint was binding* — and tiles the whole ``[t0, sink_end]`` interval
 with segments labelled by GeoFF's cost taxonomy:
 
-  compute     a handler was running on the path
-  transfer    a payload was in flight on the binding edge
-  fetch       the node was waiting on data download (exposed, post-poke)
-  cold        the node was waiting on a cold start / compile
-  poke_slack  everything before the binding chain's first poke-gated
-              prepare window (poke message fan-out, scheduling slack,
-              and any unattributed gap between phases)
+  compute      a handler was running on the path
+  transfer     a payload was in flight on the binding edge
+  fetch        the node was waiting on data download (exposed, post-poke)
+  cold         the node was waiting on a cold start / compile
+  stream_wait  residual streamed chunks were draining: the node already
+               held the first chunk (engine: wait between prepare and the
+               handler; sim: the pipelined tail after compute)
+  poke_slack   everything before the binding chain's first poke-gated
+               prepare window (poke message fan-out, scheduling slack,
+               and any unattributed gap between phases)
 
 Because the segments tile the interval exactly (gaps become slack), the
 bucket sums equal ``sink_end - t0`` by construction — the 5% acceptance
@@ -46,7 +49,7 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import List, Optional, Tuple
 
-BUCKETS = ("cold", "fetch", "compute", "transfer", "poke_slack")
+BUCKETS = ("cold", "fetch", "compute", "transfer", "stream_wait", "poke_slack")
 
 # prepare_t0 within this of poke_t counts as poke-gated (engine clocks are
 # perf_counter with scheduling noise; sim clocks are exact).
@@ -100,7 +103,7 @@ class CriticalPath:
             f"  total {total:.4f}s",
         ]
         for b in BUCKETS:
-            lines.append(f"  {b:<11}{attr[b]:>9.4f}s  {100.0 * attr[b] / total:5.1f}%")
+            lines.append(f"  {b:<12}{attr[b]:>9.4f}s  {100.0 * attr[b] / total:5.1f}%")
         return "\n".join(lines)
 
 
@@ -148,7 +151,17 @@ def extract_critical_path(trace, tol: float = _POKE_TOL) -> CriticalPath:
 
         compute_t0 = a.get("compute_t0", span.t_start)
         compute_s = a.get("compute_s", 0.0)
-        emit(compute_t0, compute_t0 + compute_s, "compute", node=name)
+        # the node's own on-path intervals: compute, plus the streamed-tail
+        # wait when present. The wait sits AFTER compute in the simulator
+        # (the closed-form pipelined tail) and BEFORE it on the engine
+        # (drain-then-run), so emit latest-ending first — emit() clips to
+        # the cursor either way, keeping the tiling exact.
+        ivals = [(compute_t0, compute_t0 + compute_s, "compute")]
+        sw0, sw1 = a.get("stream_wait_t0"), a.get("stream_wait_t1")
+        if sw0 is not None and sw1 is not None and sw1 > sw0:
+            ivals.append((sw0, sw1, "stream_wait"))
+        for iv0, iv1, bucket in sorted(ivals, key=lambda iv: -iv[1]):
+            emit(iv0, iv1, bucket, node=name)
 
         prepare_t1 = a.get("prepare_t1")
         payload_t = a.get("payload_t") or {}

@@ -153,6 +153,26 @@ def test_frozen_reference_jax_backend():
     assert out[0].tolist() == pytest.approx(FROZEN_JAX_FIG4, abs=1e-9)
 
 
+def test_frozen_reference_unchanged_by_single_chunk_stream():
+    """chunks=1 keeps the compiled program and draws identical: the jax
+    backend reproduces the frozen reference bit-for-bit with a degenerate
+    StreamConfig attached (via the spec override)."""
+    sim = S.WorkflowSimulator(S.paper_platforms(), seed=3)
+    spec = S.ExperimentSpec(
+        S.document_workflow_fig4(),
+        n_requests=4,
+        seeds=(3,),
+        stream=S.StreamConfig(chunks=1),
+    )
+    out = sim.simulate(spec, backend="jax")
+    base = S.WorkflowSimulator(S.paper_platforms(), seed=3).simulate(
+        S.ExperimentSpec(S.document_workflow_fig4(), n_requests=4, seeds=(3,)),
+        backend="jax",
+    )
+    assert np.array_equal(np.asarray(out), np.asarray(base))
+    assert out[0].tolist() == pytest.approx(FROZEN_JAX_FIG4, abs=1e-9)
+
+
 # ---------------------------------------------------------------------------
 # statistical equivalence with spread on
 # ---------------------------------------------------------------------------

@@ -276,4 +276,11 @@ def test_chrome_trace_is_valid_and_complete():
 
 
 def test_buckets_constant_matches_attribution_keys():
-    assert set(BUCKETS) == {"cold", "fetch", "compute", "transfer", "poke_slack"}
+    assert set(BUCKETS) == {
+        "cold",
+        "fetch",
+        "compute",
+        "transfer",
+        "stream_wait",
+        "poke_slack",
+    }

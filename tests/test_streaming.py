@@ -1,0 +1,496 @@
+"""The streaming data plane: chunked store transfers, the pipelined
+closed form on all three simulator backends, first/last-byte placement
+costs, the engine's cut-through + P2P payload paths, telemetry link fits,
+and the stream_wait critical-path bucket.
+
+The load-bearing invariant everywhere: streaming OFF (or chunks=1) is
+bit-for-bit the pre-streaming behavior — same draws, same totals, same
+store accounting."""
+
+import itertools
+import random
+import time
+
+import numpy as np
+import pytest
+
+from repro.adapt.costs import observed_costs
+from repro.adapt.telemetry import TelemetryHub
+from repro.core import simulator as S
+from repro.core.shipping import PlacementCosts, dag_cost, place_dag
+from repro.core.store import ObjectStore, StreamConfig
+from repro.core.platform import NetworkModel, Platform, PlatformRegistry
+from repro.core.prefetch import Prefetcher
+from repro.core.workflow import DataRef, StepSpec
+from repro.dag import DagDeployment, DagSpec, DagStep, document_dag_fig4
+from repro.obs import Tracer, extract_critical_path
+
+
+def _zero_platforms():
+    return [
+        S.SimPlatform(
+            p.name,
+            p.region,
+            p.native_prefetch,
+            p.allows_sync,
+            S.Dist(p.cold_start.median, 0.0),
+            p.keep_warm_s,
+        )
+        for p in S.paper_platforms()
+    ]
+
+
+def _zero_sigma(steps):
+    return [
+        S.SimStep(
+            s.name,
+            s.platform,
+            compute=S.Dist(s.compute.median, 0.0),
+            fetch=S.Dist(s.fetch.median, 0.0),
+            prefetch=s.prefetch,
+        )
+        for s in steps
+    ]
+
+
+# ---------------------------------------------------------------------------
+# StreamConfig / store streaming primitives
+# ---------------------------------------------------------------------------
+def test_stream_config_validates_chunks():
+    with pytest.raises(ValueError):
+        StreamConfig(chunks=0)
+    assert StreamConfig(chunks=1).p2p_threshold_bytes == 0.0
+
+
+def test_chunk_dts_sum_exactly_to_whole_transfer():
+    store = ObjectStore(NetworkModel())
+    store.network.set_link("eu", "us", 0.3, 8e6)
+    size = 2_000_000
+    whole = store.network.transfer_s("eu", "us", size)
+    for chunks in (1, 2, 4, 7, 16):
+        dts = store._chunk_dts("eu", "us", size, chunks)
+        assert len(dts) == chunks
+        assert sum(dts) == pytest.approx(whole, rel=1e-12)
+        # only the first chunk carries the fixed latency term
+        if chunks > 1:
+            assert dts[0] > dts[1]
+            assert all(d == pytest.approx(dts[1]) for d in dts[2:])
+
+
+def test_put_get_stream_roundtrip_and_accounting():
+    store = ObjectStore(NetworkModel())
+    store.network.set_link("eu", "us", 0.3, 8e6)
+    value = np.arange(1000, dtype=np.float64)
+    put_dts = list(store.put_stream("k", value, "us", from_region="eu", chunks=4))
+    assert len(put_dts) == 4
+    got, get_dts = None, []
+    for v, dt in store.get_stream("k", "us", chunks=4):
+        get_dts.append(dt)
+        if v is not None:
+            got = v
+    # value arrives with the LAST chunk only
+    assert got is value and len(get_dts) == 4
+    snap = store.stats_snapshot()
+    # accounting identical to whole-object put+get: counted ONCE, not 4x
+    assert snap["puts"] == 1 and snap["gets"] == 1
+    assert snap["bytes_in"] == value.nbytes and snap["bytes_out"] == value.nbytes
+    assert snap["bytes_by_pair"] == {"eu->us": value.nbytes, "us->us": value.nbytes}
+    assert snap["modeled_put_s"] == pytest.approx(
+        store.network.transfer_s("eu", "us", value.nbytes), rel=1e-12
+    )
+
+
+def test_bytes_by_pair_matches_whole_object_path():
+    """The pair ledger counts the same bytes whether an edge streamed or
+    not — the satellite no-double-count guarantee."""
+
+    def run(streamed):
+        store = ObjectStore(NetworkModel())
+        v = np.zeros(500, dtype=np.float64)
+        if streamed:
+            list(store.put_stream("k", v, "us", from_region="eu", chunks=8))
+            for _ in store.get_stream("k", "us", chunks=8):
+                pass
+        else:
+            store.put("k", v, "us", from_region="eu")
+            store.get("k", "us")
+        return store.stats_snapshot()["bytes_by_pair"]
+
+    assert run(True) == run(False)
+
+
+def test_get_stream_missing_key_raises_eagerly():
+    store = ObjectStore(NetworkModel())
+    with pytest.raises(KeyError, match="nope"):
+        store.get_stream("nope", "us")  # at call time, not at first next()
+
+
+# ---------------------------------------------------------------------------
+# the pipelined closed form == the explicit per-chunk recurrence
+# ---------------------------------------------------------------------------
+def test_closed_form_equals_explicit_chunk_loop():
+    """end = max(start + c, payload_last + c/C) is exactly the per-chunk
+    recurrence t_i = max(t_{i-1}, arr_i) + c/C under evenly spaced chunk
+    arrivals — the algebra all three backends rely on."""
+    rnd = random.Random(11)
+    for _ in range(200):
+        C = rnd.randint(1, 12)
+        first = rnd.uniform(0.01, 1.0)
+        # one chunk means the first byte IS the last byte
+        last = first + (rnd.uniform(0.0, 2.0) if C > 1 else 0.0)
+        c = rnd.uniform(0.01, 2.0)
+        prepare = rnd.uniform(0.0, 2.5)
+        end_u = rnd.uniform(0.0, 2.0)
+        arr = [
+            end_u + first + i * ((last - first) / (C - 1) if C > 1 else 0.0)
+            for i in range(C)
+        ]
+        start = max(prepare, arr[0])
+        t = start
+        for i in range(C):
+            t = max(t, arr[i]) + c / C
+        closed = max(start + c, end_u + last + c / C)
+        assert t == pytest.approx(closed, rel=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# three backends: off == chunks=1 bit-for-bit; sigma-0 exact agreement
+# ---------------------------------------------------------------------------
+def _run_backend(backend, stream, seeds=(3, 4), n=20, zero=False):
+    platforms = _zero_platforms() if zero else S.paper_platforms()
+    steps = S.document_workflow_fig4()
+    if zero:
+        steps = _zero_sigma(steps)
+    sim = S.WorkflowSimulator(platforms, seed=3, stream=stream)
+    spec = S.ExperimentSpec(steps, n_requests=n, seeds=seeds)
+    return np.asarray(sim.simulate(spec, backend=backend))
+
+
+@pytest.mark.parametrize("backend", ["scalar", "numpy", "jax"])
+def test_chunks1_bit_for_bit_identical_to_off(backend):
+    off = _run_backend(backend, None)
+    on = _run_backend(backend, StreamConfig(chunks=1))
+    assert np.array_equal(off, on)
+
+
+@pytest.mark.parametrize("chunks", [1, 8])
+def test_sigma0_streaming_agrees_across_backends(chunks):
+    stream = StreamConfig(chunks=chunks)
+    sc = _run_backend("scalar", stream, seeds=(0,), zero=True)
+    np_ = _run_backend("numpy", stream, seeds=(0,), zero=True)
+    jx = _run_backend("jax", stream, seeds=(0,), zero=True)
+    np.testing.assert_allclose(np_, sc.reshape(np_.shape), atol=0, rtol=0)
+    np.testing.assert_allclose(jx, np_, atol=1e-5, rtol=0)
+
+
+def test_streaming_reduces_sigma0_totals_on_all_backends():
+    for backend in ("scalar", "numpy", "jax"):
+        off = _run_backend(backend, None, seeds=(0,), n=6, zero=True)
+        on = _run_backend(backend, StreamConfig(chunks=8), seeds=(0,), n=6, zero=True)
+        assert np.all(on <= off + 1e-9), backend
+        assert on.mean() < off.mean(), backend
+
+
+def test_p2p_cuts_below_streaming_for_small_payloads():
+    sim_kw = dict(payload_size_bytes=100_000.0, seed=0)
+    steps = _zero_sigma(S.document_workflow_fig4())
+    spec = S.ExperimentSpec(steps, n_requests=5, seeds=(0,))
+    totals = {}
+    for name, stream in [
+        ("stream", StreamConfig(chunks=8)),
+        ("p2p", StreamConfig(chunks=8, p2p_threshold_bytes=200_000.0)),
+    ]:
+        sim = S.WorkflowSimulator(_zero_platforms(), stream=stream, **sim_kw)
+        totals[name] = np.asarray(sim.simulate(spec, backend="scalar"))
+    assert totals["p2p"].mean() < totals["stream"].mean()
+
+
+def test_spec_stream_overrides_simulator_stream():
+    sim = S.WorkflowSimulator(_zero_platforms(), seed=0)
+    steps = _zero_sigma(S.document_workflow_fig4())
+    on = sim.simulate(
+        S.ExperimentSpec(steps, n_requests=4, seeds=(0,), stream=StreamConfig(8)),
+        backend="scalar",
+    )
+    assert sim.stream is None  # restored after the run
+    base = sim.simulate(
+        S.ExperimentSpec(steps, n_requests=4, seeds=(0,)), backend="scalar"
+    )
+    assert np.asarray(on).mean() < np.asarray(base).mean()
+
+
+# ---------------------------------------------------------------------------
+# placement: first/last-byte Pareto DP still matches brute force
+# ---------------------------------------------------------------------------
+def _random_fl_case(rnd, topology):
+    plats = ["p0", "p1", "p2"]
+    if topology == "chain":
+        names = [f"s{i}" for i in range(rnd.randint(2, 4))]
+        edges = [(names[i], names[i + 1]) for i in range(len(names) - 1)]
+    elif topology == "diamond":
+        names = ["a", "b", "c", "d"]
+        edges = [("a", "b"), ("a", "c"), ("b", "d"), ("c", "d")]
+    else:  # non-series-parallel braid: the exhaustive fallback
+        names = ["a", "b", "c", "d"]
+        edges = [("a", "b"), ("a", "c"), ("b", "c"), ("b", "d"), ("c", "d")]
+    nodes = {n: StepSpec(n, "p0") for n in names}
+    fetch = {(n, p): rnd.uniform(0, 2) for n in names for p in plats}
+    compute = {(n, p): rnd.uniform(0.1, 2) for n in names for p in plats}
+    fl = {}
+    for a in plats:
+        for b in plats:
+            if a == b:
+                fl[(a, b)] = (0.0, 0.0)
+            else:
+                f = rnd.uniform(0.05, 1.0)
+                fl[(a, b)] = (f, f + rnd.uniform(0.0, 1.5))
+    costs = PlacementCosts(
+        fetch_s=lambda name, p, deps: fetch[(name, p)],
+        compute_s=lambda name, p: compute[(name, p)],
+        transfer_s=lambda a, b, size: fl[(a, b)][1],
+        payload_size=1.0,
+        transfer_fl=lambda a, b, size: fl[(a, b)],
+        chunks=8,
+    )
+    return nodes, edges, {n: plats for n in names}, costs
+
+
+@pytest.mark.parametrize("topology", ["chain", "diamond", "braid"])
+def test_place_dag_with_fl_costs_matches_bruteforce(topology):
+    rnd = random.Random(20260809)
+    for trial in range(12):
+        nodes, edges, cand, costs = _random_fl_case(rnd, topology)
+        for prefetch in (True, False):
+            placed = place_dag(nodes, edges, cand, costs, prefetch)
+            got = dag_cost(nodes, edges, placed, costs, prefetch)
+            want = min(
+                dag_cost(nodes, edges, dict(zip(nodes, combo)), costs, prefetch)
+                for combo in itertools.product(*(cand[n] for n in nodes))
+            )
+            assert got == pytest.approx(want, rel=1e-9), (topology, trial)
+
+
+def test_pipelined_edges_price_below_whole_object():
+    """dag_cost with a first/last split on a data-heavy chain is strictly
+    cheaper than the same chain priced whole-object."""
+    nodes = {"a": StepSpec("a", "p0"), "b": StepSpec("b", "p1")}
+    edges = [("a", "b")]
+    kw = dict(
+        fetch_s=lambda n, p, d: 0.0,
+        compute_s=lambda n, p: 0.5,
+        transfer_s=lambda a, b, s: 0.0 if a == b else 1.0,
+        payload_size=1.0,
+    )
+    whole = dag_cost(nodes, edges, {"a": "p0", "b": "p1"}, PlacementCosts(**kw))
+    piped = dag_cost(
+        nodes,
+        edges,
+        {"a": "p0", "b": "p1"},
+        PlacementCosts(
+            **kw,
+            transfer_fl=lambda a, b, s: (0.0, 0.0) if a == b else (0.2, 1.0),
+            chunks=8,
+        ),
+    )
+    # whole edge+compute: 1.0 + 0.5; piped: first-byte 0.2 gates compute,
+    # the tail is max(0.2 + 0.5, 1.0 + 0.5/8)
+    assert piped == pytest.approx(whole - 1.5 + max(0.2 + 0.5, 1.0 + 0.5 / 8), rel=1e-9)
+    assert piped < whole
+
+
+# ---------------------------------------------------------------------------
+# telemetry: link fits + edge-bytes EWMA feeding observed costs
+# ---------------------------------------------------------------------------
+def test_transfer_fit_recovers_latency_and_bandwidth():
+    hub = TelemetryHub()
+    lat, per_byte = 0.12, 1.0 / 8e6
+    for b in (1e5, 4e5, 1e6, 2e6, 3e6):
+        hub.record_transfer("eu", "us", b, lat + b * per_byte)
+    got_lat, got_pb = hub.transfer_fit("eu", "us")
+    assert got_lat == pytest.approx(lat, rel=1e-6)
+    assert got_pb == pytest.approx(per_byte, rel=1e-6)
+
+
+def test_transfer_fit_needs_samples_and_spread():
+    hub = TelemetryHub()
+    assert hub.transfer_fit("a", "b") is None
+    for _ in range(6):  # plenty of samples, zero byte spread
+        hub.record_transfer("a", "b", 1000, 0.1)
+    assert hub.transfer_fit("a", "b") is None
+    assert hub.transfer_fit("a", "b", min_samples=99) is None
+
+
+def test_edge_bytes_ewma_and_snapshot():
+    hub = TelemetryHub()
+    assert hub.edge_bytes("u", "v") is None
+    hub.record_edge_bytes("u", "v", 1000)
+    hub.record_edge_bytes("u", "v", 2000)
+    assert 1000 < hub.edge_bytes("u", "v") < 2000
+    assert "u->v" in hub.snapshot()["edge_bytes"]
+
+
+def test_observed_costs_attaches_fl_only_when_chunked():
+    hub = TelemetryHub()
+    for b in (1e5, 1e6, 2e6):
+        for _ in range(2):
+            hub.record_transfer("eu", "us", b, 0.1 + b / 8e6)
+    fb = PlacementCosts(
+        fetch_s=lambda s, p, d: 0.0,
+        compute_s=lambda s, p: 0.1,
+        transfer_s=lambda a, b, sz: 0.9,
+        payload_size=2e6,
+    )
+    plain = observed_costs(hub, fb)
+    assert plain.transfer_fl is None and plain.chunks == 1
+    oc = observed_costs(hub, fb, chunks=8)
+    assert oc.chunks == 8
+    first, last = oc.transfer_fl("eu", "us", 2e6)
+    assert first == pytest.approx(0.1 + (2e6 / 8) / 8e6, rel=1e-6)
+    assert last == pytest.approx(0.1 + 2e6 / 8e6, rel=1e-6)
+    # unobserved pair: falls back to the whole-object estimate, degenerate
+    f2, l2 = oc.transfer_fl("xx", "yy", 2e6)
+    assert f2 == l2 == pytest.approx(0.9)
+
+
+# ---------------------------------------------------------------------------
+# prefetcher: chunked fetches
+# ---------------------------------------------------------------------------
+def test_prefetcher_streams_when_configured():
+    store = ObjectStore(NetworkModel())
+    store.put("blob", np.arange(64.0), "us")
+    pf = Prefetcher(store, stream=StreamConfig(chunks=4))
+    try:
+        out, _, modeled = pf.join(pf.start([DataRef("blob", "us", 512)], "eu"))
+        assert np.array_equal(out["blob"], np.arange(64.0))
+        stats = pf.stats_snapshot()
+        assert stats["streamed"] == 1
+        assert 0.0 < stats["first_byte_s"] < modeled
+    finally:
+        pf.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# engine: cut-through streamed edges + direct P2P payloads
+# ---------------------------------------------------------------------------
+def _engine(stream=None, payload_region=None, telemetry=None, tracer=None):
+    reg = PlatformRegistry()
+    reg.register(Platform("edge-eu", "eu", kind="edge", native_prefetch=True))
+    reg.register(Platform("cloud-us", "us", kind="cloud"))
+    dep = DagDeployment(
+        reg,
+        stream=stream,
+        payload_region=payload_region,
+        telemetry=telemetry,
+        tracer=tracer,
+    )
+    dep.store.enforce_latency = True
+    for a, b in (("eu", "us"), ("eu", "mid"), ("mid", "us")):
+        dep.store.network.set_link(a, b, 0.01, 2e8)
+    return dep
+
+
+CHAIN3 = DagSpec(
+    (DagStep("a", "edge-eu"), DagStep("b", "cloud-us"), DagStep("c", "cloud-us")),
+    (("a", "b"), ("b", "c")),
+    "chain3",
+)
+
+
+def _handler(s):
+    def h(payload, data):
+        time.sleep(s)
+        return payload
+
+    return h
+
+
+def _deploy_chain(dep):
+    dep.deploy("a", _handler(0.005), ["edge-eu"])
+    dep.deploy("b", _handler(0.03), ["cloud-us"])
+    dep.deploy("c", _handler(0.005), ["cloud-us"])
+    return dep
+
+
+def test_engine_streamed_edges_preserve_results():
+    pay = np.arange(250_000, dtype=np.float64)  # 2 MB
+    with _deploy_chain(_engine(payload_region="mid")) as dep:
+        want = dep.run(CHAIN3, pay).outputs
+        assert dep.stats["buffered_edges"] == 2 and dep.stats["streamed_edges"] == 0
+    with _deploy_chain(
+        _engine(stream=StreamConfig(chunks=4), payload_region="mid")
+    ) as dep:
+        r = dep.run(CHAIN3, pay)
+        assert np.array_equal(r.outputs, want)
+        assert dep.stats["streamed_edges"] == 2 and dep.stats["buffered_edges"] == 0
+        assert "stream_wait_s" in r.timeline["b"]
+        assert r.timeline["b"]["stream_wait_s"] >= 0.0
+        # payload buffers never leak
+        assert not dep.store.keys("__payload__")
+
+
+def test_engine_p2p_path_skips_store_and_learns_edge_bytes():
+    hub = TelemetryHub()
+    pay = np.arange(1000, dtype=np.float64)  # 8 KB: under threshold
+    stream = StreamConfig(chunks=4, p2p_threshold_bytes=1e6)
+    with _deploy_chain(_engine(stream=stream, telemetry=hub)) as dep:
+        r = dep.run(CHAIN3, pay)
+        assert np.array_equal(r.outputs, pay)
+        assert dep.stats["p2p_edges"] == 2
+        assert dep.stats["streamed_edges"] == dep.stats["buffered_edges"] == 0
+    assert hub.edge_bytes("a", "b") == pytest.approx(pay.nbytes)
+
+
+def test_engine_stream_off_keeps_legacy_stats_shape():
+    with _deploy_chain(_engine()) as dep:
+        r = dep.run(CHAIN3, 1)
+        assert r.outputs == 1
+        assert "stream_wait_s" not in r.timeline["b"]
+        assert dep.stats["streamed_edges"] == dep.stats["p2p_edges"] == 0
+        snap = dep.report()["engine"]
+        assert snap["streamed_edges"] == 0 and snap["p2p_edges"] == 0
+
+
+# ---------------------------------------------------------------------------
+# critical path: the stream_wait bucket tiles exactly
+# ---------------------------------------------------------------------------
+def _assert_tiles(cp):
+    segs = sorted(cp.segments, key=lambda s: s.t0)
+    for s0, s1 in zip(segs, segs[1:]):
+        assert s1.t0 == pytest.approx(s0.t1, abs=1e-9)
+    att = cp.attribution
+    assert sum(att.values()) == pytest.approx(cp.total_s, rel=1e-9)
+    return att
+
+
+def test_stream_wait_bucket_tiles_simulator_trace():
+    tracer = Tracer()
+    sim = S.WorkflowSimulator(
+        _zero_platforms(),
+        seed=0,
+        stream=StreamConfig(chunks=8),
+        payload_size_bytes=8e6,  # data-heavy: the pipelined tail binds
+    )
+    steps, edges = document_dag_fig4()
+    spec = S.ExperimentSpec(
+        _zero_sigma(steps), edges=edges, n_requests=3, seeds=(0,), tracer=tracer
+    )
+    sim.simulate(spec, backend="scalar")
+    waits = []
+    for trace in tracer.traces():
+        att = _assert_tiles(extract_critical_path(trace))
+        waits.append(att["stream_wait"])
+    assert max(waits) > 0.0
+
+
+def test_stream_wait_bucket_tiles_engine_trace():
+    tracer = Tracer()
+    pay = np.arange(250_000, dtype=np.float64)
+    dep = _deploy_chain(
+        _engine(stream=StreamConfig(chunks=4), payload_region="mid", tracer=tracer)
+    )
+    with dep:
+        dep.run(CHAIN3, pay)
+    (trace,) = tracer.traces()
+    att = _assert_tiles(extract_critical_path(trace))
+    assert att["stream_wait"] >= 0.0
+    assert att["compute"] > 0.0

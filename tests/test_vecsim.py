@@ -93,6 +93,30 @@ def test_frozen_reference_dag():
     assert out.tolist() == pytest.approx(FROZEN_DAG_PREFETCH, abs=1e-9)
 
 
+def test_frozen_reference_unchanged_by_single_chunk_stream():
+    """StreamConfig(chunks=1) is whole-object semantics: attaching it must
+    reproduce the frozen draws bit-for-bit (same rng stream, same floats),
+    on both the chain and the DAG."""
+    sim = S.WorkflowSimulator(
+        S.paper_platforms(), seed=3, stream=S.StreamConfig(chunks=1)
+    )
+    out = sim.run_experiment(
+        S.document_workflow_fig4(), 6, prefetch=True, backend="numpy"
+    )
+    base = S.WorkflowSimulator(S.paper_platforms(), seed=3).run_experiment(
+        S.document_workflow_fig4(), 6, prefetch=True, backend="numpy"
+    )
+    assert np.array_equal(out, base)
+    assert out.tolist() == pytest.approx(FROZEN_CHAIN_PREFETCH, abs=1e-9)
+
+    steps, edges = document_dag_fig4()
+    sim = S.WorkflowSimulator(
+        S.paper_platforms(), seed=7, stream=S.StreamConfig(chunks=1)
+    )
+    out = sim.run_dag_experiment(steps, edges, 5, prefetch=True, backend="numpy")
+    assert out.tolist() == pytest.approx(FROZEN_DAG_PREFETCH, abs=1e-9)
+
+
 # ---------------------------------------------------------------------------
 # statistical equivalence with the scalar path
 # ---------------------------------------------------------------------------
