@@ -12,6 +12,9 @@
   adapt             online recomposition vs static under 5x mid-run drift
                     (sim + real engine; asserts >= 25% recovery, <= 2%
                     no-drift overhead)
+  slo               burn-rate alerting closes the loop: cost triggers off,
+                    the obs SLO tracker alone forces the re-placement
+                    (sim + real engine + what-if profiler direction check)
   wrapper_overhead  §4.1 wrapper < 1 ms (real wall-clock)
   real_overlap      real-JAX latency hiding on this host (not simulated)
   pipeline_overlap  data-pipeline DoubleBuffer vs sync input
@@ -113,6 +116,7 @@ def main(argv=None) -> None:
         placement_bench,
         real_overlap,
         roofline,
+        slo_bench,
         streaming_bench,
         timing_bench,
         vecsim_bench,
@@ -143,6 +147,7 @@ def main(argv=None) -> None:
                 n=160 if args.quick else 1200, runs_real=40 if args.quick else 64
             ),
         ),
+        ("slo", lambda: slo_bench.main(quick=args.quick)),
         (
             "wrapper_overhead",
             lambda: wrapper_overhead.main(n_calls=100 if args.quick else 2000),

@@ -1,0 +1,265 @@
+"""SLO-driven recomposition: the burn-rate alert closes the control loop.
+
+``adapt_bench`` proved the controller recovers from drift when the COST
+model notices (the ``drift`` trigger). This bench proves the other path:
+the cost triggers are disabled outright (``every_n`` and ``drift_ratio``
+effectively infinite) and the only thing watching the system is an
+``obs.SloTracker`` — a user-facing latency objective with multi-window
+burn-rate alerting. Three parts:
+
+  - SIMULATED: the adapt-bench 3-step chain under the same 5x mid-run
+    compute drift on pA. The drift pushes every request past the
+    objective; the fast+slow burn rates breach within a couple of window
+    widths; the ``slo`` trigger (and nothing else) forces the placement
+    DP, which moves ``work`` to pB under observed costs; the windowed p95
+    returns under objective while the STATIC run keeps burning. Asserts
+    exactly that, plus that the swap decision's recorded trigger is
+    ``slo`` and zero ``drift``/``boundary`` recomputes happened.
+
+  - REAL: same loop on the actual dataflow engine via
+    ``AdaptiveDeployment(slo=...)`` with a degrading pA handler — the
+    wall-clock twin of the simulated half. Asserts the cutover audit log
+    attributes the swap to the SLO by name and the post-swap tail is
+    back under objective.
+
+  - PROFILER: the §4.2 document workflow traced on the simulator,
+    calibrated with ``obs.calibrate``, ranked by ``WhatIfProfiler``.
+    Asserts the top recommendation predicts a p95 improvement and that
+    every per-edge transfer speedup predicts a non-regression — the same
+    improvement direction the PR-8 streaming bench measured on this
+    workflow.
+
+Output: CSV-ish ``name,value`` rows (-> ``BENCH_slo.json`` via run.py).
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.adapt import AdaptiveDeployment, RecompositionController, TelemetryHub
+from repro.core import simulator as sm
+from repro.dag import DagDeployment, DagSpec, DagStep
+from repro.obs import (
+    SloSpec,
+    SloTracker,
+    Tracer,
+    WhatIfProfiler,
+    WindowedHistogram,
+    calibrate,
+)
+
+from benchmarks.adapt_bench import (
+    CANDIDATES,
+    SIM_PLATFORMS,
+    SIM_REGIONS,
+    SPEC,
+    _deploy,
+    _registry,
+    modeled_costs,
+    real_fallback,
+    steps_for,
+)
+
+NEVER = 10**9  # every_n / drift_ratio sentinel: only the slo trigger can fire
+
+# objective for the simulated chain: healthy ~2.2 s and the pB fallback
+# ~2.6 s sit under it, the 5x-drifted pA (~6.3 s) far over it
+SIM_SLO = SloSpec(
+    "chain-p95",
+    objective_s=3.5,
+    target=0.9,
+    fast_window_s=12.0,
+    slow_window_s=36.0,
+    burn_threshold=4.0,
+    min_count=6,
+)
+
+
+def run_sim_slo(n: int, drift, adaptive: bool, seed: int = 11):
+    """The adapt_bench request loop, SLO-instrumented: cost triggers off,
+    per-request latencies fed to the tracker on the sim clock (arrival
+    spacing 1 s, so seconds == requests). Returns (totals, windowed
+    histogram, tracker, controller or None, tracer, swaps)."""
+    hub = TelemetryHub(alpha=0.4)
+    tracer = Tracer()
+    slo = SloTracker(SIM_SLO, tracer=tracer)
+    sim = sm.WorkflowSimulator(
+        SIM_PLATFORMS, seed=seed, telemetry=hub if adaptive else None, drift=drift
+    )
+    ctrl = None
+    if adaptive:
+        ctrl = RecompositionController(
+            hub,
+            modeled_costs(),
+            CANDIDATES,
+            regions=SIM_REGIONS,
+            every_n=NEVER,
+            drift_ratio=NEVER,
+            min_samples=2,
+            tracer=tracer,
+            slo=slo,
+        )
+    spec = SPEC
+    totals = np.empty(n)
+    wh = WindowedHistogram(window_s=32.0, epochs=8)
+    swaps = []
+    for k in range(n):
+        steps = steps_for({s.name: s.platform for s in spec.steps})
+        totals[k] = sim.run_request(steps, k * 1.0, prefetch=True).total_s
+        now = float(k)
+        wh.observe(totals[k], now=now)
+        slo.record(totals[k], now=now)
+        if ctrl is not None:
+            placement = ctrl.tick(spec)
+            if placement is not None:
+                spec = spec.apply_placement(placement)
+                swaps.append((k, placement))
+    return totals, wh, slo, ctrl, tracer, swaps
+
+
+def run_real_slo(requests: int = 72):
+    """The real-engine half: cost triggers disabled, the SLO drives."""
+    slo_spec = SloSpec(
+        "adapt-real-p95",
+        objective_s=0.15,
+        target=0.8,
+        fast_window_s=1.5,
+        slow_window_s=4.5,
+        burn_threshold=2.0,
+        min_count=4,
+    )
+    rows = {}
+    slow = {"scale": 1.0}
+    with _deploy(DagDeployment(_registry()), slow) as engine:
+        tracer = Tracer()
+        real_spec = DagSpec(  # the adapt-bench chain on real platform names
+            (
+                DagStep("ingest", "edge"),
+                DagStep("work", "pA"),
+                DagStep("deliver", "edge"),
+            ),
+            (("ingest", "work"), ("work", "deliver")),
+            "slo-real",
+        )
+        adapt = AdaptiveDeployment(
+            engine,
+            real_spec,
+            CANDIDATES,
+            real_fallback(),
+            every_n=NEVER,
+            drift_ratio=NEVER,
+            min_samples=2,
+            tracer=tracer,
+            slo=SloTracker(slo_spec),
+        )
+        lat = []
+        for k in range(requests):
+            if k == requests // 3:
+                slow["scale"] = 8.0  # 0.03 s sleep -> 0.24 s, over objective
+            lat.append(adapt.run(1.0).total_s)
+        tail = lat[-(requests // 4) :]
+        rows["real_slo_post_swap_p95_s"] = float(np.quantile(tail, 0.95))
+        rows["real_slo_alerts"] = float(adapt.slo.alerts)
+        rows["real_route_version"] = float(adapt.routes.version)
+        swaps = list(adapt.swaps)
+        assert swaps, "SLO breach never produced a cutover"
+        assert swaps[0]["trigger"] == "slo", swaps
+        assert swaps[0]["slo"] == slo_spec.name, swaps
+        assert any(
+            m == "work" and dst == "pB"
+            for s in swaps
+            for m, (_, dst) in s["moved"].items()
+        ), swaps
+        assert adapt.controller.stats["slo_triggers"] >= 1
+        assert adapt.controller.stats["drift_triggers"] == 0
+        burn_events = [e for e in tracer.events if e[1] == "slo.burn"]
+        assert burn_events, "no slo.burn event reached the tracer ring"
+        assert rows["real_slo_post_swap_p95_s"] < slo_spec.objective_s, rows
+    return rows
+
+
+def main(n: int = 240, runs_real: int = 72, quick: bool = False) -> dict:
+    if quick:
+        n, runs_real = 160, 60
+    half = n // 2
+    drift = sm.DriftSchedule([sm.DriftEvent(half, "pA", compute_scale=5.0)])
+
+    t0 = time.perf_counter()
+    static, wh_s, slo_s, _, _, _ = run_sim_slo(n, drift, adaptive=False)
+    adaptive, wh_a, slo_a, ctrl, tracer, swaps = run_sim_slo(n, drift, adaptive=True)
+    end = float(n)
+    rows = {
+        "sim_static_tail_p95_s": wh_s.window(end).quantile(0.95),
+        "sim_adaptive_tail_p95_s": wh_a.window(end).quantile(0.95),
+        "sim_slo_alerts": float(slo_a.alerts),
+        "sim_slo_triggers": float(ctrl.stats["slo_triggers"]),
+        "sim_swap_at_request": float(swaps[0][0]) if swaps else -1.0,
+        "sim_wall_s": time.perf_counter() - t0,
+    }
+
+    # the loop, asserted end to end: burn-rate alert -> slo trigger (and
+    # ONLY the slo trigger) -> swap -> windowed p95 back under objective
+    assert any(e[1] == "slo.burn" for e in tracer.events), "no slo.burn event"
+    assert swaps, "SLO breach never recomposed"
+    decisions = [e for e in tracer.events if e[1] == "recompose.decision"]
+    swap_decisions = [e for e in decisions if e[2]["outcome"] == "swap"]
+    assert swap_decisions and all(
+        e[2]["trigger"] == "slo" and e[2]["slo"] == SIM_SLO.name
+        for e in swap_decisions
+    ), decisions
+    assert ctrl.stats["drift_triggers"] == 0, ctrl.stats
+    assert ctrl.stats["slo_triggers"] >= 1, ctrl.stats
+    assert rows["sim_adaptive_tail_p95_s"] < SIM_SLO.objective_s, rows
+    assert rows["sim_static_tail_p95_s"] > SIM_SLO.objective_s, rows
+    # the static run's tracker is still burning at the end; the adaptive
+    # one recovered (its fast window cleared after the cutover)
+    assert slo_s.burning, "static run should still be burning"
+    assert not slo_a.burning, "adaptive run should have recovered"
+
+    rows.update(run_real_slo(runs_real))
+
+    # what-if profiler on the traced document workflow: the top ranked
+    # intervention must predict a p95 win, and every per-edge transfer
+    # speedup must predict a non-regression — the improvement direction
+    # the PR-8 streaming bench measured on this same workflow
+    doc_tracer = Tracer()
+    doc_sim = sm.WorkflowSimulator(sm.paper_platforms(), seed=3)
+    doc_edges = (
+        ("check", "virus"),
+        ("check", "ocr"),
+        ("virus", "e_mail"),
+        ("ocr", "e_mail"),
+    )
+    doc_spec = sm.ExperimentSpec(
+        sm.document_workflow_fig4(),
+        edges=doc_edges,
+        n_requests=1,
+        prefetch=True,
+        tracer=doc_tracer,
+    )
+    doc_sim.simulate(doc_spec, backend="scalar")
+    prof = WhatIfProfiler(calibrate(doc_tracer.last()), n_requests=80 if quick else 200)
+    ranked = prof.rank(speedup=2.0)
+    top = ranked[0]
+    rows["prof_baseline_p95_s"] = top.baseline_s
+    rows["prof_top_delta_pct"] = top.delta_pct
+    transfers = [iv for iv in ranked if iv.kind == "transfer"]
+    rows["prof_best_transfer_delta_pct"] = min(iv.delta_pct for iv in transfers)
+    assert top.delta_s < 0, ranked
+    assert transfers and all(iv.delta_s <= 1e-9 for iv in transfers), transfers
+    print(f"profiler top: {top.label}")
+
+    print("name,value")
+    for name, value in rows.items():
+        print(f"{name},{value:.4f}")
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true", help="reduced sample counts")
+    main(quick=ap.parse_args().quick)

@@ -60,105 +60,29 @@ def run_real(warm_runs: int = 1):
 
 
 # -- calibration ----------------------------------------------------------------
-def _full_fetch_s(trace) -> dict:
-    """Full (pre-overlap) fetch seconds per store key, from the component
-    span events. The node span's ``fetch_s`` is only the RESIDUAL the
-    request waited; the prefetch/fetch events carry the modeled duration
-    the simulator should reproduce."""
-    out = {}
-    for span in trace.spans:
-        for _t, name, attrs in span.events:
-            if name in ("prefetch.done", "fetch.cold") and "modeled_s" in attrs:
-                key = attrs.get("key")
-                out[key] = max(out.get(key, 0.0), float(attrs["modeled_s"]))
-    return out
-
-
-def _estimate_msg_s(trace, default: float = 0.005) -> float:
-    """Poke message latency from observed poke times: median of
-    ``(poke_t - t0) / depth`` over nodes with depth >= 1."""
-    nodes = trace.node_spans()
-    preds = {n: set(s.attrs.get("preds") or ()) for n, s in nodes.items()}
-    depth, frontier, d = {}, {n for n, p in preds.items() if not p}, 0
-    while frontier:
-        for n in frontier:
-            depth[n] = d
-        frontier = {
-            n for n in preds if n not in depth and preds[n] <= set(depth)
-        }
-        d += 1
-    ests = [
-        (nodes[n].attrs["poke_t"] - trace.root.t_start) / depth[n]
-        for n in nodes
-        if depth.get(n, 0) >= 1 and nodes[n].attrs.get("poke_t") is not None
-    ]
-    return float(np.median(ests)) if ests else default
-
-
 def calibrated_sim_trace(real_trace):
     """Simulate the same DAG with every draw pinned to what the real trace
-    observed. Returns (trace, simulator)."""
+    observed — ``obs.profiler.calibrate`` does the trace -> model
+    extraction (cold/compute/fetch medians, per-edge ``transfer_table``,
+    estimated poke latency); region metadata comes from the deployment's
+    platform registry so unobserved edges still price correctly. Returns
+    (trace, simulator)."""
     import document_workflow as dw
     from repro.core import simulator as sm
-    from repro.obs import Tracer
-
-    dag = dw.dag_spec(True)
-    nodes = real_trace.node_spans()
-    fetch_by_key = _full_fetch_s(real_trace)
+    from repro.obs import Tracer, calibrate
 
     reg = dw.build_platforms()
-    platforms = []
-    for pname in reg.names():
-        plat = reg.get(pname)
-        colds = [
-            nodes[s.name].attrs.get("cold_s", 0.0)
-            for s in dag.steps
-            if s.platform == pname and s.name in nodes
-        ]
-        platforms.append(
-            sm.SimPlatform(
-                pname,
-                plat.region,
-                native_prefetch=plat.native_prefetch,
-                allows_sync=getattr(plat, "allows_sync", True),
-                cold_start=sm.Dist(max(colds, default=0.0), 0.0),
-            )
-        )
-
-    steps = []
-    for s in dag.steps:
-        span = nodes[s.name]
-        fetch = sum(fetch_by_key.get(ref.key, 0.0) for ref in s.data_deps)
-        # residual fetch the prefetcher could not hide is a lower bound
-        fetch = max(fetch, span.attrs.get("fetch_s", 0.0))
-        steps.append(
-            sm.SimStep(
-                s.name,
-                s.platform,
-                compute=sm.Dist(span.attrs.get("compute_s", 0.0), 0.0),
-                fetch=sm.Dist(fetch, 0.0),
-                prefetch=True,
-            )
-        )
-
-    edge_table = {}
-    for name, span in nodes.items():
-        for pred, tr_s in (span.attrs.get("transfer_s") or {}).items():
-            edge_table[(pred, name)] = float(tr_s)
-
-    class _CalibratedSim(sm.WorkflowSimulator):
-        def _edge_transfer_s(self, src_step, dst_step):
-            key = (src_step.name, dst_step.name)
-            if key in edge_table:
-                return edge_table[key]
-            return super()._edge_transfer_s(src_step, dst_step)
-
-    tracer = Tracer()
-    simulator = _CalibratedSim(
-        platforms, msg_latency_s=_estimate_msg_s(real_trace), seed=0
+    world = calibrate(
+        real_trace, regions={name: reg.get(name).region for name in reg.names()}
     )
+    tracer = Tracer()
+    simulator = world.simulator(seed=0)
     spec = sm.ExperimentSpec(
-        steps, edges=dag.edges, n_requests=1, prefetch=True, tracer=tracer
+        world.steps,
+        edges=world.edges,
+        n_requests=1,
+        prefetch=world.prefetch,
+        tracer=tracer,
     )
     simulator.simulate(spec, backend="scalar")
     return tracer.last(), simulator
@@ -180,9 +104,7 @@ def diff_rows(real_trace, sim_trace) -> dict:
     for bucket in BUCKETS:
         rows[f"real_{bucket}_s"] = round(ra.get(bucket, 0.0), 6)
         rows[f"sim_{bucket}_s"] = round(sa.get(bucket, 0.0), 6)
-        rows[f"delta_{bucket}_s"] = round(
-            sa.get(bucket, 0.0) - ra.get(bucket, 0.0), 6
-        )
+        rows[f"delta_{bucket}_s"] = round(sa.get(bucket, 0.0) - ra.get(bucket, 0.0), 6)
     return rows
 
 

@@ -99,6 +99,15 @@ class RecompositionController:
     latency *distributions* of both placements under the observed costs,
     compared at the scorer's quantile (a placement that only wins on the
     mean but loses the tail does not get swapped in).
+
+    SLO trigger: with an ``obs.SloTracker`` wired (``slo=``), a burn-rate
+    alert forces a recompute on the next tick — the user-facing objective
+    can demand a re-placement even when mean costs have not drifted (tail
+    degradation is invisible to the drift ratio). Latched on the
+    tracker's ``alerts`` counter: one forced recompute per breach
+    episode, not one per burning request, and the latch survives a
+    cooldown window (the episode is handled when the recompute actually
+    runs). Decision events carry ``trigger="slo"`` and the SLO name.
     """
 
     def __init__(
@@ -115,6 +124,7 @@ class RecompositionController:
         min_improvement: float = 0.0,
         scorer=None,
         tracer=None,
+        slo=None,
     ):
         self.hub = hub
         self.fallback = fallback
@@ -127,6 +137,7 @@ class RecompositionController:
         self.cooldown_requests = cooldown_requests
         self.min_improvement = min_improvement
         self.scorer = scorer
+        self.slo = slo  # duck-typed obs.SloTracker (alerts counter + spec)
         # duck-typed obs.Tracer: every recompute decision (trigger, old/new
         # placement, predicted vs. current cost, outcome) lands in its
         # control-plane event ring — adapt behavior becomes auditable
@@ -136,9 +147,12 @@ class RecompositionController:
         self._cooldown_until = 0  # tick count before which recomputes pause
         self._placed_cost: Optional[float] = None  # active placement's cost
         #   under the observations that selected it (the drift reference)
+        self._slo_handled = 0  # alerts count at the last slo-forced recompute
+        self.last_trigger: Optional[str] = None  # what caused the last swap
         self.stats = {
             "ticks": 0,
             "drift_triggers": 0,
+            "slo_triggers": 0,
             "recomputes": 0,
             "swaps": 0,
             "cooldown_skips": 0,
@@ -160,19 +174,26 @@ class RecompositionController:
         nodes = {s.name: s for s in spec.steps}
         edges = list(spec.edges)
         placement = {s.name: s.platform for s in spec.steps}
+        # a burn-rate alert since the last slo-forced recompute? (checked
+        # after the cooldown gate, so the latch survives a cooldown and
+        # fires on the first eligible tick)
+        slo_fired = self.slo is not None and self.slo.alerts > self._slo_handled
         costs = self.costs()
         current_cost = None
         drifted = False
         if placed_cost is not None:
             current_cost = dag_cost(nodes, edges, placement, costs, self.prefetch)
             drifted = current_cost > self.drift_ratio * placed_cost
-        if not drifted and n % self.every_n != 0:
+        if not slo_fired and not drifted and n % self.every_n != 0:
             return None
         with self._lock:
-            if drifted:
+            if slo_fired:
+                self.stats["slo_triggers"] += 1
+                self._slo_handled = self.slo.alerts
+            elif drifted:
                 self.stats["drift_triggers"] += 1
             self.stats["recomputes"] += 1
-        trigger = "drift" if drifted else "boundary"
+        trigger = "slo" if slo_fired else ("drift" if drifted else "boundary")
         new_placement = place_dag(nodes, edges, self.candidates, costs, self.prefetch)
         new_cost = dag_cost(nodes, edges, new_placement, costs, self.prefetch)
         if new_placement == placement:
@@ -200,6 +221,7 @@ class RecompositionController:
             self._placed_cost = new_cost
             self.stats["swaps"] += 1
             self._cooldown_until = n + self.cooldown_requests
+            self.last_trigger = trigger
         self._record(
             trigger, n, "swap", placement, new_placement, new_cost, current_cost
         )
@@ -211,18 +233,18 @@ class RecompositionController:
         """Mirror one recompute decision into the tracer's event ring."""
         if self.tracer is None:
             return
-        self.tracer.record_event(
-            "recompose.decision",
-            {
-                "trigger": trigger,
-                "tick": n,
-                "outcome": outcome,
-                "placement": dict(placement),
-                "new_placement": dict(new_placement) if new_placement else None,
-                "predicted_cost_s": new_cost,
-                "current_cost_s": current_cost,
-            },
-        )
+        attrs = {
+            "trigger": trigger,
+            "tick": n,
+            "outcome": outcome,
+            "placement": dict(placement),
+            "new_placement": dict(new_placement) if new_placement else None,
+            "predicted_cost_s": new_cost,
+            "current_cost_s": current_cost,
+        }
+        if trigger == "slo" and self.slo is not None:
+            attrs["slo"] = self.slo.spec.name
+        self.tracer.record_event("recompose.decision", attrs)
 
     def _improves(
         self, nodes, edges, new_placement, placement, new_cost, current_cost, costs
@@ -269,6 +291,7 @@ class AdaptiveDeployment:
         min_improvement: float = 0.0,
         scorer=None,
         tracer=None,
+        slo=None,
     ):
         self.deployment = deployment
         self.hub = attach(deployment, hub)
@@ -280,6 +303,12 @@ class AdaptiveDeployment:
             from repro.obs import instrument
 
             instrument(deployment, tracer)
+        # duck-typed obs.SloTracker: fed every request's end-to-end latency
+        # (wall clock, same clock the engine's spans use) so burn-rate
+        # breaches can force a re-placement through the controller
+        self.slo = slo
+        if slo is not None and tracer is not None and slo.tracer is None:
+            slo.tracer = tracer  # slo.burn lands in the same event ring
         self.prewarm = prewarm
         for step in spec.steps:  # fail fast: candidates must be deployed
             for platform in candidates.get(step.name, ()):
@@ -301,6 +330,7 @@ class AdaptiveDeployment:
             min_improvement=min_improvement,
             scorer=scorer,
             tracer=tracer,
+            slo=slo,
         )
         self.routes = RouteTable(spec)
         self._cut_lock = threading.Lock()
@@ -310,13 +340,15 @@ class AdaptiveDeployment:
     def run(self, payload, timeout_s: Optional[float] = 120.0):
         version, spec = self.routes.current()
         result = self.deployment.run(spec, payload, timeout_s)
+        if self.slo is not None:
+            self.slo.record(result.total_s, now=time.perf_counter())
         placement = self.controller.tick(self.routes.spec)
         if placement is not None:
-            self._cutover(placement)
+            self._cutover(placement, trigger=self.controller.last_trigger)
         return result
 
     # -- cutover ---------------------------------------------------------------
-    def _cutover(self, placement: dict) -> int:
+    def _cutover(self, placement: dict, trigger: Optional[str] = None) -> int:
         """Publish a new route version: validate, pre-warm, swap."""
         with self._cut_lock:
             _, spec = self.routes.current()
@@ -339,10 +371,31 @@ class AdaptiveDeployment:
                             fn.name, platform, fn.compile_fn, fn.abstract_args
                         )
             version = self.routes.swap(new_spec)
-            self.swaps.append({"version": version, "moved": moved, "at": time.time()})
+            # which SLO fired is part of the audit record: a cutover forced
+            # by an objective breach must be attributable to that objective
+            slo_name = (
+                self.slo.spec.name
+                if trigger == "slo" and self.slo is not None
+                else None
+            )
+            self.swaps.append(
+                {
+                    "version": version,
+                    "moved": moved,
+                    "at": time.time(),
+                    "trigger": trigger,
+                    "slo": slo_name,
+                }
+            )
             if self.tracer is not None:
                 self.tracer.record_event(
-                    "recompose.cutover", {"version": version, "moved": moved}
+                    "recompose.cutover",
+                    {
+                        "version": version,
+                        "moved": moved,
+                        "trigger": trigger,
+                        "slo": slo_name,
+                    },
                 )
             return version
 
@@ -354,6 +407,8 @@ class AdaptiveDeployment:
             "swaps": list(self.swaps),
             "controller": dict(self.controller.stats),
         }
+        if self.slo is not None:
+            out["adapt"]["slo"] = self.slo.snapshot()
         return out
 
     def shutdown(self):

@@ -363,11 +363,9 @@ def _build(sim, order, step_sets, preds, succs, t0s, drift, dtype, stream=None):
             row["compute_sigma"][i] = step.compute.sigma
             row["plat_idx"][i] = plat_row[step.platform]
             for j, u in enumerate(preds[v]):
-                src_plat = sim.platforms[steps[u].platform]
-                if stream is None:
-                    first = last = sim._transfer_s(src_plat, plat)
-                else:
-                    first, last = sim._transfer_fl(src_plat, plat)
+                # routes through the table-aware per-edge resolver, so a
+                # calibrated transfer_table is honored on this backend too
+                first, last = sim._pair_transfer_fl(steps[u], step)
                 row["transfer"][i, j] = first
                 row["transfer_last"][i, j] = last
         return row

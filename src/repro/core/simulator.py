@@ -396,6 +396,7 @@ class WorkflowSimulator:
         telemetry=None,
         drift: Optional[DriftSchedule] = None,
         stream: Optional[StreamConfig] = None,
+        transfer_table: Optional[dict] = None,
     ):
         self.platforms = {p.name: p for p in platforms}
         self.msg = msg_latency_s
@@ -407,6 +408,10 @@ class WorkflowSimulator:
         self.telemetry = telemetry  # optional TelemetryHub (repro.adapt)
         self.drift = drift  # optional DriftSchedule (mid-run injection)
         self.stream = stream  # optional StreamConfig (chunked data plane)
+        # optional {(src_step_name, dst_step_name): seconds} override of the
+        # platform transfer model per edge — the calibration entry point
+        # (obs.profiler / scripts/trace_diff pin observed per-edge costs)
+        self.transfer_table = transfer_table
         self.tracer = None  # optional obs.Tracer (per-request span trees)
         self._req_k = 0  # running request index (feeds the drift schedule)
         self._last_use: dict = {}
@@ -456,13 +461,40 @@ class WorkflowSimulator:
             return (1.0, 1.0, 1.0)
         return self.drift.scales(self._req_k, platform)
 
+    def _pair_transfer_fl(self, src_step: SimStep, dst_step: SimStep) -> tuple:
+        """Base (first_byte, last_byte) transfer for one edge, BEFORE drift
+        — the single resolution point every backend routes through. A
+        ``transfer_table`` hit (keyed by step names) overrides the platform
+        model with an observed per-edge cost, treated as unsplittable: this
+        is how trace-calibrated simulators (``obs.profiler``,
+        ``scripts/trace_diff``) pin measured transfers onto the model.
+        Without a table the platform model applies unchanged (bit-for-bit:
+        whole-object when no ``StreamConfig`` is attached, first/last split
+        otherwise)."""
+        if self.transfer_table is not None:
+            hit = self.transfer_table.get((src_step.name, dst_step.name))
+            if hit is not None:
+                return hit, hit
+        src = self.platforms[src_step.platform]
+        dst = self.platforms[dst_step.platform]
+        if self.stream is None:
+            t = self._transfer_s(src, dst)
+            return t, t
+        return self._transfer_fl(src, dst)
+
     def _edge_transfer_s(self, src_step: SimStep, dst_step: SimStep) -> float:
-        """Payload transfer for one edge, with drift applied: a degraded
-        platform slows every link it terminates (max of the two endpoint
-        scales — rescaling AFTER the model keeps rng consumption fixed)."""
-        tr = self._transfer_s(
-            self.platforms[src_step.platform], self.platforms[dst_step.platform]
-        )
+        """Payload transfer for one edge (whole-object view), with drift
+        applied: a degraded platform slows every link it terminates (max of
+        the two endpoint scales — rescaling AFTER the model keeps rng
+        consumption fixed)."""
+        if self.transfer_table is not None:
+            tr = self.transfer_table.get((src_step.name, dst_step.name))
+        else:
+            tr = None
+        if tr is None:
+            tr = self._transfer_s(
+                self.platforms[src_step.platform], self.platforms[dst_step.platform]
+            )
         if self.drift is not None:
             tr *= max(
                 self._scales(src_step.platform)[1],
@@ -475,12 +507,7 @@ class WorkflowSimulator:
         payload join gates on the first component, the compute tail on the
         last. With no ``StreamConfig`` both components are the whole-object
         transfer (the exact value ``_edge_transfer_s`` returns)."""
-        if self.stream is None:
-            tr = self._edge_transfer_s(src_step, dst_step)
-            return tr, tr
-        first, last = self._transfer_fl(
-            self.platforms[src_step.platform], self.platforms[dst_step.platform]
-        )
+        first, last = self._pair_transfer_fl(src_step, dst_step)
         if self.drift is not None:
             sc = max(
                 self._scales(src_step.platform)[1],
@@ -805,15 +832,7 @@ class WorkflowSimulator:
                 arrivals = []
                 arrivals_last = []
                 for u in preds[v]:
-                    if stream_on:
-                        first, last = self._transfer_fl(
-                            self.platforms[steps[u].platform], plat
-                        )
-                    else:
-                        first = self._transfer_s(
-                            self.platforms[steps[u].platform], plat
-                        )
-                        last = first
+                    first, last = self._pair_transfer_fl(steps[u], step)
                     if self.drift is not None:
                         sc = np.maximum(
                             scales_for(steps[u].platform)[1],
@@ -1210,16 +1229,7 @@ class WorkflowSimulator:
                     start_k = max(pay_k, p1) if poked else p1
                 payload_t, transfer_s = {}, {}
                 for u in preds[v]:
-                    if stream is None:
-                        tr = self._transfer_s(
-                            self.platforms[steps[u].platform],
-                            self.platforms[step.platform],
-                        )
-                    else:
-                        tr = self._transfer_fl(
-                            self.platforms[steps[u].platform],
-                            self.platforms[step.platform],
-                        )[0]
+                    tr = self._pair_transfer_fl(steps[u], step)[0]
                     if drift is not None:
                         tr *= max(
                             drift.scales(k, steps[u].platform)[1],

@@ -250,6 +250,11 @@ class DagDeployment:
         metrics = getattr(self.tracer, "metrics", None)
         if metrics is not None:
             out["metrics"] = metrics.snapshot()
+        sampler = getattr(self.tracer, "sampler", None)
+        if sampler is not None:
+            # tail-sampling accounting: kept/evicted/seen (exact) and the
+            # current slow-trace threshold — retention must be auditable
+            out["trace_sampler"] = sampler.snapshot()
         return out
 
     def shutdown(self):

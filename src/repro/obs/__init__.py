@@ -1,12 +1,21 @@
 """repro.obs — per-request tracing, histogram metrics, critical-path
-attribution, and Perfetto export.
+attribution, SLOs, tail sampling, causal profiling, and Perfetto export.
 
-The observability layer over the GeoFF engine and simulator: a ``Tracer``
-collects per-request span trees from the real DAG engine and from all
-three simulator backends in one schema, ``MetricsRegistry`` keeps bounded
-log-bucketed latency histograms (p50/p95/p99), ``extract_critical_path``
-attributes end-to-end latency to cold/fetch/compute/transfer/poke-slack,
-and ``write_chrome_trace`` exports ``chrome://tracing`` / Perfetto JSON.
+The observability layer over the GeoFF engine and simulator. Level 1
+(PR 7) sees: a ``Tracer`` collects per-request span trees from the real
+DAG engine and all three simulator backends in one schema,
+``MetricsRegistry`` keeps bounded log-bucketed latency histograms,
+``extract_critical_path`` attributes end-to-end latency to
+cold/fetch/compute/transfer/stream-wait/poke-slack, and
+``write_chrome_trace`` exports Perfetto JSON. Level 2 (this layer) acts:
+``WindowedHistogram`` turns quantiles time-local ("p95 over the last N
+seconds"), ``SloSpec``/``SloTracker`` evaluate multi-window burn rates
+and emit ``slo.burn`` events, ``TailSampler`` keeps only the traces worth
+debugging (slow / SLO-violating / head-sampled), and
+``calibrate``/``WhatIfProfiler`` replay observed traces with virtual
+speedups to rank what to fix next — advice the recomposition controller
+closes the loop on (``trigger="slo"``).
+
 ``instrument(deployment)`` wires a tracer into a live deployment the same
 way ``repro.adapt.attach`` wires telemetry.
 """
@@ -17,21 +26,39 @@ from repro.obs.critical_path import (
     Segment,
     extract_critical_path,
 )
-from repro.obs.metrics import LogHistogram, MetricsRegistry
+from repro.obs.metrics import LogHistogram, MetricsRegistry, WindowedHistogram
 from repro.obs.perfetto import to_chrome_trace, write_chrome_trace
+from repro.obs.profiler import (
+    CalibratedWorkflow,
+    Intervention,
+    WhatIfProfiler,
+    calibrate,
+    profile_trace,
+)
+from repro.obs.sampler import TailSampler
+from repro.obs.slo import SloSpec, SloTracker
 from repro.obs.trace import Span, Trace, Tracer, instrument
 
 __all__ = [
     "BUCKETS",
+    "CalibratedWorkflow",
     "CriticalPath",
+    "Intervention",
     "LogHistogram",
     "MetricsRegistry",
     "Segment",
+    "SloSpec",
+    "SloTracker",
     "Span",
+    "TailSampler",
     "Trace",
     "Tracer",
+    "WhatIfProfiler",
+    "WindowedHistogram",
+    "calibrate",
     "extract_critical_path",
     "instrument",
+    "profile_trace",
     "to_chrome_trace",
     "write_chrome_trace",
 ]

@@ -91,9 +91,7 @@ class Span:
         return (self.t_end if self.t_end is not None else self.t_start) - self.t_start
 
     def add_event(self, name: str, attrs=None, t: Optional[float] = None):
-        self.events.append(
-            (time.perf_counter() if t is None else t, name, attrs or {})
-        )
+        self.events.append((time.perf_counter() if t is None else t, name, attrs or {}))
 
     def end(self, t: Optional[float] = None):
         self.t_end = time.perf_counter() if t is None else t
@@ -158,6 +156,12 @@ class Tracer:
     backends (numpy / jax) emit per experiment: k evenly spaced requests,
     chosen deterministically (never from the experiment's rng — tracing
     stays draw-neutral).
+
+    ``sampler`` (an ``obs.sampler.TailSampler``) makes ring retention
+    *tail-based*: ``finish`` asks it whether this request's span tree is
+    worth keeping (slow / SLO-violating / head-sampled) and drops the tree
+    otherwise. Metrics fold regardless of the verdict, so aggregates stay
+    unbiased; kept traces carry ``attrs["sampled"]`` with the reason.
     """
 
     def __init__(
@@ -166,8 +170,10 @@ class Tracer:
         sample: int = 8,
         metrics: Optional[MetricsRegistry] = None,
         max_events: int = 4096,
+        sampler=None,
     ):
         self.sample = sample
+        self.sampler = sampler
         self.metrics = metrics if metrics is not None else MetricsRegistry()
         self.events = deque(maxlen=max_events)  # control-plane events
         self._traces = deque(maxlen=max_traces)
@@ -197,8 +203,14 @@ class Tracer:
     def finish(self, trace: Trace, t_end: Optional[float] = None) -> Trace:
         if trace.root.t_end is None:
             trace.root.end(t_end)
-        with self._lock:
-            self._traces.append(trace)
+        keep = True
+        if self.sampler is not None:
+            keep, reason = self.sampler.decide(trace.total_s, now=trace.root.t_end)
+            if keep:
+                trace.root.attrs["sampled"] = reason
+        if keep:
+            with self._lock:
+                self._traces.append(trace)
         m = self.metrics
         if m is not None:
             with trace._lock:
@@ -211,7 +223,10 @@ class Tracer:
                 label = "all" if s.kind == "request" else (
                     s.attrs.get("node") or s.name
                 )
-                m.observe(f"{s.kind}_s/{label}", s.duration_s)
+                # windows keyed on the span's own clock (perf_counter for
+                # the engine, sim seconds for the backends — never mixed
+                # within one tracer)
+                m.observe(f"{s.kind}_s/{label}", s.duration_s, now=s.t_end)
         return trace
 
     def traces(self) -> list:
@@ -246,9 +261,7 @@ class Tracer:
 
     # -- control-plane events (no active request) ------------------------------
     def record_event(self, name: str, attrs=None, t: Optional[float] = None):
-        self.events.append(
-            (time.perf_counter() if t is None else t, name, attrs or {})
-        )
+        self.events.append((time.perf_counter() if t is None else t, name, attrs or {}))
 
 
 class _Bound:
