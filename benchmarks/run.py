@@ -15,6 +15,10 @@
   slo               burn-rate alerting closes the loop: cost triggers off,
                     the obs SLO tracker alone forces the re-placement
                     (sim + real engine + what-if profiler direction check)
+  faults            durability under injected outages: the outage trigger
+                    holds availability >= 99% (sim) / >= 95% (real engine)
+                    while static placements lose the whole window; dead
+                    letters + retry span events on the report surfaces
   wrapper_overhead  §4.1 wrapper < 1 ms (real wall-clock)
   real_overlap      real-JAX latency hiding on this host (not simulated)
   pipeline_overlap  data-pipeline DoubleBuffer vs sync input
@@ -110,6 +114,7 @@ def main(argv=None) -> None:
     from benchmarks import (
         adapt_bench,
         dag_overlap,
+        faults_bench,
         jaxsim_bench,
         paper_figs,
         pipeline_overlap,
@@ -148,6 +153,12 @@ def main(argv=None) -> None:
             ),
         ),
         ("slo", lambda: slo_bench.main(quick=args.quick)),
+        (
+            "faults",
+            lambda: faults_bench.main(
+                n=240 if args.quick else 400, runs_real=48 if args.quick else 64
+            ),
+        ),
         (
             "wrapper_overhead",
             lambda: wrapper_overhead.main(n_calls=100 if args.quick else 2000),

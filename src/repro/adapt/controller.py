@@ -108,6 +108,20 @@ class RecompositionController:
     episode, not one per burning request, and the latch survives a
     cooldown window (the episode is handled when the recompute actually
     runs). Decision events carry ``trigger="slo"`` and the SLO name.
+
+    Outage trigger (PR 10): the controller diffs the hub's error counts
+    each tick; a cell with fresh failures whose error-rate EWMA is at or
+    above ``outage_threshold`` is marked dead for ``outage_ttl`` ticks —
+    while marked, ``observed_costs`` prices it ``inf`` so ``place_dag``
+    must route around it, and if the ACTIVE placement sits on a dead cell
+    a recompute fires immediately with ``trigger="outage"``. When a mark
+    expires the controller forgets the cell's error history
+    (``hub.reset_errors``) and forces one more recompute: an optimistic
+    probe that fails back if the platform recovered — and re-marks within
+    a few requests if it has not (fresh errors re-trip the threshold).
+    Trigger precedence: slo > outage > drift > boundary. Detection and
+    recovery land in the tracer ring as ``outage.detected`` /
+    ``outage.cleared`` instants, next to ``recompose.decision``.
     """
 
     def __init__(
@@ -125,6 +139,8 @@ class RecompositionController:
         scorer=None,
         tracer=None,
         slo=None,
+        outage_threshold: float = 0.5,
+        outage_ttl: int = 24,
     ):
         self.hub = hub
         self.fallback = fallback
@@ -137,6 +153,8 @@ class RecompositionController:
         self.cooldown_requests = cooldown_requests
         self.min_improvement = min_improvement
         self.scorer = scorer
+        self.outage_threshold = outage_threshold
+        self.outage_ttl = outage_ttl
         self.slo = slo  # duck-typed obs.SloTracker (alerts counter + spec)
         # duck-typed obs.Tracer: every recompute decision (trigger, old/new
         # placement, predicted vs. current cost, outcome) lands in its
@@ -148,19 +166,77 @@ class RecompositionController:
         self._placed_cost: Optional[float] = None  # active placement's cost
         #   under the observations that selected it (the drift reference)
         self._slo_handled = 0  # alerts count at the last slo-forced recompute
+        self._outage_marks: dict = {}  # (step, platform) -> expiry tick
+        self._err_seen: dict = {}  # (step, platform) -> error count last tick
         self.last_trigger: Optional[str] = None  # what caused the last swap
         self.stats = {
             "ticks": 0,
             "drift_triggers": 0,
             "slo_triggers": 0,
+            "outage_triggers": 0,
             "recomputes": 0,
             "swaps": 0,
             "cooldown_skips": 0,
             "improvement_vetoes": 0,
         }
 
-    def costs(self) -> PlacementCosts:
-        return observed_costs(self.hub, self.fallback, self.regions, self.min_samples)
+    def costs(self, outages=None) -> PlacementCosts:
+        return observed_costs(
+            self.hub, self.fallback, self.regions, self.min_samples, outages=outages
+        )
+
+    def outages(self) -> set:
+        """The (step, platform) cells currently marked dead."""
+        with self._lock:
+            return set(self._outage_marks)
+
+    def _update_outages(self, n: int) -> tuple:
+        """Advance the outage state machine one tick. Returns ``(live,
+        cleared)``: the set of cells currently marked dead, and whether any
+        mark expired this tick (which forces a fail-back probe recompute).
+        """
+        counts = self.hub.error_counts()
+        detected, cleared = [], []
+        with self._lock:
+            for cell, total in counts.items():
+                fresh = total - self._err_seen.get(cell, 0)
+                self._err_seen[cell] = total
+                if fresh <= 0:
+                    continue
+                rate = self.hub.error_rate(*cell)
+                if rate is not None and rate >= self.outage_threshold:
+                    if cell not in self._outage_marks:
+                        detected.append((cell, rate))
+                    # fresh failures extend a live mark: the TTL counts
+                    # from the LAST observed failure, not the first
+                    self._outage_marks[cell] = n + self.outage_ttl
+            for cell, until in list(self._outage_marks.items()):
+                if until <= n:
+                    del self._outage_marks[cell]
+                    cleared.append(cell)
+            live = set(self._outage_marks)
+        for cell in cleared:
+            # optimistic probe: drop the cell's failure history so the
+            # recompute below can price it normally again; a still-dead
+            # platform re-marks within a few requests
+            self.hub.reset_errors(*cell)
+        if self.tracer is not None:
+            for (step, platform), rate in detected:
+                self.tracer.record_event(
+                    "outage.detected",
+                    {
+                        "step": step,
+                        "platform": platform,
+                        "error_rate": rate,
+                        "tick": n,
+                        "until_tick": n + self.outage_ttl,
+                    },
+                )
+            for step, platform in cleared:
+                self.tracer.record_event(
+                    "outage.cleared", {"step": step, "platform": platform, "tick": n}
+                )
+        return live, bool(cleared)
 
     def tick(self, spec: DagSpec) -> Optional[dict]:
         with self._lock:
@@ -178,22 +254,40 @@ class RecompositionController:
         # after the cooldown gate, so the latch survives a cooldown and
         # fires on the first eligible tick)
         slo_fired = self.slo is not None and self.slo.alerts > self._slo_handled
-        costs = self.costs()
+        # outage state machine: dead cells price inf below; an active
+        # placement sitting on one (or a mark expiring — the fail-back
+        # probe) forces a recompute right now
+        live_outages, outage_cleared = self._update_outages(n)
+        outage_fired = outage_cleared or any(
+            cell in live_outages for cell in placement.items()
+        )
+        costs = self.costs(outages=live_outages)
         current_cost = None
         drifted = False
         if placed_cost is not None:
             current_cost = dag_cost(nodes, edges, placement, costs, self.prefetch)
             drifted = current_cost > self.drift_ratio * placed_cost
-        if not slo_fired and not drifted and n % self.every_n != 0:
+        if (
+            not slo_fired
+            and not outage_fired
+            and not drifted
+            and n % self.every_n != 0
+        ):
             return None
         with self._lock:
             if slo_fired:
                 self.stats["slo_triggers"] += 1
                 self._slo_handled = self.slo.alerts
+            elif outage_fired:
+                self.stats["outage_triggers"] += 1
             elif drifted:
                 self.stats["drift_triggers"] += 1
             self.stats["recomputes"] += 1
-        trigger = "slo" if slo_fired else ("drift" if drifted else "boundary")
+        trigger = (
+            "slo"
+            if slo_fired
+            else ("outage" if outage_fired else ("drift" if drifted else "boundary"))
+        )
         new_placement = place_dag(nodes, edges, self.candidates, costs, self.prefetch)
         new_cost = dag_cost(nodes, edges, new_placement, costs, self.prefetch)
         if new_placement == placement:
@@ -292,6 +386,8 @@ class AdaptiveDeployment:
         scorer=None,
         tracer=None,
         slo=None,
+        outage_threshold: float = 0.5,
+        outage_ttl: int = 24,
     ):
         self.deployment = deployment
         self.hub = attach(deployment, hub)
@@ -331,6 +427,8 @@ class AdaptiveDeployment:
             scorer=scorer,
             tracer=tracer,
             slo=slo,
+            outage_threshold=outage_threshold,
+            outage_ttl=outage_ttl,
         )
         self.routes = RouteTable(spec)
         self._cut_lock = threading.Lock()
@@ -339,7 +437,18 @@ class AdaptiveDeployment:
     # -- client ----------------------------------------------------------------
     def run(self, payload, timeout_s: Optional[float] = 120.0):
         version, spec = self.routes.current()
-        result = self.deployment.run(spec, payload, timeout_s)
+        try:
+            result = self.deployment.run(spec, payload, timeout_s)
+        except BaseException:
+            # a request that DIES is exactly when the outage trigger must
+            # still get its tick: the engine already fed record_error, so
+            # let the controller fail over before the error propagates —
+            # otherwise a platform that kills every request could never be
+            # routed around
+            placement = self.controller.tick(self.routes.spec)
+            if placement is not None:
+                self._cutover(placement, trigger=self.controller.last_trigger)
+            raise
         if self.slo is not None:
             self.slo.record(result.total_s, now=time.perf_counter())
         placement = self.controller.tick(self.routes.spec)

@@ -19,6 +19,7 @@ and transfers at region granularity (where the object store lives) while
 
 from __future__ import annotations
 
+import math
 from typing import Optional
 
 from repro.core.shipping import PlacementCosts
@@ -38,6 +39,8 @@ def observed_costs(
     min_samples: int = 2,
     cold_starts: bool = True,
     chunks: Optional[int] = None,
+    errors: bool = True,
+    outages=None,
 ) -> PlacementCosts:
     """A ``PlacementCosts`` that prefers measurements over the model.
 
@@ -71,17 +74,30 @@ def observed_costs(
 
     ``regions`` defaults to the identity (platform name IS the region),
     which is what the simulator benches use.
+
+    Durability hooks (PR 10): with ``errors`` on, a flaky-but-alive cell
+    pays the hub's expected-retry tax (``TelemetryHub.error_penalty_s`` —
+    the error-rate twin of the cold penalty); a cell in ``outages`` (a set
+    of (step, platform) pairs the controller currently considers dead)
+    prices ``math.inf``, so ``place_dag`` cannot route through it at all.
     """
     regions = regions or {}
+    outages = outages if outages is not None else frozenset()
 
     def region(platform: str) -> str:
         return regions.get(platform, platform)
 
     def compute_s(step, platform):
+        if (step, platform) in outages:
+            return math.inf
         obs = hub.compute_s(step, platform, min_samples)
         base = obs if obs is not None else fallback.compute_s(step, platform)
         if cold_starts:
             penalty = hub.cold_penalty_s(step, platform)
+            if penalty:
+                base += penalty
+        if errors:
+            penalty = hub.error_penalty_s(step, platform)
             if penalty:
                 base += penalty
         return base

@@ -57,6 +57,8 @@ class TelemetryHub:
         self._cold_s: dict = {}  # (step, platform) -> EWMA cold seconds
         self._transfer_pts: dict = {}  # pair -> deque[(bytes, seconds)]
         self._edge_b: dict = {}  # (src_step, dst_step) -> EWMA payload bytes
+        self._err: dict = {}  # (step, platform) -> EWMA error indicator
+        self._err_n: dict = {}  # (step, platform) -> total error count
 
     def _ewma(self, table: dict, key) -> EWMA:
         # callers hold self._lock
@@ -69,6 +71,21 @@ class TelemetryHub:
     def record_compute(self, step: str, platform: str, seconds: float):
         with self._lock:
             self._ewma(self._compute, (step, platform)).update(seconds)
+            # a completed handler is a success observation for the error
+            # rate — without it the EWMA would never decay after recovery
+            self._ewma(self._err, (step, platform)).update(0.0)
+
+    def record_error(self, step: str, platform: str, n: int = 1):
+        """Count ``n`` failed attempts on (step, platform): bumps the error
+        count and feeds 1.0-valued observations into the error-rate EWMA
+        (successes feed 0.0 via ``record_compute``, so the EWMA converges
+        on the live failure fraction and decays when the platform heals)."""
+        if n <= 0:
+            return
+        with self._lock:
+            key = (step, platform)
+            self._err_n[key] = self._err_n.get(key, 0) + int(n)
+            self._ewma(self._err, key).update_many(1.0, int(n))
 
     def record_fetch(self, key: str, region: str, seconds: float):
         with self._lock:
@@ -120,6 +137,11 @@ class TelemetryHub:
             self._ewma(self._compute, (step, platform)).update_many(
                 float(seconds.mean()), seconds.size
             )
+            self._ewma(self._err, (step, platform)).update_many(0.0, seconds.size)
+
+    def record_error_batch(self, step: str, platform: str, n_err: int):
+        """Vectorized-simulator twin of ``record_error``."""
+        self.record_error(step, platform, n_err)
 
     def record_fetch_batch(self, key: str, region: str, seconds):
         seconds = np.asarray(seconds)
@@ -246,6 +268,52 @@ class TelemetryHub:
                 return None
             return (cold / (cold + warm)) * e.value
 
+    def error_rate(self, step: str, platform: str):
+        """EWMA failure fraction for (step, platform) — None before any
+        attempt (success or failure) has been observed."""
+        with self._lock:
+            e = self._err.get((step, platform))
+            return e.value if e is not None and e.n else None
+
+    def error_count(self, step: str, platform: str) -> int:
+        with self._lock:
+            return self._err_n.get((step, platform), 0)
+
+    def error_counts(self) -> dict:
+        """{(step, platform): total errors} copy — the controller diffs
+        consecutive snapshots of this to detect *fresh* failures."""
+        with self._lock:
+            return dict(self._err_n)
+
+    def error_penalty_s(self, step: str, platform: str):
+        """Expected extra seconds per request a flaky-but-alive cell costs:
+        with failure rate ``r`` and geometric retries, the expected number
+        of extra attempts is ``r / (1 - r)``, each re-paying the compute
+        EWMA. None when no attempts were observed or errors happened but
+        compute is unmeasured; 0.0 when every attempt succeeded. ``r`` is
+        clamped to 0.9 so a near-dead platform prices large-but-finite —
+        *infinite* cost is the outage trigger's job, not the penalty's."""
+        with self._lock:
+            e = self._err.get((step, platform))
+            if e is None or e.n == 0:
+                return None
+            r = e.value
+            if r <= 0.0:
+                return 0.0
+            c = self._compute.get((step, platform))
+            if c is None or c.n == 0:
+                return None
+            r = min(r, 0.9)
+            return (r / (1.0 - r)) * c.value
+
+    def reset_errors(self, step: str, platform: str):
+        """Forget the error-rate EWMA for a cell (counts are kept for the
+        audit trail). The controller calls this when an outage mark expires
+        so fail-back gets an optimistic probe instead of being pinned down
+        by stale failure history."""
+        with self._lock:
+            self._err.pop((step, platform), None)
+
     # -- reporting -------------------------------------------------------------
     def snapshot(self) -> dict:
         """Plain-dict copy of every table (the ``report()`` surface)."""
@@ -267,6 +335,10 @@ class TelemetryHub:
                 "cold_starts": {f"{s}@{p}": n for (s, p), n in self._cold.items()},
                 "warm_hits": {f"{s}@{p}": n for (s, p), n in self._warm.items()},
                 "cold_s": {f"{s}@{p}": e.value for (s, p), e in self._cold_s.items()},
+                "errors": {f"{s}@{p}": n for (s, p), n in self._err_n.items()},
+                "error_rate": {
+                    f"{s}@{p}": e.value for (s, p), e in self._err.items() if e.n
+                },
             }
 
 

@@ -17,6 +17,9 @@ The paper's contribution as a composable library:
                   edge (paper §5.5 future work)
   simulator       unified discrete-event sim: one dataflow recurrence for
                   chains and DAGs, reproducing Figs 4/6/8
+  faults          shared fault model: deterministic transient/outage
+                  injection + retry budgets, priced identically by every
+                  simulator backend and raised for real by the engine
 """
 
 from repro.core.workflow import (  # noqa: F401
@@ -45,3 +48,11 @@ from repro.core.shipping import (  # noqa: F401
     place_dag_greedy,
 )
 from repro.core.timing import PokeTimingController  # noqa: F401
+from repro.core.faults import (  # noqa: F401
+    FaultEvent,
+    FaultSchedule,
+    InjectedFault,
+    OutageEvent,
+    RetryPolicy,
+    availability,
+)

@@ -103,6 +103,10 @@ class _Placement(NamedTuple):
     transfer_last: jax.Array  # (V, maxP) per-edge LAST-byte transfer
     #   (only read by the recurrence when use_stream; == transfer otherwise)
     plat_idx: jax.Array  # (V,) int32 rows into the drift scale arrays
+    fault_extra: jax.Array  # (V, n) per-(node, request) retry-backoff
+    #   seconds from the host-precomputed fault plane ((V, 1) zeros and
+    #   never read when use_faults is off — the hash-based plane needs no
+    #   device rng, so it rides the scan like the drift masks do)
 
 
 def _cold_mask(t0s, warm_end, cold_end, keep_warm, use_pallas):
@@ -113,7 +117,7 @@ def _cold_mask(t0s, warm_end, cold_end, keep_warm, use_pallas):
 
 def _simulate_one(
     placed, factors, graph, t0s, msg, inv_chunks, prefetch, use_drift,
-    use_pallas, use_stream, sample_idx=None,
+    use_pallas, use_stream, use_faults, sample_idx=None,
 ):
     """One (seed, placement) request stream: the node-major recurrence of
     ``_run_graph_vectorized`` as a scan over topo order. ``factors`` are
@@ -174,10 +178,15 @@ def _simulate_one(
         xs = xs + (
             jnp.broadcast_to(transfer_last, (V,) + transfer_last.shape[1:]),
         )
+    if use_faults:
+        xs = xs + (placed.fault_extra,)
 
     def body(end_all, x):
-        # use_stream is static: the traced program is literally unchanged
-        # when it is False (no extra scan input, no extra ops)
+        # use_stream / use_faults are static: the traced program is
+        # literally unchanged when they are False (no extra scan inputs,
+        # no extra ops) — unpacked in reverse append order
+        if use_faults:
+            *x, fault_extra_v = x
         if use_stream:
             *x, tr_last_v = x
         (
@@ -230,6 +239,14 @@ def _simulate_one(
             tail = jnp.where(is_src, -inf, payload_last + compute_v * inv_chunks)
             warm_end = jnp.maximum(warm_end, tail)
             cold_end = jnp.maximum(cold_end, tail)
+        if use_faults:
+            # retry backoffs delay the node under both hypotheses, after
+            # the streaming tail and before the cold scan — the exact
+            # ordering of the scalar and numpy paths. Exhausted budgets
+            # are applied HOST-side to the totals (inf would poison the
+            # cold recurrence), so the compiled sweep stays finite.
+            warm_end = warm_end + fault_extra_v
+            cold_end = cold_end + fault_extra_v
         mask = _cold_mask(t0s, warm_end, cold_end, kw, use_pallas)
         end_v = jnp.where(mask, cold_end, warm_end)
         sink_row = jnp.where(is_sink, end_v, -inf)
@@ -254,11 +271,13 @@ def _simulate_one(
 
 @partial(
     jax.jit,
-    static_argnames=("prefetch", "use_drift", "use_pallas", "use_stream"),
+    static_argnames=(
+        "prefetch", "use_drift", "use_pallas", "use_stream", "use_faults",
+    ),
 )
 def _sweep(
     keys, placed, sigmas, graph, t0s, msg, inv_chunks, sample_idx=None,
-    *, prefetch, use_drift, use_pallas, use_stream,
+    *, prefetch, use_drift, use_pallas, use_stream, use_faults,
 ):
     """(seeds, placements, requests) totals in one compiled program. With
     ``sample_idx``, also the sampled per-node ys pytree (leaves gain the
@@ -286,7 +305,7 @@ def _sweep(
         return jax.vmap(
             lambda p: _simulate_one(p, factors, graph, t0s, msg, inv_chunks,
                                     prefetch, use_drift, use_pallas,
-                                    use_stream, sample_idx)
+                                    use_stream, use_faults, sample_idx)
         )(placed)
 
     return jax.vmap(per_seed)(keys)
@@ -309,12 +328,23 @@ def _poke_depths(order, steps, preds):
     return np.array([depth[v] for v in order])
 
 
-def _build(sim, order, step_sets, preds, succs, t0s, drift, dtype, stream=None):
+def _build(
+    sim, order, step_sets, preds, succs, t0s, drift, dtype, stream=None,
+    faults=None, retry=None,
+):
     """Host-side array construction (numpy). The transfer model is
     evaluated through ``sim._transfer_s`` — or ``sim._transfer_fl`` when a
     StreamConfig is given — so subclasses that override the whole-object
     model (e.g. the scorer's cost-model simulator) feed this backend
-    unchanged."""
+    unchanged.
+
+    With a ``FaultSchedule``, each placement also gets its (V, n)
+    retry-backoff plane (``_Placement.fault_extra``, a scan input like the
+    drift masks) and a (n,) request-failed mask; the planes come from the
+    same hash-based ``FaultSchedule.plane`` the scalar and numpy backends
+    price, so all three agree bit-for-bit. Returns ``(placed, sigmas,
+    graph, fault_failed)`` with ``fault_failed`` a (P, n) bool array (all
+    False when no schedule is active)."""
     f64 = dtype
     V = len(order)
     n = len(t0s)
@@ -337,6 +367,9 @@ def _build(sim, order, step_sets, preds, succs, t0s, drift, dtype, stream=None):
         for name in plat_names:
             scales[:, plat_row[name], :] = drift.scale_arrays(ks, name)
 
+    faults_on = faults is not None and bool(faults)
+    request_ks = np.arange(n)
+
     def placement_arrays(steps):
         row = {
             "cold_median": np.empty(V, f64),
@@ -350,10 +383,19 @@ def _build(sim, order, step_sets, preds, succs, t0s, drift, dtype, stream=None):
             "transfer": np.zeros((V, max_p), f64),
             "transfer_last": np.zeros((V, max_p), f64),
             "plat_idx": np.zeros(V, np.int32),
+            "fault_extra": np.zeros((V, n if faults_on else 1), f64),
+            "fault_failed": np.zeros(n, bool),
         }
         for i, v in enumerate(order):
             step = steps[v]
             plat = sim.platforms[step.platform]
+            if faults_on:
+                fp = faults.plane(
+                    step.name, step.platform, request_ks, retry,
+                    region=plat.region,
+                )
+                row["fault_extra"][i] = fp.extra_s
+                row["fault_failed"] |= fp.failed
             row["cold_median"][i] = plat.cold_start.median
             row["cold_sigma"][i] = plat.cold_start.sigma
             row["keep_warm"][i] = plat.keep_warm_s
@@ -408,7 +450,9 @@ def _build(sim, order, step_sets, preds, succs, t0s, drift, dtype, stream=None):
         transfer=np.stack([r["transfer"] for r in all_rows]),
         transfer_last=np.stack([r["transfer_last"] for r in all_rows]),
         plat_idx=np.stack([r["plat_idx"] for r in all_rows]),
+        fault_extra=np.stack([r["fault_extra"] for r in all_rows]),
     )
+    fault_failed = np.stack([r["fault_failed"] for r in all_rows])
     graph = _Graph(
         pred_idx,
         pred_mask,
@@ -418,11 +462,12 @@ def _build(sim, order, step_sets, preds, succs, t0s, drift, dtype, stream=None):
         transfer_scale=scales[1],
         fetch_scale=scales[2],
     )
-    return placed, sigmas, graph
+    return placed, sigmas, graph, fault_failed
 
 
 def run_batched(sim, order, step_sets, preds, succs, t0s, prefetch, seeds,
-                drift=None, dtype=np.float64, sample_idx=None, stream=None):
+                drift=None, dtype=np.float64, sample_idx=None, stream=None,
+                faults=None, retry=None):
     """The jax backend's one entry point: simulate every (seed, placement)
     pair of one workflow graph in a single compiled call.
 
@@ -452,6 +497,17 @@ def run_batched(sim, order, step_sets, preds, succs, t0s, prefetch, seeds,
     — adds the per-chunk pipeline tail to the recurrence (a static branch:
     with ``stream=None`` the compiled program is unchanged). ``chunks=1``
     keeps the whole-object recurrence, so totals stay bit-for-bit.
+
+    ``faults`` / ``retry``: optional ``FaultSchedule`` / ``RetryPolicy``.
+    The hash-based fault plane is precomputed host-side per placement —
+    another plane riding the scan next to the cold-start inputs (a static
+    ``use_faults`` branch, program unchanged when off) — and exhausted
+    retry budgets turn the affected requests' totals into ``inf`` after
+    the sweep (the compiled recurrence itself stays finite). The fault
+    outcomes are shared with the scalar/numpy backends bit-for-bit, and
+    are identical across every placement's SHARED (step, platform) cells
+    (a moved step gets the moved cell's plane — what lets the scorer judge
+    failover candidates under live outages).
     """
     if drift is None:
         drift = sim.drift
@@ -482,10 +538,11 @@ def run_batched(sim, order, step_sets, preds, succs, t0s, prefetch, seeds,
     # chunks=1 (even with P2P rerouting the transfer VALUES) keeps the
     # whole-object scan — first == last there, so the tail never binds
     use_stream = stream is not None and stream.chunks > 1
+    use_faults = faults is not None and bool(faults)
     with enable_x64():
-        placed, sigmas, graph = _build(
+        placed, sigmas, graph, fault_failed = _build(
             sim, order, step_sets, preds, succs, t0s, drift, dtype,
-            stream=stream,
+            stream=stream, faults=faults, retry=retry,
         )
         # raw threefry key layout ([hi, lo] uint32 words of the seed) —
         # identical to stacking jax.random.PRNGKey(s), minus S dispatches
@@ -508,8 +565,22 @@ def run_batched(sim, order, step_sets, preds, succs, t0s, prefetch, seeds,
             use_drift=drift is not None,
             use_pallas=jax.default_backend() == "tpu",
             use_stream=use_stream,
+            use_faults=use_faults,
         )
+
+        def mark_failed(totals):
+            # dead requests are priced as-if-completed inside the sweep
+            # (the cold recurrence must stay finite and backend-identical)
+            # but reported as never finishing — same post-step the numpy
+            # backend applies
+            if use_faults and fault_failed.any():
+                return np.where(fault_failed[None, :, :], np.inf, totals)
+            return totals
+
         if sample_idx is not None:
             totals, sampled = out
-            return np.asarray(totals), tuple(np.asarray(a) for a in sampled)
-        return np.asarray(out)
+            return (
+                mark_failed(np.asarray(totals)),
+                tuple(np.asarray(a) for a in sampled),
+            )
+        return mark_failed(np.asarray(out))

@@ -103,6 +103,12 @@ from typing import Optional
 
 import numpy as np
 
+from repro.core.faults import (  # noqa: F401  (re-export: fault injection
+    FaultEvent,  # lives next to DriftSchedule on the simulator's surface,
+    FaultSchedule,  # and the engine's FaultInjector raises from the same
+    OutageEvent,  # schedule — one fault model on both sides of sim/real)
+    RetryPolicy,
+)
 from repro.core.graph import graph_views
 from repro.core.store import StreamConfig  # noqa: F401  (re-export: the
 #   streaming data plane config is part of the simulator's surface too)
@@ -338,7 +344,8 @@ class ExperimentSpec:
     the result). ``drift`` / ``telemetry`` / ``tracer`` / ``stream``
     override the simulator's attached ``DriftSchedule`` /
     ``TelemetryHub`` / ``obs.Tracer`` / ``StreamConfig`` for this
-    experiment only (None inherits). Execute with
+    experiment only (None inherits); so do ``faults`` / ``retry`` for the
+    attached ``FaultSchedule`` / ``RetryPolicy``. Execute with
     ``WorkflowSimulator.simulate(spec, backend=...)``."""
 
     steps: tuple
@@ -351,6 +358,8 @@ class ExperimentSpec:
     telemetry: object = None
     tracer: object = None
     stream: Optional[StreamConfig] = None  # chunked data plane (None = off)
+    faults: Optional[FaultSchedule] = None  # fault injection (None = off)
+    retry: Optional[RetryPolicy] = None  # retry budget (None = one attempt)
 
     def __post_init__(self):
         object.__setattr__(self, "steps", tuple(self.steps))
@@ -397,6 +406,8 @@ class WorkflowSimulator:
         drift: Optional[DriftSchedule] = None,
         stream: Optional[StreamConfig] = None,
         transfer_table: Optional[dict] = None,
+        faults: Optional[FaultSchedule] = None,
+        retry: Optional[RetryPolicy] = None,
     ):
         self.platforms = {p.name: p for p in platforms}
         self.msg = msg_latency_s
@@ -408,6 +419,8 @@ class WorkflowSimulator:
         self.telemetry = telemetry  # optional TelemetryHub (repro.adapt)
         self.drift = drift  # optional DriftSchedule (mid-run injection)
         self.stream = stream  # optional StreamConfig (chunked data plane)
+        self.faults = faults  # optional FaultSchedule (injected failures)
+        self.retry = retry  # optional RetryPolicy (prices retry backoffs)
         # optional {(src_step_name, dst_step_name): seconds} override of the
         # platform transfer model per edge — the calibration entry point
         # (obs.profiler / scripts/trace_diff pin observed per-edge costs)
@@ -552,6 +565,9 @@ class WorkflowSimulator:
         exposed_fetch = 0.0
         tracing = trace and self.tracer is not None
         draws: dict = {}  # v -> (cold, fetch, compute, edge_tr) when tracing
+        faults_on = self.faults is not None and bool(self.faults)
+        failed = dict.fromkeys(order, False)  # node dead or upstream dead
+        fault_rec: dict = {}  # v -> (n_failures, dead) when faults active
         for v in order:
             step = steps[v]
             cold = self._cold(step, t0)
@@ -591,27 +607,61 @@ class WorkflowSimulator:
                 tail = payload_last_v + compute * (1.0 / self.stream.chunks)
                 if tail > end[v]:
                     end[v] = tail
+            fault_up = fault_dead = False
+            fault_nf = 0
+            if faults_on:
+                # fault pricing is a pure hash of (seed, node, request,
+                # attempt) — no rng consumed, so the draw stream above is
+                # bit-for-bit the fault-free one. Failed attempts delay the
+                # node by their backoffs (applied after the streaming tail,
+                # before _last_use, so the cold recurrence prices the
+                # as-if-completed timeline on every backend identically);
+                # an exhausted budget marks the request failed instead of
+                # poisoning the recurrence with inf.
+                fp = self.faults.plane(
+                    step.name,
+                    step.platform,
+                    self._req_k,
+                    self.retry,
+                    region=self.platforms[step.platform].region,
+                )
+                end[v] += float(fp.extra_s[0])
+                fault_nf = int(fp.n_failures[0])
+                fault_dead = bool(fp.failed[0])
+                fault_up = any(failed[u] for u in preds[v])
+                failed[v] = fault_up or fault_dead
+                if tracing:
+                    fault_rec[v] = (fault_nf, fault_dead)
             self._last_use[(step.name, step.platform)] = end[v]
-            if self.telemetry is not None:
+            if self.telemetry is not None and not fault_up:
+                # an upstream-dead node never ran: no observations at all.
+                # A node that ran records one error per failed attempt; its
+                # success-side observations only land when it completed.
                 region = self.platforms[step.platform].region
-                self.telemetry.record_compute(step.name, step.platform, compute)
-                if step.fetch.median > 0:
-                    # the step's aggregate external fetch at its platform's
-                    # region, keyed by fetch_key (default: the step name)
-                    self.telemetry.record_fetch(
-                        step.fetch_key or step.name, region, fetch
-                    )
-                for u in preds[v]:
-                    self.telemetry.record_transfer(
-                        self.platforms[steps[u].platform].region,
-                        region,
-                        self.payload_size,
-                        edge_fl[u][1],  # last byte: the whole transfer
-                    )
-                if cold > 0:
-                    self.telemetry.record_cold_start(step.name, step.platform, cold)
-                else:
-                    self.telemetry.record_warm_hit(step.name, step.platform)
+                if fault_nf:
+                    self.telemetry.record_error(step.name, step.platform, fault_nf)
+                if not fault_dead:
+                    self.telemetry.record_compute(step.name, step.platform, compute)
+                    if step.fetch.median > 0:
+                        # the step's aggregate external fetch at its
+                        # platform's region, keyed by fetch_key (default:
+                        # the step name)
+                        self.telemetry.record_fetch(
+                            step.fetch_key or step.name, region, fetch
+                        )
+                    for u in preds[v]:
+                        self.telemetry.record_transfer(
+                            self.platforms[steps[u].platform].region,
+                            region,
+                            self.payload_size,
+                            edge_fl[u][1],  # last byte: the whole transfer
+                        )
+                    if cold > 0:
+                        self.telemetry.record_cold_start(
+                            step.name, step.platform, cold
+                        )
+                    else:
+                        self.telemetry.record_warm_hit(step.name, step.platform)
             if self.timing is not None and prefetch:
                 self.timing.record_prepare(step.name, cold + fetch)
                 self.timing.record_compute(step.name, end[v] - start[v])
@@ -631,17 +681,26 @@ class WorkflowSimulator:
         if tracing:
             self._emit_trace(
                 order, steps, preds, t0, prefetch, poke, prepare, payload,
-                start, end, draws, total,
+                start, end, draws, total, fault_rec=fault_rec,
             )
+        if faults_on and any(failed.values()):
+            # a dead node makes some sink unreachable: the request never
+            # completes (availability accounting reads these as inf)
+            total = math.inf
         return prepare, payload, start, end, total, double_billed, exposed_fetch
 
     def _emit_trace(
         self, order, steps, preds, t0, prefetch, poke, prepare, payload,
-        start, end, draws, total,
+        start, end, draws, total, fault_rec=None,
     ):
         """Assemble one finished request into the obs span schema (sim
         clock). Chains may invoke the same step twice — positional ids get
-        ``name@id`` labels then, so node names stay unique per trace."""
+        ``name@id`` labels then, so node names stay unique per trace.
+
+        ``fault_rec`` ({v: (n_failures, dead)}, fault injection active):
+        every failed attempt becomes a ``retry`` span event on the node
+        span — the same schema the real engine emits — and an exhausted
+        budget marks the span (and the root) ``failed``."""
         names = [steps[v].name for v in order]
         dup = len(set(names)) != len(names)
 
@@ -686,6 +745,22 @@ class WorkflowSimulator:
                 t_start=min(p0, payload[v]),
                 attrs=attrs,
             )
+            if fault_rec and v in fault_rec:
+                nf, dead = fault_rec[v]
+                for a in range(nf):
+                    node_span.add_event(
+                        "retry",
+                        {
+                            "attempt": a + 1,
+                            "node": label(v),
+                            "platform": step.platform,
+                            "injected": True,
+                        },
+                        t=start[v],
+                    )
+                if dead:
+                    node_span.attrs["failed"] = True
+                    trace.root.attrs["failed"] = True
             node_span.end(end[v])
             phases = [
                 ("warm", p0, p0 + cold),
@@ -799,6 +874,10 @@ class WorkflowSimulator:
         poke: dict = {}
         end: dict = {}
         total = np.full(n, -math.inf)
+        faults_on = self.faults is not None and bool(self.faults)
+        failed_by_node: dict = {}  # v -> (n,) bool, own-dead OR upstream-dead
+        failed_any = np.zeros(n, dtype=bool)
+        fault_rec: dict = {}  # v -> (n_failures, node_failed) when tracing
         for v in order:
             step = steps[v]
             plat = self.platforms[step.platform]
@@ -809,6 +888,30 @@ class WorkflowSimulator:
                 csc, _, fsc = scales_for(step.platform)
                 compute = compute * csc
                 fetch = fetch * fsc
+            fp = None
+            node_ok = None  # rows whose success-side telemetry should land
+            if faults_on:
+                # the fault plane is hash-based (no rng) — draws above are
+                # bit-for-bit the fault-free stream; see _run_graph
+                fp = self.faults.plane(
+                    step.name, step.platform, request_ks, self.retry,
+                    region=plat.region,
+                )
+                up = np.zeros(n, dtype=bool)
+                for u in preds[v]:
+                    up |= failed_by_node[u]
+                node_failed = up | fp.failed
+                failed_by_node[v] = node_failed
+                failed_any |= fp.failed
+                node_ok = ~node_failed
+                if tel is not None:
+                    # one error per failed attempt of every node that RAN
+                    # (upstream-dead nodes never launched their attempts)
+                    n_err = int(fp.n_failures[~up].sum())
+                    if n_err:
+                        tel.record_error_batch(step.name, step.platform, n_err)
+                if tracing:
+                    fault_rec[v] = (fp.n_failures, node_failed)
             # poke cascade (min over in-edges; structural, uniform over k)
             if not prefetch:
                 poke_v = inf
@@ -846,11 +949,14 @@ class WorkflowSimulator:
                     if tracing:
                         edge_tr[u] = np.broadcast_to(np.asarray(first, float), (n,))
                     if tel is not None:
+                        last_rows = np.broadcast_to(last, (n,))
+                        if node_ok is not None:
+                            last_rows = last_rows[node_ok]
                         tel.record_transfer_batch(
                             self.platforms[steps[u].platform].region,
                             plat.region,
                             self.payload_size,
-                            np.broadcast_to(last, (n,)),
+                            last_rows,
                         )
                 payload = np.maximum.reduce(arrivals)
                 if stream_on:
@@ -870,6 +976,13 @@ class WorkflowSimulator:
                 tail = payload_last + compute * (1.0 / self.stream.chunks)
                 warm_end = np.maximum(warm_end, tail)
                 cold_end = np.maximum(cold_end, tail)
+            if fp is not None:
+                # retry backoffs delay the node under BOTH hypotheses (the
+                # offset preserves cold_end >= warm_end), after the
+                # streaming tail and before the cold scan — matching the
+                # scalar path's end[v] += extra ordering exactly
+                warm_end = warm_end + fp.extra_s
+                cold_end = cold_end + fp.extra_s
             mask = self._cold_scan(t0s, warm_end, cold_end, plat.keep_warm_s)
             end_v = np.where(mask, cold_end, warm_end)
             end[v] = end_v
@@ -880,31 +993,47 @@ class WorkflowSimulator:
                 )
             self._last_use[(step.name, step.platform)] = float(end_v[-1])
             if tel is not None:
-                tel.record_compute_batch(step.name, step.platform, compute)
+                ok = node_ok if node_ok is not None else slice(None)
+                tel.record_compute_batch(step.name, step.platform, compute[ok])
                 if step.fetch.median > 0:
                     tel.record_fetch_batch(
-                        step.fetch_key or step.name, plat.region, fetch
+                        step.fetch_key or step.name, plat.region, fetch[ok]
                     )
-                n_cold = int(mask.sum())
+                ok_mask = mask if node_ok is None else (mask & node_ok)
+                n_cold = int(ok_mask.sum())
+                n_seen = n if node_ok is None else int(node_ok.sum())
                 tel.record_cold_start_batch(
                     step.name,
                     step.platform,
                     n_cold,
-                    n - n_cold,
-                    cold_draw[mask],
+                    n_seen - n_cold,
+                    cold_draw[ok_mask],
                 )
             if not succs[v]:
                 total = np.maximum(total, end_v)
         if tracing:
-            self._emit_traces_vectorized(order, steps, preds, prefetch, t0s, rec, end)
+            self._emit_traces_vectorized(
+                order, steps, preds, prefetch, t0s, rec, end,
+                fault_rec=fault_rec if faults_on else None,
+            )
         self._req_k = n
-        return total - t0s
+        totals = total - t0s
+        if faults_on and failed_any.any():
+            # dead requests are priced as-if-completed inside the
+            # recurrence (cold bookkeeping stays backend-identical) but
+            # REPORTED as never finishing
+            totals = np.where(failed_any, math.inf, totals)
+        return totals
 
-    def _emit_traces_vectorized(self, order, steps, preds, prefetch, t0s, rec, end):
+    def _emit_traces_vectorized(
+        self, order, steps, preds, prefetch, t0s, rec, end, fault_rec=None
+    ):
         """Sampled per-request traces from the retained vectorized arrays:
         ``tracer.sample`` evenly spaced requests become ``obs`` traces in
         the same schema as the scalar path — pure array indexing after the
-        fact, so the draw stream is untouched."""
+        fact, so the draw stream is untouched. ``fault_rec`` ({v:
+        (n_failures, node_failed) arrays}) adds the scalar path's ``retry``
+        span events / ``failed`` marks to the sampled requests."""
         names = [steps[v].name for v in order]
         dup = len(set(names)) != len(names)
 
@@ -968,6 +1097,22 @@ class WorkflowSimulator:
                     t_start=min(p0, pay_k),
                     attrs=attrs,
                 )
+                if fault_rec is not None and v in fault_rec:
+                    nf_a, dead_a = fault_rec[v]
+                    for a in range(int(nf_a[k])):
+                        node_span.add_event(
+                            "retry",
+                            {
+                                "attempt": a + 1,
+                                "node": label(v),
+                                "platform": step.platform,
+                                "injected": True,
+                            },
+                            t=start_k,
+                        )
+                    if bool(dead_a[k]):
+                        node_span.attrs["failed"] = True
+                        trace.root.attrs["failed"] = True
                 node_span.end(end_k)
                 t_sink = max(t_sink, end_k)
             tr.finish(trace, t_end=t_sink)
@@ -1032,6 +1177,7 @@ class WorkflowSimulator:
             )
         saved_drift, saved_tel = self.drift, self.telemetry
         saved_tracer, saved_stream = self.tracer, self.stream
+        saved_faults, saved_retry = self.faults, self.retry
         if spec.drift is not None:
             self.drift = spec.drift
         if spec.telemetry is not None:
@@ -1040,6 +1186,10 @@ class WorkflowSimulator:
             self.tracer = spec.tracer
         if spec.stream is not None:
             self.stream = spec.stream
+        if spec.faults is not None:
+            self.faults = spec.faults
+        if spec.retry is not None:
+            self.retry = spec.retry
         try:
             order, smap, preds, succs = _spec_graph(spec.steps, spec.edges)
             t0s = np.arange(spec.n_requests) * spec.interarrival_s
@@ -1061,6 +1211,7 @@ class WorkflowSimulator:
         finally:
             self.drift, self.telemetry = saved_drift, saved_tel
             self.tracer, self.stream = saved_tracer, saved_stream
+            self.faults, self.retry = saved_faults, saved_retry
 
     def _trace_sample_idx(self, n: int) -> np.ndarray:
         """Which request indices of an n-request stream get a trace:
@@ -1130,11 +1281,14 @@ class WorkflowSimulator:
         seeds = spec.seeds if spec.seeds is not None else (self.seed,)
         drift = spec.drift if spec.drift is not None else self.drift
         stream = spec.stream if spec.stream is not None else self.stream
+        faults = spec.faults if spec.faults is not None else self.faults
+        retry = spec.retry if spec.retry is not None else self.retry
         t0s = np.arange(spec.n_requests) * spec.interarrival_s
         if _tracer is None:
             return jaxsim.run_batched(
                 self, order, step_sets, preds, succs, t0s, spec.prefetch,
                 list(seeds), drift=drift, dtype=dtype, stream=stream,
+                faults=faults, retry=retry,
             )
         sample_idx = np.unique(
             np.linspace(
@@ -1148,7 +1302,7 @@ class WorkflowSimulator:
         totals, sampled = jaxsim.run_batched(
             self, order, step_sets, preds, succs, t0s, spec.prefetch,
             list(seeds), drift=drift, dtype=dtype, sample_idx=sample_idx,
-            stream=stream,
+            stream=stream, faults=faults, retry=retry,
         )
         self._emit_traces_jax(
             order,

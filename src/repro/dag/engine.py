@@ -30,6 +30,7 @@ functions written for chains deploy onto DAGs without change.
 
 from __future__ import annotations
 
+import concurrent.futures
 import threading
 import time
 import uuid
@@ -37,6 +38,7 @@ from contextlib import nullcontext
 from dataclasses import dataclass
 from typing import Callable, Optional
 
+from repro.core.faults import FaultSchedule, InjectedFault, RetryPolicy
 from repro.core.platform import Platform, PlatformRegistry, PlatformWrapper
 from repro.core.prefetch import Prefetcher
 from repro.core.prewarm import CompileCache
@@ -63,6 +65,30 @@ class DagResult:
     outputs: object  # sink output; {sink_name: output} when several sinks
     timeline: dict  # node -> {phase: seconds}
     total_s: float
+    # "ok" | "timeout" — a timed-out request returns a structured record
+    # (cascade cancelled, edge buffers cleaned) instead of a bare raise
+    status: str = "ok"
+    error: Optional[str] = None
+
+
+class FaultInjector:
+    """Engine-side twin of the simulator's fault plane: evaluates the same
+    counter-hash (``FaultSchedule.attempt_outcome``) inside ``_run_node``
+    and raises ``InjectedFault`` where the simulator would have priced a
+    failed attempt — so a schedule replayed on the real engine fails the
+    exact (step, platform, request, attempt) cells the sim predicted."""
+
+    def __init__(self, schedule: FaultSchedule):
+        self.schedule = schedule
+
+    def check(
+        self, step: str, platform: str, region: str, request_k: int, attempt: int
+    ):
+        kind = self.schedule.attempt_outcome(
+            step, platform, request_k, attempt, region=region
+        )
+        if kind is not None:
+            raise InjectedFault(kind, step, platform, request_k, attempt)
 
 
 class _RunState:
@@ -88,6 +114,7 @@ class _RunState:
         self.error: Optional[BaseException] = None
         self.done = threading.Event()
         self.t0 = 0.0  # request clock zero (perf_counter, set by run)
+        self.req_index = 0  # deployment-wide request counter (fault keying)
         self.trace = None  # obs.Trace when the deployment has a tracer
         self.poke_t: dict = {}  # node -> absolute poke time
         self.transfer_s: dict = {n.name: {} for n in spec.steps}  # dst->{src: s}
@@ -118,6 +145,8 @@ class DagDeployment:
         tracer=None,
         stream: Optional[StreamConfig] = None,
         payload_region: Optional[str] = None,
+        faults=None,
+        retry: Optional[RetryPolicy] = None,
     ):
         self.registry = registry or PlatformRegistry()
         self.store = store or ObjectStore(self.registry.network)
@@ -133,6 +162,18 @@ class DagDeployment:
         self.payload_region = payload_region
         self.prefetcher = Prefetcher(self.store, stream=stream)
         self.timing = PokeTimingController(timing_mode)
+        # durability: an injected-fault schedule (accepts a raw
+        # FaultSchedule or a FaultInjector) and the per-step retry budget
+        if faults is not None and not isinstance(faults, FaultInjector):
+            faults = FaultInjector(faults)
+        self.faults: Optional[FaultInjector] = faults
+        self.retry = retry
+        self._req_count = 0  # monotone request index (fault/backoff keying)
+        # hedged duplicates run on per-platform side pools, NOT the
+        # platform executors — a hedge must never occupy the slot its
+        # primary needs (the thread name keeps the "plat-<name>" prefix so
+        # handlers keyed off it behave identically on either lane)
+        self._hedge_pools: dict = {}
         self._functions: dict = {}  # (name, platform) -> DeployedFn
         self._stats_lock = threading.Lock()
         self._shut = False
@@ -142,6 +183,12 @@ class DagDeployment:
             "buffered_edges": 0,
             "streamed_edges": 0,  # edges moved chunk-by-chunk (cut-through)
             "p2p_edges": 0,  # edges that skipped the store entirely
+            "retries": 0,  # re-attempts after a failed handler call
+            "attempt_errors": 0,  # failed attempts (injected or real)
+            "timeouts": 0,  # requests returned with status="timeout"
+            "hedges": 0,  # duplicate executions launched for stragglers
+            "hedge_wins": 0,  # hedges that beat their primary
+            "hedge_cancelled": 0,  # losers cancelled before starting
         }
         # duck-typed TelemetryHub (repro.adapt): propagated to every piece
         # so one hub sees compute + warm/cold + fetch + transfer events
@@ -195,10 +242,17 @@ class DagDeployment:
     ) -> DagResult:
         """Invoke the DAG: deliver the client payload to every source node
         and wait for all sinks (``timeout_s=None`` waits indefinitely).
-        Raises whatever a node's handler raised."""
+        Raises whatever a node's handler raised. A TIMEOUT does not raise:
+        it cancels the in-flight cascade (every phase entry checks
+        ``state.error``), deletes any buffered ``__payload__`` edge keys,
+        and returns a structured ``DagResult(status="timeout")`` — the
+        caller gets a failed-request record, not a stranded request."""
         for s in spec.steps:  # fail fast on missing deployments
             self._resolve_step(s)
         state = _RunState(spec, payload)
+        with self._stats_lock:
+            state.req_index = self._req_count
+            self._req_count += 1
         t0 = time.perf_counter()
         state.t0 = t0
         if self.tracer is not None:
@@ -210,10 +264,32 @@ class DagDeployment:
         for source in spec.sources():
             self._deliver(state, None, source, payload)
         if not state.done.wait(timeout_s):
-            raise TimeoutError(
-                f"request {state.rid} stalled; fired={sorted(state.fired)}"
+            # cancel the cascade: fail() sets the error every phase checks
+            # at entry, so nothing new fires and pollers unwind
+            state.fail(
+                TimeoutError(
+                    f"request {state.rid} timed out after {timeout_s}s; "
+                    f"fired={sorted(state.fired)}"
+                )
+            )
+            with self._stats_lock:
+                self.stats["timeouts"] += 1
+            self._cleanup_request(state)
+            t_end = time.perf_counter()
+            if state.trace is not None:
+                state.trace.root.attrs["status"] = "timeout"
+                state.trace.root.attrs["error"] = repr(state.error)
+                self.tracer.finish(state.trace, t_end=t_end)
+            return DagResult(
+                state.rid,
+                None,
+                dict(state.timeline),
+                t_end - t0,
+                status="timeout",
+                error=repr(state.error),
             )
         if state.error is not None:
+            self._cleanup_request(state)
             if state.trace is not None:
                 state.trace.root.attrs["error"] = repr(state.error)
                 self.tracer.finish(state.trace)
@@ -224,6 +300,14 @@ class DagDeployment:
         if state.trace is not None:
             self.tracer.finish(state.trace, t_end=t_end)
         return DagResult(state.rid, outputs, dict(state.timeline), t_end - t0)
+
+    def _cleanup_request(self, state: _RunState):
+        """Delete every edge buffer a failed/timed-out request left in the
+        object store (``__payload__/<rid>/...`` keys are otherwise only
+        deleted by the GET side that never ran)."""
+        prefix = f"__payload__/{state.rid}/"
+        for key in self.store.keys(prefix):
+            self.store.delete(key)
 
     def report(self) -> dict:
         """ONE merged runtime-stats surface (locked snapshots throughout):
@@ -237,6 +321,12 @@ class DagDeployment:
                 "buffered_edges": self.stats["buffered_edges"],
                 "streamed_edges": self.stats["streamed_edges"],
                 "p2p_edges": self.stats["p2p_edges"],
+                "retries": self.stats["retries"],
+                "attempt_errors": self.stats["attempt_errors"],
+                "timeouts": self.stats["timeouts"],
+                "hedges": self.stats["hedges"],
+                "hedge_wins": self.stats["hedge_wins"],
+                "hedge_cancelled": self.stats["hedge_cancelled"],
             }
         out = {
             "engine": engine,
@@ -264,6 +354,11 @@ class DagDeployment:
         self.registry.shutdown()
         self.cache.shutdown()
         self.prefetcher.shutdown()
+        with self._stats_lock:
+            pools = list(self._hedge_pools.values())
+            self._hedge_pools.clear()
+        for pool in pools:
+            pool.shutdown(wait=False, cancel_futures=True)
 
     def __enter__(self):
         return self
@@ -274,6 +369,8 @@ class DagDeployment:
 
     # -- phase 1: poke (cascades along edges) ----------------------------------
     def _poke(self, state: _RunState, node: str, delay_applied: float = 0.0):
+        if state.error is not None:  # request cancelled (timeout/failure)
+            return
         try:
             with state.lock:
                 if node in state.poke_seen or node in state.fired:
@@ -343,6 +440,8 @@ class DagDeployment:
         its first chunk — so by the time the full payload gets here the
         node is usually already preparing; this then just completes the
         buffer and releases ``payload_done``."""
+        if state.error is not None:
+            return
         n_preds = len(state.spec.predecessors(node))
         with state.lock:
             if pred is not None:
@@ -363,6 +462,8 @@ class DagDeployment:
         """A streamed edge's FIRST chunk landed: fire the node as soon as
         every in-edge has shown its first chunk, overlapping the node's
         prepare (warm + fetch) with the residual chunks still in flight."""
+        if state.error is not None:
+            return
         with state.lock:
             state.first_seen[node].add(pred)
             fire = (
@@ -376,6 +477,8 @@ class DagDeployment:
             self.registry.executor(step.platform).submit(self._fire, state, node)
 
     def _fire(self, state: _RunState, node: str):
+        if state.error is not None:
+            return
         try:
             self._run_node(state, node)
         except BaseException as exc:
@@ -383,6 +486,8 @@ class DagDeployment:
 
     def _transfer(self, state: _RunState, src: str, dst: str, value):
         """Move one edge payload, then deliver it to the join buffer."""
+        if state.error is not None:
+            return
         try:
             dst_plat = self.registry.get(state.spec.node(dst).platform)
             src_plat = self.registry.get(state.spec.node(src).platform)
@@ -504,6 +609,102 @@ class DagDeployment:
         with self._stats_lock:
             self.stats["streamed_edges"] += 1
         return out
+
+    def _invoke(self, state: _RunState, node, step, fn, payload, data, node_span):
+        """Run the node's handler under the retry budget.
+
+        Injected faults are checked BEFORE the handler (the fault model
+        fails attempts, not half-executed handlers); real handler errors
+        consume attempts the same way. Each retry waits out the policy's
+        seeded backoff — the same ``RetryPolicy.backoff_s`` hash the
+        simulator prices — and lands as a ``retry`` event on the node span.
+        Exhausting the budget re-raises the last error; returns ``(out,
+        attempts_used)``."""
+        policy = self.retry
+        max_attempts = policy.max_attempts if policy is not None else 1
+        platform = fn.platform.name
+        attempt = 0
+        while True:
+            try:
+                if self.faults is not None:
+                    self.faults.check(
+                        step.name, platform, fn.platform.region,
+                        state.req_index, attempt,
+                    )
+                return self._call_handler(fn, payload, data), attempt + 1
+            except BaseException as exc:
+                if state.error is not None:
+                    raise  # request already cancelled: don't burn budget
+                with self._stats_lock:
+                    self.stats["attempt_errors"] += 1
+                if self.telemetry is not None:
+                    self.telemetry.record_error(step.name, platform)
+                attempt += 1
+                if attempt >= max_attempts:
+                    raise
+                backoff = policy.backoff_s(
+                    attempt - 1, step.name, platform, state.req_index
+                )
+                with self._stats_lock:
+                    self.stats["retries"] += 1
+                if node_span is not None:
+                    node_span.add_event(
+                        "retry",
+                        {
+                            "attempt": attempt,
+                            "node": node,
+                            "platform": platform,
+                            "error": repr(exc),
+                            "backoff_s": backoff,
+                            "injected": isinstance(exc, InjectedFault),
+                        },
+                    )
+                if backoff > 0:
+                    time.sleep(backoff)
+
+    def _hedge_pool(self, platform: str) -> concurrent.futures.ThreadPoolExecutor:
+        with self._stats_lock:
+            pool = self._hedge_pools.get(platform)
+            if pool is None:
+                pool = self._hedge_pools[platform] = (
+                    concurrent.futures.ThreadPoolExecutor(
+                        max_workers=8,
+                        thread_name_prefix=f"plat-{platform}-hedge",
+                    )
+                )
+            return pool
+
+    def _call_handler(self, fn, payload, data):
+        """One handler attempt, hedged when the policy asks for it: if the
+        primary has not returned after ``hedge_after_s`` a duplicate is
+        launched on the platform's side pool; the first finisher wins and
+        the loser is cancelled (counted either way). Without a hedge
+        deadline this is exactly the old direct call."""
+        policy = self.retry
+        hedge_after = policy.hedge_after_s if policy is not None else None
+        if hedge_after is None:
+            return fn.wrapper(payload, data)
+        pool = self._hedge_pool(fn.platform.name)
+        primary = pool.submit(fn.wrapper, payload, data)
+        try:
+            return primary.result(timeout=hedge_after)
+        except concurrent.futures.TimeoutError:
+            pass
+        with self._stats_lock:
+            self.stats["hedges"] += 1
+        backup = pool.submit(fn.wrapper, payload, data)
+        done, _ = concurrent.futures.wait(
+            {primary, backup}, return_when=concurrent.futures.FIRST_COMPLETED
+        )
+        winner = primary if primary in done else backup
+        loser = backup if winner is primary else primary
+        if loser.cancel():
+            with self._stats_lock:
+                self.stats["hedge_cancelled"] += 1
+        if winner is backup:
+            with self._stats_lock:
+                self.stats["hedge_wins"] += 1
+        return winner.result()
 
     def _run_node(self, state: _RunState, node: str):
         spec = state.spec
@@ -664,10 +865,12 @@ class DagDeployment:
                 t_start=t0,
                 attrs={"node": node, "platform": step.platform},
             )
-        out = fn.wrapper(payload, data)
+        out, attempts = self._invoke(state, node, step, fn, payload, data, node_span)
         t1 = time.perf_counter()
         dt = t1 - t0
         timeline["compute_s"] = dt
+        if self.retry is not None or self.faults is not None:
+            timeline["attempts"] = attempts
         if compute_span is not None:
             compute_span.end(t1)
         if node_span is not None:
